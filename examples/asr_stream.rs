@@ -1,0 +1,80 @@
+//! ASR streaming scenario: Whisper-Tiny utterances of varying length —
+//! the paper's canonical dynamic-control-flow fallback workload.
+//!
+//! ```bash
+//! cargo run --release --example asr_stream [utterances]
+//! ```
+//!
+//! Each utterance draws a transcript-length "fill" for the dynamic
+//! decoder; the memory-budget scheduler reacts to a fluctuating
+//! simulated OS free-memory signal.  Prints per-utterance latency and
+//! the schedule's parallel-wave utilisation, plus an ablation of the
+//! §3.3 memory margin.
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::device::SocProfile;
+use parallax::models::ModelKind;
+use parallax::sched::SchedCfg;
+use parallax::sim::Mode;
+use parallax::util::rng::Rng;
+use parallax::util::stats::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+    let soc = SocProfile::pixel6();
+
+    println!("ASR stream: {n} utterances on {}\n", soc.display_name());
+
+    // per-utterance trace with Parallax
+    let pipe = Pipeline::build(
+        Framework::Parallax,
+        ModelKind::WhisperTiny,
+        &soc,
+        Mode::CpuOnly,
+        SchedCfg::default(),
+    )
+    .expect("cpu supported");
+    let mut rng = Rng::new(1234);
+    let mut lats = Vec::new();
+    println!("{:>4} {:>10} {:>12} {:>12}", "#", "audio fill", "latency ms", "RTFx");
+    for i in 0..n {
+        // LibriSpeech-like: mostly 3-12s clips of a 30s window
+        let fill = 0.1 + 0.9 * rng.f64().powf(1.5);
+        let r = pipe.run(&mut rng, fill);
+        lats.push(r.latency_s * 1e3);
+        if i < 10 || i == n - 1 {
+            // real-time factor vs the clip's audio duration (30s * fill)
+            let rtf = (30.0 * fill) / r.latency_s;
+            println!("{:>4} {:>10.2} {:>12.1} {:>11.0}x", i, fill, r.latency_s * 1e3, rtf);
+        }
+    }
+    let s = summarize(&lats).unwrap();
+    println!(
+        "\nParallax: min {:.0} / mean {:.0} / max {:.0} ms over {n} utterances",
+        s.min, s.mean, s.max
+    );
+
+    // baseline comparison at mean fill
+    println!("\nframework comparison (same trace):");
+    for fw in [Framework::Ort, Framework::ExecuTorch, Framework::TfLite] {
+        let p = Pipeline::build(fw, ModelKind::WhisperTiny, &soc, Mode::CpuOnly, SchedCfg::default())
+            .unwrap();
+        let runs = p.run_protocol(n, 1234);
+        let l: Vec<f64> = runs.iter().map(|r| r.latency_s * 1e3).collect();
+        let ss = summarize(&l).unwrap();
+        println!("  {:<12} mean {:>7.1} ms", format!("{fw:?}"), ss.mean);
+    }
+
+    // §3.3 margin ablation: tighter margins = less parallelism headroom
+    println!("\nmemory-margin ablation (Parallax mean ms):");
+    for margin in [0.3, 0.4, 0.5, 0.9, 0.99] {
+        let cfg = SchedCfg { max_threads: 6, margin };
+        let p = Pipeline::build(Framework::Parallax, ModelKind::WhisperTiny, &soc, Mode::CpuOnly, cfg)
+            .unwrap();
+        let runs = p.run_protocol(n, 1234);
+        let mean =
+            runs.iter().map(|r| r.latency_s * 1e3).sum::<f64>() / runs.len() as f64;
+        println!("  margin {margin:<5} mean {mean:>7.1} ms");
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Detector pipeline scenario: YOLOv8n frames through the simulated
+//! device stack — the paper's motivating real-time workload.
+//!
+//! ```bash
+//! cargo run --release --example detector_pipeline [frames]
+//! ```
+//!
+//! Streams a synthetic camera trace (variable detection counts → the
+//! dynamic NMS tail), comparing Parallax against the baselines on every
+//! device for both execution modes, and prints an FPS table.
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::device::SocProfile;
+use parallax::models::ModelKind;
+use parallax::sched::SchedCfg;
+use parallax::sim::Mode;
+use parallax::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let frames: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    println!("camera trace: {frames} frames, variable scene complexity\n");
+
+    for make in SocProfile::ALL {
+        let soc = make();
+        println!("== {} ==", soc.display_name());
+        println!(
+            "{:<12} {:>6} {:>10} {:>10} {:>12} {:>10}",
+            "framework", "mode", "mean ms", "p95 ms", "fps(mean)", "energy mJ"
+        );
+        for fw in Framework::ALL {
+            for mode in [Mode::CpuOnly, Mode::Heterogeneous] {
+                let Ok(pipe) =
+                    Pipeline::build(fw, ModelKind::Yolov8n, &soc, mode, SchedCfg::default())
+                else {
+                    println!(
+                        "{:<12} {:>6} {:>10}",
+                        format!("{fw:?}"),
+                        if mode == Mode::CpuOnly { "cpu" } else { "het" },
+                        "-"
+                    );
+                    continue;
+                };
+                let mut rng = Rng::new(99);
+                let mut lats = Vec::with_capacity(frames);
+                let mut energy = 0.0;
+                for _ in 0..frames {
+                    // scene complexity draw: how full the NMS output is
+                    let fill = 0.1 + 0.9 * rng.f64() * rng.f64();
+                    let r = pipe.run(&mut rng, fill);
+                    lats.push(r.latency_s * 1e3);
+                    energy += r.energy_j;
+                }
+                let s = parallax::util::stats::summarize(&lats).unwrap();
+                println!(
+                    "{:<12} {:>6} {:>10.1} {:>10.1} {:>12.1} {:>10.1}",
+                    format!("{fw:?}"),
+                    if mode == Mode::CpuOnly { "cpu" } else { "het" },
+                    s.mean,
+                    s.p95,
+                    1000.0 / s.mean,
+                    energy / frames as f64 * 1e3
+                );
+            }
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the whole Parallax pipeline on one model, end to end.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the CLIP text encoder graph, partitions it (§3.1), extracts
+//! the Branch-Layer structure (Algorithms 1–4), plans per-branch arenas
+//! (§3.2), schedules under a memory budget (§3.3), and compares the
+//! simulated Parallax latency against the sequential baselines.
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::memory;
+use parallax::models::ModelKind;
+use parallax::partition::{partition, CostModel};
+use parallax::sched::SchedCfg;
+use parallax::sim::Mode;
+
+fn main() -> anyhow::Result<()> {
+    let model = ModelKind::ClipText;
+    let soc = SocProfile::pixel6();
+
+    // 1. graph analysis
+    let g = model.build();
+    println!("1. graph: {} — {} nodes, {} edges", g.name, g.num_nodes(), g.num_edges());
+
+    // 2. delegate partitioning (§3.1 cost model)
+    let p = partition(&g, &CostModel::default());
+    println!(
+        "2. partition: {} delegate regions kept, {} pruned back to CPU",
+        p.regions.len(),
+        p.pruned.len()
+    );
+
+    // 3. branch/layer extraction (Algorithms 1-4)
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let (layers, par, maxb) = plan.table7_metrics();
+    println!(
+        "3. branch-layer: {} branches in {} layers ({} parallelizable, \
+         up to {} concurrent)",
+        plan.branches.len(),
+        layers,
+        par,
+        maxb
+    );
+
+    // 4. branch-aware memory (§3.2)
+    let mems = memory::branch_memories(&g, &p, &plan);
+    let fp = memory::parallax_footprint(&g, &p, &plan);
+    let biggest = mems.iter().map(|m| m.total()).max().unwrap_or(0);
+    println!(
+        "4. memory: arena pool {:.1} MB + boundary {:.1} MB (largest branch {:.2} MB)",
+        fp.arena_pool_bytes as f64 / 1e6,
+        fp.boundary_bytes as f64 / 1e6,
+        biggest as f64 / 1e6
+    );
+
+    // 5. simulate the paper's protocol on all four frameworks
+    println!("5. simulated latency on {} (CPU-only, 20 runs):", soc.display_name());
+    for fw in Framework::ALL {
+        let pipe = Pipeline::build(fw, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            .expect("cpu mode always builds");
+        let runs = pipe.run_protocol(20, 42);
+        let lats: Vec<f64> = runs.iter().map(|r| r.latency_s * 1e3).collect();
+        let min = lats.iter().cloned().fold(f64::MAX, f64::min);
+        let max = lats.iter().cloned().fold(0.0, f64::max);
+        println!("   {:<12} {:>6.1} / {:>6.1} ms (min/max)", format!("{fw:?}"), min, max);
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! End-to-end serving driver — the repo's E2E validation workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_text_encoders
+//! ```
+//!
+//! Loads the AOT PJRT artifacts, builds *real* execution engines for the
+//! CLIP text encoder and DistilBERT (transformer blocks run as compiled
+//! XLA executables, glue ops on host kernels), registers both behind the
+//! serving front-end, and drives a batched request load.  Reports
+//! latency/throughput and verifies that parallel and sequential
+//! schedules produce identical outputs (§3.2 isolation invariant).
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::exec::Engine;
+use parallax::memory::branch_memories;
+use parallax::models::ModelKind;
+use parallax::partition::{partition, CostModel};
+use parallax::runtime::{default_artifact_dir, RuntimePool};
+use parallax::sched::{self, SchedCfg};
+use parallax::serve::{FnExecutor, Server};
+
+struct ModelCtx {
+    graph: parallax::graph::Graph,
+    partition: parallax::partition::Partition,
+    plan: parallax::branch::BranchPlan,
+    schedules: Vec<parallax::sched::LayerSchedule>,
+}
+
+fn build_ctx(model: ModelKind, threads: usize) -> ModelCtx {
+    let graph = model.build();
+    // CPU-only fallback view: everything is a fallback branch (the
+    // serving host has no NNAPI accelerator; PJRT artifacts play the
+    // role of the optimised fallback kernels).
+    let p = partition(
+        &graph,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    );
+    let plan = branch::plan(&graph, &p, DEFAULT_BETA);
+    let mems = branch_memories(&graph, &p, &plan);
+    let cfg = SchedCfg { max_threads: threads, margin: 0.4 };
+    let schedules = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    ModelCtx { graph, partition: p, plan, schedules }
+}
+
+fn main() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        parallax::runtime::artifacts_available(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let t0 = std::time::Instant::now();
+    let pool = Arc::new(RuntimePool::new(default_artifact_dir(), 2)?);
+    println!("PJRT pool up: {} workers, {} programs", pool.size(), pool.manifest().len());
+
+    // warm the executables used by the two encoders
+    pool.warm(&[
+        "attn_77x512_h8",
+        "ffn_77x512x2048",
+        "layernorm_77x512",
+        "attn_128x768_h12",
+        "ffn_128x768x3072",
+        "layernorm_128x768",
+    ])?;
+    println!("executable cache warm in {:.2}s", t0.elapsed().as_secs_f64());
+
+    // sanity: parallel schedule == sequential schedule, bit-for-bit
+    {
+        let ctx = build_ctx(ModelKind::ClipText, 6);
+        let engine = Engine::new(&ctx.graph, &ctx.partition, &ctx.plan, Some(&pool));
+        println!(
+            "CLIP engine: {} PJRT-runnable blocks discovered",
+            engine.num_blocks()
+        );
+        let mems = branch_memories(&ctx.graph, &ctx.partition, &ctx.plan);
+        let seq = sched::schedule(&ctx.plan, &mems, 1 << 34, &SchedCfg { max_threads: 1, margin: 0.4 });
+        let (v_par, st_par) = engine.run(&ctx.schedules)?;
+        let (v_seq, st_seq) = engine.run(&seq)?;
+        anyhow::ensure!(v_par.all_finite(), "non-finite outputs");
+        anyhow::ensure!(
+            v_par.checksum() == v_seq.checksum(),
+            "parallel vs sequential outputs diverge!"
+        );
+        println!(
+            "isolation check OK: checksum {:.6} (parallel {:.0} ms, sequential {:.0} ms, \
+             {} PJRT calls, {} host ops)",
+            v_par.checksum(),
+            st_par.wall_s * 1e3,
+            st_seq.wall_s * 1e3,
+            st_par.pjrt_calls,
+            st_par.host_ops
+        );
+    }
+
+    // serving load over both encoders; contexts live for the process
+    // lifetime so each lane reuses one engine (weight caches warm).
+    let mut server = Server::new();
+    for model in [ModelKind::ClipText, ModelKind::DistilBert] {
+        let ctx: &'static ModelCtx = Box::leak(Box::new(build_ctx(model, 6)));
+        let pool_ref: &'static RuntimePool =
+            Box::leak(Box::new(RuntimePool::new(default_artifact_dir(), 1)?));
+        let engine = Engine::new(&ctx.graph, &ctx.partition, &ctx.plan, Some(pool_ref));
+        server.register(
+            model.slug(),
+            Box::new(FnExecutor(move |_seed| {
+                let t = std::time::Instant::now();
+                let (values, _stats) = engine.run(&ctx.schedules)?;
+                Ok((t.elapsed().as_secs_f64(), values.checksum()))
+            })),
+        );
+    }
+
+    let n = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16usize);
+    let report = server.run_load(&["clip-text", "distilbert"], n, 4, 3)?;
+    println!(
+        "\nserved {n} real inferences: {:.2} req/s (wall {:.2}s)",
+        report.throughput_rps, report.wall_s
+    );
+    for (model, s) in &report.latency {
+        println!(
+            "  {model:<12} p50 {:>7.1} ms  p95 {:>7.1} ms  max {:>7.1} ms  (n={})",
+            s.p50 * 1e3,
+            s.p95 * 1e3,
+            s.max * 1e3,
+            s.n
+        );
+    }
+    // determinism across requests of the same model
+    let mut sums: std::collections::HashMap<&str, Vec<f64>> = Default::default();
+    for r in &report.responses {
+        sums.entry(if r.model == "clip-text" { "clip-text" } else { "distilbert" })
+            .or_default()
+            .push(r.checksum);
+    }
+    for (m, cs) in sums {
+        anyhow::ensure!(
+            cs.iter().all(|&c| c == cs[0]),
+            "{m}: outputs varied across identical requests"
+        );
+    }
+    println!("determinism across requests OK");
+    Ok(())
+}

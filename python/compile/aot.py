@@ -1,0 +1,114 @@
+"""AOT lowering: JAX branch programs → HLO text + manifest.
+
+Interchange format is HLO **text**, not ``.serialize()``: the published
+``xla`` crate links xla_extension 0.5.1, which rejects jax≥0.5's
+HloModuleProto (64-bit instruction ids fail its ``id() <= INT_MAX``
+check).  ``HloModuleProto::from_text_file`` re-parses and reassigns ids,
+so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``artifacts/``):
+
+  <name>.hlo.txt     one file per program in compile.model.REGISTRY
+  manifest.json      [{name, file, inputs: [[dims], ...], outputs, flops}]
+
+Incremental: a program is re-lowered only when its HLO file is missing
+or older than the compile/ sources, so ``make artifacts`` is a cheap
+no-op on an unchanged tree.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(prog: model.Program) -> str:
+    lowered = jax.jit(prog.fn).lower(*prog.example_args())
+    return to_hlo_text(lowered)
+
+
+def output_shapes(prog: model.Program) -> list[list[int]]:
+    out = jax.eval_shape(prog.fn, *prog.example_args())
+    return [list(o.shape) for o in out]
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated program names to (re)lower")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if artifacts are up to date")
+    # kept for Makefile compatibility: --out FILE lowers a single legacy
+    # model.hlo.txt containing the first registry program.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    repo = pathlib.Path(__file__).resolve().parents[2]
+    out_dir = pathlib.Path(args.out_dir) if args.out_dir else repo / "artifacts"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    src_mtime = max(
+        p.stat().st_mtime
+        for p in (repo / "python" / "compile").rglob("*.py")
+    )
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = []
+    n_lowered = 0
+    t0 = time.time()
+    for name, prog in sorted(model.REGISTRY.items()):
+        if only and name not in only:
+            continue
+        hlo_path = out_dir / f"{name}.hlo.txt"
+        stale = (
+            args.force
+            or not hlo_path.exists()
+            or hlo_path.stat().st_mtime < src_mtime
+        )
+        if stale:
+            text = lower_program(prog)
+            hlo_path.write_text(text)
+            n_lowered += 1
+            print(f"  lowered {name:40s} {len(text) // 1024:6d} KiB",
+                  file=sys.stderr)
+        manifest.append({
+            "name": name,
+            "file": hlo_path.name,
+            "inputs": [list(s) for s in prog.arg_shapes],
+            "outputs": output_shapes(prog),
+            "flops": prog.flops,
+        })
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+
+    if args.out:  # legacy single-file mode
+        first = sorted(model.REGISTRY)[0]
+        (pathlib.Path(args.out)).write_text(
+            (out_dir / f"{first}.hlo.txt").read_text())
+
+    print(f"aot: {len(manifest)} programs, {n_lowered} lowered "
+          f"in {time.time() - t0:.1f}s -> {out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,9 @@
+"""L1 — Pallas kernels for Parallax's CPU-fallback branch programs.
+
+Every kernel is checked against the pure-jnp oracle in :mod:`.ref` by
+``python/tests``.  All kernels run with ``interpret=True`` (CPU PJRT
+cannot execute Mosaic custom-calls); the BlockSpec structure is still
+the real TPU schedule and is what DESIGN.md §Perf cost-models.
+"""
+
+from . import attention, conv, elementwise, matmul, norm, ref  # noqa: F401

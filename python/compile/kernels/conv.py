@@ -1,0 +1,133 @@
+"""Convolution and pooling Pallas kernels.
+
+Conv2D is lowered as im2col + the tiled Pallas matmul — the standard
+mobile-CPU strategy (TFLite's XNNPACK does the same), and on TPU the
+resulting GEMM is exactly the MXU-friendly shape.  Depthwise conv and
+pooling run as spatial Pallas kernels with the tap loop unrolled inside
+one grid step (K is 3 or 5 for every model in the zoo).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import matmul as mm
+from . import ref as _ref
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def conv2d(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """NHWC conv via im2col + Pallas tiled matmul.
+
+    x: (N, H, W, Cin); w: (Kh, Kw, Cin, Cout) -> (N, Ho, Wo, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    cols = _ref.im2col(x, kh, kw, stride=stride, padding=padding)
+    n, ho, wo, patch = cols.shape
+    flat = cols.reshape(n * ho * wo, patch)
+    wm = w.reshape(patch, cout)
+    out = mm.matmul(flat, wm)
+    return out.reshape(n, ho, wo, cout)
+
+
+def _dwconv_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int, stride: int):
+    """One batch image per grid step; taps unrolled (kh*kw static)."""
+    x = x_ref[...][0]                   # (Hp, Wp, C) padded input
+    w = w_ref[...]                      # (Kh, Kw, C)
+    _, ho, wo, _ = o_ref.shape
+    acc = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x, (i, j, 0),
+                (i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, x.shape[2]),
+                (stride, stride, 1),
+            )
+            acc = acc + patch * w[i, j, :]
+    o_ref[...] = acc[None]
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding"))
+def dwconv2d(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """Depthwise NHWC conv; w: (Kh, Kw, C, 1) like the jax reference."""
+    kh, kw, c, mult = w.shape
+    assert mult == 1, "channel multiplier 1 only"
+    n, h, wid, c2 = x.shape
+    assert c == c2
+    if padding == "SAME":
+        # Match XLA SAME semantics (see ref.im2col): low side gets the
+        # smaller half of the total pad.
+        def same_pad(dim, k):
+            out = -(-dim // stride)
+            total = max((out - 1) * stride + k - dim, 0)
+            return total // 2, total - total // 2
+
+        (ph_lo, ph_hi), (pw_lo, pw_hi) = same_pad(h, kh), same_pad(wid, kw)
+        xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    else:
+        xp = x
+    hp, wp = xp.shape[1], xp.shape[2]
+    ho = (hp - kh) // stride + 1
+    wo = (wp - kw) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_dwconv_kernel, kh=kh, kw=kw, stride=stride),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), x.dtype),
+        interpret=True,
+    )(xp, w.reshape(kh, kw, c))
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int, stride: int, mode: str):
+    x = x_ref[...]
+    ho, wo = o_ref.shape[1], o_ref.shape[2]
+    init = -jnp.inf if mode == "max" else 0.0
+    acc = jnp.full(o_ref.shape, init, o_ref.dtype)
+    for i in range(k):
+        for j in range(k):
+            patch = jax.lax.slice(
+                x, (0, i, j, 0),
+                (1, i + (ho - 1) * stride + 1, j + (wo - 1) * stride + 1, x.shape[3]),
+                (1, stride, stride, 1),
+            )
+            acc = jnp.maximum(acc, patch) if mode == "max" else acc + patch
+    o_ref[...] = acc if mode == "max" else acc / (k * k)
+
+
+def _pool(x, k, stride, mode):
+    n, h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, k=k, stride=stride, mode=mode),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h, w, c), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), x.dtype),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def maxpool2d(x, *, k: int = 2, stride: int = 2):
+    """NHWC max pooling (VALID)."""
+    return _pool(x, k, stride, "max")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride"))
+def avgpool2d(x, *, k: int = 2, stride: int = 2):
+    """NHWC average pooling (VALID)."""
+    return _pool(x, k, stride, "avg")

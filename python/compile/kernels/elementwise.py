@@ -1,0 +1,87 @@
+"""Blocked elementwise Pallas kernels.
+
+These cover the glue ops (Add/Mul/Sub/Max, ReLU/SiLU) that appear between
+the compute-heavy ops inside a fallback branch.  They are deliberately
+flattened-1D: the rust engine treats elementwise ops as shape-agnostic
+and calls the artifact whose element count matches.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _binary_kernel(op):
+    def kernel(x_ref, y_ref, o_ref):
+        x, y = x_ref[...], y_ref[...]
+        if op == "add":
+            o_ref[...] = x + y
+        elif op == "sub":
+            o_ref[...] = x - y
+        elif op == "mul":
+            o_ref[...] = x * y
+        elif op == "max":
+            o_ref[...] = jnp.maximum(x, y)
+        else:
+            raise ValueError(op)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "bs"))
+def binary(x, y, *, op: str = "add", bs: int = 4096):
+    """Binary elementwise over same-shape operands (any rank)."""
+    shape = x.shape
+    xf, yf = x.reshape(-1), y.reshape(-1)
+    n = xf.shape[0]
+    b = _block(n, bs)
+    out = pl.pallas_call(
+        _binary_kernel(op),
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,)),
+                  pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(xf, yf)
+    return out.reshape(shape)
+
+
+def _unary_kernel(op):
+    def kernel(x_ref, o_ref):
+        x = x_ref[...]
+        if op == "relu":
+            o_ref[...] = jax.nn.relu(x)
+        elif op == "silu":
+            o_ref[...] = jax.nn.silu(x)
+        elif op == "gelu":
+            o_ref[...] = jax.nn.gelu(x)
+        else:
+            raise ValueError(op)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("op", "bs"))
+def unary(x, *, op: str = "relu", bs: int = 4096):
+    """Unary activation over any-rank input."""
+    shape = x.shape
+    xf = x.reshape(-1)
+    n = xf.shape[0]
+    b = _block(n, bs)
+    out = pl.pallas_call(
+        _unary_kernel(op),
+        grid=(n // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(xf)
+    return out.reshape(shape)

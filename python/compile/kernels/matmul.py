@@ -1,0 +1,130 @@
+"""Tiled Pallas matmul — the L1 flagship kernel.
+
+The paper's CPU-fallback branches are dominated by dense GEMMs
+(FullyConnected / MatMul in Appendix A).  This kernel expresses the
+HBM↔VMEM schedule with a BlockSpec grid:
+
+  grid = (M/bm, N/bn, K/bk)
+
+Each (i, j) output tile is accumulated over the k axis of the grid; the
+k==0 step zero-initialises the accumulator.  Block shapes default to
+128×128×128 — one MXU-shaped tile per step — and are clamped to the
+problem size so small shapes still work.  ``interpret=True`` is mandatory
+on the CPU PJRT plugin (real-TPU lowering emits Mosaic custom-calls the
+CPU client cannot run); the BlockSpec structure is what we cost-model in
+DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile; accumulate over the k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= want (keeps grids exact)."""
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Pallas tiled matmul: (M,K) @ (K,N) -> (M,N) in f32."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {y.shape}"
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(k, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bm", "bn", "bk"))
+def matmul_bias_act(x, y, b, *, act: str = "none",
+                    bm: int = 128, bn: int = 128, bk: int = 128):
+    """Fused (M,K)@(K,N) + bias(N) + activation — one VMEM round-trip.
+
+    The epilogue runs on the last k step so the bias/activation never
+    touches HBM-resident partial sums.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2 and b.shape == (n,)
+    bm_, bn_, bk_ = _block(m, bm), _block(n, bn), _block(k, bk)
+    n_k = k // bk_
+
+    def kernel(x_ref, y_ref, b_ref, o_ref):
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+        @pl.when(kk == n_k - 1)
+        def _epilogue():
+            acc = o_ref[...] + b_ref[...]
+            if act == "relu":
+                acc = jax.nn.relu(acc)
+            elif act == "gelu":
+                acc = jax.nn.gelu(acc)
+            elif act == "silu":
+                acc = jax.nn.silu(acc)
+            o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm_, n // bn_, n_k),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn_,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y, b)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step: x-tile + y-tile + o-tile.
+
+    Used by the §Perf block-shape sweep to check the schedule fits the
+    ~16 MiB per-core VMEM of a TPU and to estimate MXU utilisation.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes a (bm,bn,bk) tile keeps busy (structure-level
+    estimate: dims not multiple of the systolic array waste lanes)."""
+    eff = lambda d: d / (((d + mxu - 1) // mxu) * mxu)
+    return eff(bm) * eff(bn) * eff(bk)

@@ -1,0 +1,68 @@
+"""Row-tiled normalisation Pallas kernels: LayerNorm and softmax.
+
+Both operate over the last axis of a (rows, D) input; the grid walks row
+blocks so each step reduces entirely inside VMEM (one pass for softmax's
+max/sum thanks to per-block full-row residency — D for the paper's models
+is ≤ 4096 floats, far under VMEM limits).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block(dim: int, want: int) -> int:
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "br"))
+def layernorm(x, gamma, beta, *, eps: float = 1e-5, br: int = 128):
+    """LayerNorm over the last axis of a (rows, D) tensor."""
+    rows, d = x.shape
+    b = _block(rows, br)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // b,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("br",))
+def softmax(x, *, br: int = 128):
+    """Numerically-stable softmax over the last axis of (rows, D)."""
+    rows, d = x.shape
+    b = _block(rows, br)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(rows // b,),
+        in_specs=[pl.BlockSpec((b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float32 tolerance across the shape sweeps in
+``python/tests``.  The oracles are intentionally written in the most
+obvious jnp form — no tiling, no tricks — so that a disagreement always
+indicts the kernel, not the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Plain dense matmul: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(x, y)
+
+
+def bias_act(x, b, act):
+    """x + b followed by an activation from {none, relu, gelu, silu}."""
+    y = x + b
+    if act == "relu":
+        return jax.nn.relu(y)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    if act == "silu":
+        return jax.nn.silu(y)
+    return y
+
+
+def elementwise(x, y, op):
+    """Binary elementwise op from {add, sub, mul, max}."""
+    if op == "add":
+        return x + y
+    if op == "sub":
+        return x - y
+    if op == "mul":
+        return x * y
+    if op == "max":
+        return jnp.maximum(x, y)
+    raise ValueError(op)
+
+
+def relu(x):
+    return jax.nn.relu(x)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+def softmax(x):
+    """Numerically stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q, k, v):
+    """Single-head scaled dot-product attention.
+
+    q: (T, d), k: (S, d), v: (S, d) -> (T, d)
+    """
+    d = q.shape[-1]
+    scores = jnp.matmul(q, k.T) / jnp.sqrt(jnp.float32(d))
+    return jnp.matmul(softmax(scores), v)
+
+
+def mha(x, wq, wk, wv, wo, num_heads):
+    """Multi-head self-attention block over x: (T, D)."""
+    t, dmodel = x.shape
+    dh = dmodel // num_heads
+    q = jnp.matmul(x, wq).reshape(t, num_heads, dh).transpose(1, 0, 2)
+    k = jnp.matmul(x, wk).reshape(t, num_heads, dh).transpose(1, 0, 2)
+    v = jnp.matmul(x, wv).reshape(t, num_heads, dh).transpose(1, 0, 2)
+    out = jax.vmap(attention)(q, k, v)  # (H, T, dh)
+    out = out.transpose(1, 0, 2).reshape(t, dmodel)
+    return jnp.matmul(out, wo)
+
+
+def ffn(x, w1, b1, w2, b2):
+    """Transformer FFN: gelu(x@w1+b1)@w2+b2."""
+    h = jax.nn.gelu(jnp.matmul(x, w1) + b1)
+    return jnp.matmul(h, w2) + b2
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    """NHWC conv with HWIO weights."""
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def dwconv2d(x, w, stride=1, padding="SAME"):
+    """Depthwise NHWC conv; w: (Kh, Kw, C, 1) with channel multiplier 1."""
+    c = x.shape[-1]
+    kh, kw, _, _ = w.shape
+    # HWIO with feature_group_count=C expects rhs (Kh, Kw, 1, C).
+    w = w.reshape(kh, kw, c, 1).transpose(0, 1, 3, 2)
+    return jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def avgpool2d(x, k=2, stride=2):
+    """NHWC average pooling."""
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    ) / (k * k)
+
+
+def maxpool2d(x, k=2, stride=2):
+    """NHWC max pooling."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def im2col(x, kh, kw, stride=1, padding="SAME"):
+    """Unfold NHWC x into (N, Ho, Wo, Kh*Kw*C) patches — reference for the
+    conv2d kernel's internal layout."""
+    n, h, w, c = x.shape
+    if padding == "SAME":
+        # XLA SAME convention: output = ceil(in / stride), pad split
+        # low-first so the high side absorbs the remainder.
+        def same_pad(dim, k):
+            out = -(-dim // stride)
+            total = max((out - 1) * stride + k - dim, 0)
+            return total // 2, total - total // 2
+
+        (ph_lo, ph_hi), (pw_lo, pw_hi) = same_pad(h, kh), same_pad(w, kw)
+        x = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    ho = (x.shape[1] - kh) // stride + 1
+    wo = (x.shape[2] - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + ho * stride : stride, j : j + wo * stride : stride, :])
+    return jnp.concatenate(cols, axis=-1).reshape(n, ho, wo, kh * kw * c)

@@ -1,0 +1,307 @@
+"""L2 — JAX branch programs for Parallax's CPU-fallback execution.
+
+The Rust coordinator (L3) never runs Python: at build time every program
+in :data:`REGISTRY` is lowered by :mod:`compile.aot` to HLO text under
+``artifacts/`` plus a ``manifest.json`` describing its signature.  At
+runtime the Rust engine maps each scheduled fallback branch onto one of
+these programs (the zoo's shape universe is chosen to line up).
+
+Each program composes L1 Pallas kernels — so the HLO the Rust client
+compiles contains the kernels' tiled schedules, not a re-derived XLA
+lowering.  Weights are *inputs*: Parallax does not modify or own model
+weights (the paper's non-invasiveness property), so the programs are
+pure functions of (activations, weights).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attn_k
+from .kernels import conv as conv_k
+from .kernels import elementwise as ew_k
+from .kernels import matmul as mm_k
+from .kernels import norm as norm_k
+from .kernels import ref
+
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """One AOT-compilable branch program.
+
+    name: stable identifier used by the Rust executable cache.
+    fn: jax function (positional array args) returning a tuple.
+    arg_shapes: shapes of the example arguments used for lowering.
+    flops: analytic MAC*2 count — lets the Rust side sanity-check the
+        FLOP estimator against the artifact it is about to run.
+    ref_fn: pure-jnp oracle with the same signature (for pytest).
+    """
+
+    name: str
+    fn: Callable
+    arg_shapes: Sequence[Sequence[int]]
+    flops: int
+    ref_fn: Callable | None = None
+
+    def example_args(self):
+        return [jax.ShapeDtypeStruct(tuple(s), F32) for s in self.arg_shapes]
+
+
+# ---------------------------------------------------------------------------
+# program constructors
+
+
+def make_matmul(m: int, k: int, n: int) -> Program:
+    def fn(x, y):
+        return (mm_k.matmul(x, y),)
+
+    def rfn(x, y):
+        return (ref.matmul(x, y),)
+
+    return Program(
+        name=f"matmul_{m}x{k}x{n}",
+        fn=fn,
+        arg_shapes=[(m, k), (k, n)],
+        flops=2 * m * k * n,
+        ref_fn=rfn,
+    )
+
+
+def make_linear(m: int, k: int, n: int, act: str) -> Program:
+    """Fused FullyConnected: x@w + b with activation epilogue."""
+
+    def fn(x, w, b):
+        return (mm_k.matmul_bias_act(x, w, b, act=act),)
+
+    def rfn(x, w, b):
+        return (ref.bias_act(ref.matmul(x, w), b, act),)
+
+    return Program(
+        name=f"linear_{act}_{m}x{k}x{n}",
+        fn=fn,
+        arg_shapes=[(m, k), (k, n), (n,)],
+        flops=2 * m * k * n + 3 * m * n,
+        ref_fn=rfn,
+    )
+
+
+def make_ffn(t: int, d: int, h: int) -> Program:
+    """Transformer FFN block: LN -> gelu linear -> linear -> residual."""
+
+    def fn(x, g, b, w1, b1, w2, b2):
+        y = norm_k.layernorm(x, g, b)
+        y = mm_k.matmul_bias_act(y, w1, b1, act="gelu")
+        y = mm_k.matmul_bias_act(y, w2, b2, act="none")
+        return (ew_k.binary(x, y, op="add"),)
+
+    def rfn(x, g, b, w1, b1, w2, b2):
+        y = ref.layernorm(x, g, b)
+        return (x + ref.ffn(y, w1, b1, w2, b2),)
+
+    return Program(
+        name=f"ffn_{t}x{d}x{h}",
+        fn=fn,
+        arg_shapes=[(t, d), (d,), (d,), (d, h), (h,), (h, d), (d,)],
+        flops=4 * t * d * h + 10 * t * d,
+        ref_fn=rfn,
+    )
+
+
+def make_attn(t: int, d: int, heads: int) -> Program:
+    """Pre-LN multi-head self-attention block with residual."""
+
+    def fn(x, g, b, wq, wk, wv, wo):
+        y = norm_k.layernorm(x, g, b)
+        y = attn_k.mha(y, wq, wk, wv, wo, num_heads=heads)
+        return (ew_k.binary(x, y, op="add"),)
+
+    def rfn(x, g, b, wq, wk, wv, wo):
+        y = ref.layernorm(x, g, b)
+        return (x + ref.mha(y, wq, wk, wv, wo, heads),)
+
+    return Program(
+        name=f"attn_{t}x{d}_h{heads}",
+        fn=fn,
+        arg_shapes=[(t, d), (d,), (d,)] + [(d, d)] * 4,
+        flops=8 * t * d * d + 4 * t * t * d,
+        ref_fn=rfn,
+    )
+
+
+def make_conv_block(h: int, w: int, cin: int, cout: int, stride: int = 1,
+                    act: str = "silu") -> Program:
+    """Conv3x3 + activation — the YOLO-style CPU fallback unit."""
+
+    def fn(x, wt):
+        y = conv_k.conv2d(x, wt, stride=stride)
+        return (ew_k.unary(y, op=act),)
+
+    def rfn(x, wt):
+        y = ref.conv2d(x, wt, stride=stride)
+        return (ref.silu(y) if act == "silu" else ref.relu(y),)
+
+    ho, wo = -(-h // stride), -(-w // stride)
+    return Program(
+        name=f"conv3x3_{act}_{h}x{w}x{cin}x{cout}_s{stride}",
+        fn=fn,
+        arg_shapes=[(1, h, w, cin), (3, 3, cin, cout)],
+        flops=2 * 9 * cin * cout * ho * wo + 4 * ho * wo * cout,
+        ref_fn=rfn,
+    )
+
+
+def make_dwconv_block(h: int, w: int, c: int, stride: int = 1) -> Program:
+    """Depthwise 3x3 + pointwise 1x1 (mobile inverted-bottleneck slice)."""
+
+    def fn(x, wd, wp):
+        y = conv_k.dwconv2d(x, wd, stride=stride)
+        y = ew_k.unary(y, op="relu")
+        return (conv_k.conv2d(y, wp),)
+
+    def rfn(x, wd, wp):
+        y = ref.relu(ref.dwconv2d(x, wd, stride=stride))
+        return (ref.conv2d(y, wp),)
+
+    ho, wo = -(-h // stride), -(-w // stride)
+    return Program(
+        name=f"dwsep_{h}x{w}x{c}_s{stride}",
+        fn=fn,
+        arg_shapes=[(1, h, w, c), (3, 3, c, 1), (1, 1, c, c)],
+        flops=2 * 9 * c * ho * wo + 2 * c * c * ho * wo + ho * wo * c,
+        ref_fn=rfn,
+    )
+
+
+def make_layernorm(t: int, d: int) -> Program:
+    def fn(x, g, b):
+        return (norm_k.layernorm(x, g, b),)
+
+    def rfn(x, g, b):
+        return (ref.layernorm(x, g, b),)
+
+    return Program(
+        name=f"layernorm_{t}x{d}",
+        fn=fn,
+        arg_shapes=[(t, d), (d,), (d,)],
+        flops=8 * t * d,
+        ref_fn=rfn,
+    )
+
+
+def make_softmax(t: int, d: int) -> Program:
+    def fn(x):
+        return (norm_k.softmax(x),)
+
+    def rfn(x):
+        return (ref.softmax(x),)
+
+    return Program(
+        name=f"softmax_{t}x{d}",
+        fn=fn,
+        arg_shapes=[(t, d)],
+        flops=5 * t * d,
+        ref_fn=rfn,
+    )
+
+
+def make_binary(n: int, op: str) -> Program:
+    def fn(x, y):
+        return (ew_k.binary(x, y, op=op),)
+
+    def rfn(x, y):
+        return (ref.elementwise(x, y, op),)
+
+    return Program(
+        name=f"ew_{op}_{n}",
+        fn=fn,
+        arg_shapes=[(n,), (n,)],
+        flops=n,
+        ref_fn=rfn,
+    )
+
+
+def make_unary(n: int, op: str) -> Program:
+    def fn(x):
+        return (ew_k.unary(x, op=op),)
+
+    def rfn(x):
+        return ((ref.relu(x) if op == "relu" else ref.silu(x)),)
+
+    return Program(
+        name=f"ew_{op}_{n}",
+        fn=fn,
+        arg_shapes=[(n,)],
+        flops=4 * n,
+        ref_fn=rfn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the shape universe
+#
+# Shapes line up with the model zoo in rust/src/models/:
+#   CLIP text encoder : T=77,  D=512,  H=2048, 8 heads
+#   DistilBERT        : T=128, D=768,  H=3072, 12 heads
+#   Whisper-Tiny enc  : T=192 (pooled slice, padded), D=384, H=1536, 6 heads
+#   SwinV2-Tiny       : windows of 64 tokens, D=96..192
+#   YOLOv8n           : conv ladders at 40/20 spatial, C=64..256
+
+REGISTRY: dict[str, Program] = {}
+
+
+def _add(p: Program) -> None:
+    assert p.name not in REGISTRY, f"duplicate program {p.name}"
+    REGISTRY[p.name] = p
+
+
+def _build_registry() -> None:
+    # generic GEMMs (router fallback for odd branches)
+    for m, k, n in [(64, 64, 64), (128, 128, 128), (256, 256, 256)]:
+        _add(make_matmul(m, k, n))
+
+    # CLIP text encoder blocks
+    _add(make_attn(77, 512, 8))
+    _add(make_ffn(77, 512, 2048))
+    _add(make_layernorm(77, 512))
+    _add(make_linear(77, 512, 512, "none"))
+
+    # DistilBERT blocks
+    _add(make_attn(128, 768, 12))
+    _add(make_ffn(128, 768, 3072))
+    _add(make_layernorm(128, 768))
+
+    # Whisper-Tiny encoder blocks (T=192 padded)
+    _add(make_attn(192, 384, 6))
+    _add(make_ffn(192, 384, 1536))
+    _add(make_layernorm(192, 384))
+    _add(make_softmax(192, 384))
+
+    # Swin windows (64-token windows)
+    _add(make_attn(64, 96, 3))
+    _add(make_attn(64, 192, 6))
+    _add(make_ffn(64, 96, 384))
+    _add(make_ffn(64, 192, 768))
+
+    # YOLO conv ladder (batch 1, NHWC)
+    _add(make_conv_block(40, 40, 64, 64))
+    _add(make_conv_block(40, 40, 64, 128, stride=2))
+    _add(make_conv_block(20, 20, 128, 128))
+    _add(make_conv_block(20, 20, 128, 256, stride=2))
+    _add(make_dwconv_block(40, 40, 64))
+    _add(make_dwconv_block(20, 20, 128))
+
+    # glue
+    for n in [4096, 65536]:
+        _add(make_binary(n, "add"))
+        _add(make_unary(n, "relu"))
+        _add(make_unary(n, "silu"))
+
+
+_build_registry()

@@ -1,0 +1,64 @@
+"""AOT manifest round-trip: `python -m compile.aot` output is exactly
+what the Rust `runtime::Manifest` loader expects."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile import model
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+ARTIFACTS = REPO / "artifacts"
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = ARTIFACTS / "manifest.json"
+    if not path.exists():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    return json.loads(path.read_text())
+
+
+def test_manifest_covers_registry(manifest):
+    names = {m["name"] for m in manifest}
+    assert names == set(model.REGISTRY), "manifest out of sync with REGISTRY"
+
+
+def test_manifest_entries_well_formed(manifest):
+    for m in manifest:
+        assert set(m) >= {"name", "file", "inputs", "outputs", "flops"}
+        assert m["file"].endswith(".hlo.txt")
+        assert (ARTIFACTS / m["file"]).exists(), f"{m['file']} missing"
+        assert all(isinstance(s, list) for s in m["inputs"])
+        assert len(m["outputs"]) >= 1
+        assert m["flops"] > 0
+
+
+def test_manifest_shapes_match_registry(manifest):
+    for m in manifest:
+        prog = model.REGISTRY[m["name"]]
+        assert [list(s) for s in prog.arg_shapes] == m["inputs"]
+
+
+def test_hlo_files_parse_as_text(manifest):
+    for m in manifest[:5]:
+        text = (ARTIFACTS / m["file"]).read_text()
+        assert text.startswith("HloModule"), f"{m['file']} not HLO text"
+        assert "custom-call" not in text
+
+
+def test_incremental_aot_is_noop():
+    """Re-running aot on an up-to-date tree lowers nothing."""
+    if not (ARTIFACTS / "manifest.json").exists():
+        pytest.skip("artifacts not built")
+    out = subprocess.run(
+        [sys.executable, "-m", "compile.aot"],
+        cwd=REPO / "python",
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    assert ", 0 lowered" in out.stderr, out.stderr

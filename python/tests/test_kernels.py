@@ -1,0 +1,219 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Parametrised shape sweeps + hypothesis-driven random shapes.  This is
+the CORE numeric signal for the whole stack: the Rust engine executes
+AOT artifacts lowered from these exact kernels, so agreement here means
+agreement on the request path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import conv as conv_k
+from compile.kernels import elementwise as ew_k
+from compile.kernels import matmul as mm_k
+from compile.kernels import norm as norm_k
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape):
+    return jnp.asarray(RNG.standard_normal(shape).astype(np.float32))
+
+
+def check(a, b, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 8, 8), (64, 64, 64), (96, 80, 112), (128, 256, 64), (77, 512, 512), (1, 384, 51)],
+)
+def test_matmul_shapes(m, k, n):
+    x, y = arr(m, k), arr(k, n)
+    check(mm_k.matmul(x, y), ref.matmul(x, y), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(32, 32, 32), (128, 128, 128), (16, 64, 8)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    """Block-shape choice must never change the numerics."""
+    x, y = arr(96, 64), arr(64, 80)
+    base = ref.matmul(x, y)
+    check(mm_k.matmul(x, y, bm=bm, bn=bn, bk=bk), base, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "silu"])
+def test_matmul_bias_act(act):
+    x, w, b = arr(64, 96), arr(96, 48), arr(48)
+    check(
+        mm_k.matmul_bias_act(x, w, b, act=act),
+        ref.bias_act(ref.matmul(x, w), b, act),
+        rtol=1e-3,
+        atol=1e-3,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+)
+def test_matmul_hypothesis(m, k, n):
+    rng = np.random.default_rng(m * 10007 + k * 101 + n)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    check(mm_k.matmul(x, y), ref.matmul(x, y), rtol=2e-3, atol=2e-3)
+
+
+def test_matmul_rejects_mismatch():
+    with pytest.raises(AssertionError):
+        mm_k.matmul(arr(4, 5), arr(6, 4))
+
+
+def test_vmem_and_mxu_estimators():
+    assert mm_k.vmem_bytes(128, 128, 128) == 4 * 3 * 128 * 128
+    assert mm_k.mxu_utilization(128, 128, 128) == 1.0
+    assert mm_k.mxu_utilization(64, 128, 128) == 0.5
+    assert mm_k.mxu_utilization(130, 128, 128) < 0.6
+
+
+# ----------------------------------------------------------- norm kernels
+
+@pytest.mark.parametrize("rows,d", [(4, 16), (77, 512), (128, 768), (192, 384), (1, 64)])
+def test_layernorm(rows, d):
+    x, g, b = arr(rows, d), arr(d), arr(d)
+    check(norm_k.layernorm(x, g, b), ref.layernorm(x, g, b))
+
+
+@pytest.mark.parametrize("rows,d", [(4, 16), (128, 128), (192, 384), (3, 1000)])
+def test_softmax(rows, d):
+    x = arr(rows, d)
+    out = norm_k.softmax(x)
+    check(out, ref.softmax(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_softmax_extreme_values_stable():
+    x = jnp.asarray([[1e4, -1e4, 0.0, 5.0]], dtype=jnp.float32)
+    out = np.asarray(norm_k.softmax(x))
+    assert np.isfinite(out).all()
+    assert abs(out.sum() - 1.0) < 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 64), d=st.integers(2, 256))
+def test_layernorm_hypothesis(rows, d):
+    rng = np.random.default_rng(rows * 997 + d)
+    x = jnp.asarray(rng.standard_normal((rows, d)).astype(np.float32))
+    g = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    check(norm_k.layernorm(x, g, b), ref.layernorm(x, g, b), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("t,s,d", [(16, 16, 8), (77, 77, 64), (64, 192, 32), (1, 7, 16)])
+def test_attention(t, s, d):
+    q, k, v = arr(t, d), arr(s, d), arr(s, d)
+    check(attn_k.attention(q, k, v), ref.attention(q, k, v), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("t,d,h", [(16, 32, 4), (77, 512, 8), (64, 96, 3)])
+def test_mha(t, d, h):
+    # scale weights ~1/sqrt(d) so attention scores stay in the
+    # well-conditioned softmax regime (as trained weights would)
+    x = arr(t, d)
+    ws = [arr(d, d) / np.sqrt(d) for _ in range(4)]
+    check(
+        attn_k.mha(x, *ws, num_heads=h),
+        ref.mha(x, *ws, h),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+# ----------------------------------------------------------- elementwise
+
+@pytest.mark.parametrize("op", ["add", "sub", "mul", "max"])
+@pytest.mark.parametrize("shape", [(64,), (17, 9), (2, 3, 5)])
+def test_binary(op, shape):
+    x, y = arr(*shape), arr(*shape)
+    check(ew_k.binary(x, y, op=op), ref.elementwise(x, y, op), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("op", ["relu", "silu", "gelu"])
+def test_unary(op):
+    x = arr(33, 41)
+    expect = {"relu": ref.relu, "silu": ref.silu}.get(op)
+    if expect is None:
+        import jax
+        expect = jax.nn.gelu
+    check(ew_k.unary(x, op=op), expect(x), rtol=1e-5, atol=1e-5)
+
+
+def test_binary_rejects_unknown_op():
+    with pytest.raises(Exception):
+        ew_k.binary(arr(4), arr(4), op="pow")
+
+
+# ----------------------------------------------------------- convolution
+
+@pytest.mark.parametrize(
+    "shape,k,cout,stride",
+    [
+        ((1, 8, 8, 3), 3, 8, 1),
+        ((2, 16, 16, 8), 3, 12, 1),
+        ((1, 16, 16, 8), 3, 16, 2),
+        ((1, 7, 9, 4), 3, 6, 2),
+        ((1, 12, 12, 6), 5, 4, 1),
+        ((1, 10, 10, 3), 1, 7, 1),
+    ],
+)
+def test_conv2d(shape, k, cout, stride):
+    x = arr(*shape)
+    w = arr(k, k, shape[-1], cout)
+    check(
+        conv_k.conv2d(x, w, stride=stride),
+        ref.conv2d(x, w, stride=stride),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize(
+    "shape,k,stride",
+    [((2, 16, 16, 8), 3, 1), ((1, 7, 9, 4), 3, 2), ((1, 12, 12, 6), 5, 1)],
+)
+def test_dwconv2d(shape, k, stride):
+    x = arr(*shape)
+    w = arr(k, k, shape[-1], 1)
+    check(
+        conv_k.dwconv2d(x, w, stride=stride),
+        ref.dwconv2d(x, w, stride=stride),
+        rtol=2e-3,
+        atol=2e-3,
+    )
+
+
+@pytest.mark.parametrize("mode", ["max", "avg"])
+def test_pool2d(mode, shape=(2, 16, 16, 8)):
+    x = arr(*shape)
+    if mode == "max":
+        check(conv_k.maxpool2d(x), ref.maxpool2d(x), rtol=1e-6, atol=0)
+    else:
+        check(conv_k.avgpool2d(x), ref.avgpool2d(x), rtol=1e-5, atol=1e-5)
+
+
+def test_im2col_matches_patch_extraction():
+    x = arr(1, 6, 6, 2)
+    cols = ref.im2col(x, 3, 3)
+    assert cols.shape == (1, 6, 6, 18)

@@ -1,0 +1,98 @@
+"""L2 branch programs: every REGISTRY entry vs its oracle + AOT checks.
+
+Each program is evaluated on random inputs and compared against its
+pure-jnp `ref_fn`; the AOT path is round-tripped (lower → HLO text) for
+a representative subset and checked for the properties the Rust loader
+relies on (no custom-calls, ENTRY present, tuple return).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+RNG = np.random.default_rng(7)
+
+
+def materialize(prog: model.Program):
+    return [
+        jnp.asarray(RNG.standard_normal(tuple(s)).astype(np.float32) * 0.1)
+        for s in prog.arg_shapes
+    ]
+
+
+SMALL = [
+    name
+    for name, p in model.REGISTRY.items()
+    if np.prod([np.prod(s) for s in p.arg_shapes]) < 5e12
+]
+
+
+@pytest.mark.parametrize("name", sorted(model.REGISTRY))
+def test_program_matches_oracle(name):
+    prog = model.REGISTRY[name]
+    assert prog.ref_fn is not None, f"{name} has no oracle"
+    args = materialize(prog)
+    got = prog.fn(*args)
+    want = prog.ref_fn(*args)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=5e-3, atol=5e-3
+        )
+
+
+@pytest.mark.parametrize("name", sorted(model.REGISTRY))
+def test_program_flops_positive_and_shapes_consistent(name):
+    prog = model.REGISTRY[name]
+    assert prog.flops > 0
+    outs = jax.eval_shape(prog.fn, *prog.example_args())
+    assert len(outs) >= 1
+    for o in outs:
+        assert all(d > 0 for d in o.shape)
+
+
+@pytest.mark.parametrize(
+    "name", ["matmul_64x64x64", "layernorm_77x512", "ew_add_4096", "softmax_192x384"]
+)
+def test_aot_hlo_text_properties(name):
+    prog = model.REGISTRY[name]
+    text = aot.lower_program(prog)
+    assert "ENTRY" in text, "HLO text must have an entry computation"
+    assert "custom-call" not in text, "CPU PJRT cannot run custom-calls"
+    # tuple return (the rust loader unpacks with to_tuple)
+    assert "tuple" in text.lower()
+
+
+def test_registry_names_are_stable_identifiers():
+    for name in model.REGISTRY:
+        assert " " not in name
+        assert name == name.lower()
+
+
+def test_registry_covers_zoo_hints():
+    """Programs the Rust zoo hints at must exist in the registry."""
+    needed = [
+        "attn_77x512_h8",
+        "ffn_77x512x2048",
+        "layernorm_77x512",
+        "attn_128x768_h12",
+        "ffn_128x768x3072",
+        "layernorm_128x768",
+        "attn_192x384_h6",
+        "ffn_192x384x1536",
+        "layernorm_192x384",
+        "conv3x3_silu_40x40x64x128_s2",
+        "matmul_64x64x64",
+    ]
+    for name in needed:
+        assert name in model.REGISTRY, f"zoo hint {name} missing"
+
+
+def test_output_shapes_helper_matches_eval_shape():
+    prog = model.REGISTRY["matmul_64x64x64"]
+    assert aot.output_shapes(prog) == [[64, 64]]

@@ -1,0 +1,11 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! β balance threshold (§3.1), memory margin (§3.3), delegate
+//! cost-model threshold (§3.1 / Appendix B).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    for which in ["ablation-beta", "ablation-margin", "ablation-cost-model"] {
+        println!("{}", parallax::eval::run(which).expect("known experiment"));
+    }
+    println!("[ablations] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

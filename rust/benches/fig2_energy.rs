@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's Figure 2 (energy).
+//!
+//! `cargo bench --bench fig2_energy` prints the same rows the paper
+//! reports (see EXPERIMENTS.md for the paper-vs-measured comparison)
+//! plus the wall time of the regeneration itself.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = parallax::eval::run("fig2").expect("known experiment");
+    println!("{table}");
+    println!("[fig2_energy] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,76 @@
+//! Hot-path micro-benchmarks for the L3 coordinator (§Perf).
+//!
+//! `cargo bench --bench hotpath` times the operations on Parallax's
+//! request path: graph analysis (partition + branch extraction), branch
+//! memory estimation, layer scheduling, the arena allocator, and one
+//! full simulated inference — the pieces the performance pass iterates
+//! on (EXPERIMENTS.md §Perf records before/after).
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::memory::{self, BumpArena};
+use parallax::models::ModelKind;
+use parallax::partition::{partition, CostModel};
+use parallax::sched::{self, SchedCfg};
+use parallax::sim::Mode;
+use parallax::util::bench::{black_box, Bench};
+use parallax::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("coordinator hot paths");
+
+    // -- graph analysis (one-time per model load, still worth tracking)
+    let g = ModelKind::WhisperTiny.build();
+    b.iter("partition(whisper)", || {
+        black_box(partition(&g, &CostModel::default()));
+    });
+    let p = partition(&g, &CostModel::default());
+    b.iter("branch_plan(whisper)", || {
+        black_box(branch::plan(&g, &p, DEFAULT_BETA));
+    });
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    b.iter("branch_memories(whisper)", || {
+        black_box(memory::branch_memories(&g, &p, &plan));
+    });
+
+    // -- per-inference path
+    let mems = memory::branch_memories(&g, &p, &plan);
+    let cfg = SchedCfg::default();
+    b.iter("schedule(whisper)", || {
+        black_box(sched::schedule(&plan, &mems, 1 << 31, &cfg));
+    });
+
+    let pipe = Pipeline::build(
+        Framework::Parallax,
+        ModelKind::WhisperTiny,
+        &SocProfile::pixel6(),
+        Mode::CpuOnly,
+        cfg,
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    b.iter("simulate_one_inference(whisper)", || {
+        black_box(pipe.run(&mut rng, 0.7));
+    });
+
+    // -- arena allocator inner loop
+    b.iter("bump_arena_alloc_free_64", || {
+        let mut a = BumpArena::new();
+        let mut offs = Vec::with_capacity(64);
+        for i in 0..64 {
+            offs.push(a.alloc(256 + i * 32));
+        }
+        for o in offs {
+            a.free(o);
+        }
+        black_box(a.footprint());
+    });
+
+    // -- model build (zoo generator throughput)
+    b.iter("build_graph(clip)", || {
+        black_box(ModelKind::ClipText.build());
+    });
+
+    b.report();
+}

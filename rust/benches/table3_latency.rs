@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's Table 3 (end-to-end latency).
+//!
+//! `cargo bench --bench table3_latency` prints the same rows the paper
+//! reports (see EXPERIMENTS.md for the paper-vs-measured comparison)
+//! plus the wall time of the regeneration itself.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = parallax::eval::run("table3").expect("known experiment");
+    println!("{table}");
+    println!("[table3_latency] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's Table 4 (peak runtime memory).
+//!
+//! `cargo bench --bench table4_peak_memory` prints the same rows the paper
+//! reports (see EXPERIMENTS.md for the paper-vs-measured comparison)
+//! plus the wall time of the regeneration itself.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = parallax::eval::run("table4").expect("known experiment");
+    println!("{table}");
+    println!("[table4_peak_memory] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

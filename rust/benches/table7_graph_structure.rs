@@ -1,0 +1,12 @@
+//! Bench target regenerating the paper's Table 7 (graph structure).
+//!
+//! `cargo bench --bench table7_graph_structure` prints the same rows the paper
+//! reports (see EXPERIMENTS.md for the paper-vs-measured comparison)
+//! plus the wall time of the regeneration itself.
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = parallax::eval::run("table7").expect("known experiment");
+    println!("{table}");
+    println!("[table7_graph_structure] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

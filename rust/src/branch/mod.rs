@@ -1,0 +1,490 @@
+//! Branch-Layer extraction (paper §3.1, Algorithms 1–4).
+//!
+//! After delegate partitioning the graph intermixes CPU-fallback nodes
+//! and indivisible delegate regions.  This module decomposes that mixed
+//! view into:
+//!
+//! 1. **Units** — one per CPU node, one per delegate region
+//!    ([`UnitGraph`]).  Control-flow ops are Split-Merge barriers.
+//! 2. **Branches** — maximal linear chains of units (Algorithm 1/3):
+//!    the schedulable quantum.  Within a branch execution is strictly
+//!    sequential; across branches in the same layer it may be parallel.
+//! 3. **Layers** — topological waves of branches (Algorithm 2/4):
+//!    branches in one layer have no mutual dependencies.
+//! 4. **Refinement** — a layer is *parallelizable* only if ≥2 branches
+//!    each have N > 2 ops and the heaviest/lightest FLOP ratio is ≤ β
+//!    (default 1.5), so thread fan-out never pays more in sync than it
+//!    gains in overlap.
+//!
+//! Everything runs in O(|V|+|E|), matching the paper's claim.
+
+use crate::flops;
+use crate::graph::{Graph, NodeId};
+use crate::partition::Partition;
+
+/// Node/unit classification (Algorithm 1 line 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeClass {
+    Sequential,
+    Splitter,
+    Merger,
+    SplitMerge,
+}
+
+/// One schedulable unit: a CPU node or a whole delegate region.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Unit {
+    Cpu(NodeId),
+    Region(usize),
+}
+
+/// The unit-level view of a partitioned graph.
+#[derive(Clone, Debug)]
+pub struct UnitGraph {
+    pub units: Vec<Unit>,
+    pub preds: Vec<Vec<usize>>,
+    pub succs: Vec<Vec<usize>>,
+    /// FLOPs per unit (region = sum of members).
+    pub flops: Vec<u64>,
+    /// Fine-grained op count per unit.
+    pub ops: Vec<usize>,
+    /// Control-flow barrier flag (forced Split-Merge).
+    pub barrier: Vec<bool>,
+    /// unit index for every graph node.
+    pub unit_of_node: Vec<usize>,
+}
+
+impl UnitGraph {
+    /// Build the unit graph from a partition result.
+    pub fn build(g: &Graph, p: &Partition) -> Self {
+        let n = g.num_nodes();
+        let mut unit_of_node = vec![usize::MAX; n];
+        let mut units = Vec::new();
+        let mut flops_v = Vec::new();
+        let mut ops_v = Vec::new();
+        let mut barrier = Vec::new();
+
+        // one unit per delegate region, in region order
+        for (ri, region) in p.regions.iter().enumerate() {
+            let ui = units.len();
+            units.push(Unit::Region(ri));
+            flops_v.push(flops::region_flops(g, region));
+            ops_v.push(region.len());
+            barrier.push(false);
+            for &id in region {
+                unit_of_node[id.0 as usize] = ui;
+            }
+        }
+        // one unit per CPU node
+        for node in g.nodes() {
+            if p.is_cpu(node.id) {
+                let ui = units.len();
+                units.push(Unit::Cpu(node.id));
+                flops_v.push(flops::node_flops(g, node.id));
+                ops_v.push(1);
+                barrier.push(node.kind.is_control_flow());
+                unit_of_node[node.id.0 as usize] = ui;
+            }
+        }
+
+        // unit adjacency (dedup'd)
+        let m = units.len();
+        let mut preds = vec![Vec::new(); m];
+        let mut succs = vec![Vec::new(); m];
+        for node in g.nodes() {
+            let u = unit_of_node[node.id.0 as usize];
+            for s in g.succs(node.id) {
+                let v = unit_of_node[s.0 as usize];
+                if u != v && !succs[u].contains(&v) {
+                    succs[u].push(v);
+                    preds[v].push(u);
+                }
+            }
+        }
+
+        Self { units, preds, succs, flops: flops_v, ops: ops_v, barrier, unit_of_node }
+    }
+
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Classification per Algorithm 1 (control flow forced Split-Merge).
+    pub fn classify(&self, u: usize) -> NodeClass {
+        if self.barrier[u] {
+            return NodeClass::SplitMerge;
+        }
+        let din = self.preds[u].len();
+        let dout = self.succs[u].len();
+        match (din > 1, dout > 1) {
+            (false, false) => NodeClass::Sequential,
+            (false, true) => NodeClass::Splitter,
+            (true, false) => NodeClass::Merger,
+            (true, true) => NodeClass::SplitMerge,
+        }
+    }
+
+    /// Kahn topological order over units.
+    pub fn topo(&self) -> Vec<usize> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(Vec::len).collect();
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..self.len()).filter(|&u| indeg[u] == 0).collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &v in &self.succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert_eq!(order.len(), self.len(), "unit graph has a cycle");
+        order
+    }
+}
+
+/// One extracted branch: a maximal linear chain of units.
+#[derive(Clone, Debug)]
+pub struct Branch {
+    pub id: usize,
+    pub units: Vec<usize>,
+    /// Total FLOPs (workload metric F of §3.1 refinement).
+    pub flops: u64,
+    /// Fine-grained op count (workload metric N).
+    pub ops: usize,
+    /// True if the branch contains a delegate region (runs on the
+    /// accelerator lane rather than a CPU thread).
+    pub has_delegate: bool,
+}
+
+/// The full Branch-Layer plan.
+#[derive(Clone, Debug)]
+pub struct BranchPlan {
+    pub unit_graph: UnitGraph,
+    pub branches: Vec<Branch>,
+    /// branch index of every unit.
+    pub branch_of_unit: Vec<usize>,
+    /// Layers: topological waves of branch indices (Algorithm 2).
+    pub layers: Vec<Vec<usize>>,
+    /// Per-layer parallel verdict after refinement.
+    pub layer_parallel: Vec<bool>,
+}
+
+/// β — max heaviest/lightest FLOP ratio for a balanced layer (§3.1).
+pub const DEFAULT_BETA: f64 = 1.5;
+
+/// Minimum ops per branch for parallel execution (§3.1: N > 2).
+pub const MIN_BRANCH_OPS: usize = 3;
+
+/// Extract maximal branches (Algorithm 1/3).
+///
+/// A branch grows from an unvisited head unit and extends while the
+/// current unit has exactly one successor, that successor has exactly
+/// one predecessor, is unvisited, and neither side is a control-flow
+/// barrier.  Every unit lands in exactly one branch.
+pub fn extract_branches(ug: &UnitGraph) -> (Vec<Branch>, Vec<usize>) {
+    let n = ug.len();
+    let mut visited = vec![false; n];
+    let mut branches: Vec<Branch> = Vec::new();
+    let mut branch_of_unit = vec![usize::MAX; n];
+
+    for u in ug.topo() {
+        if visited[u] {
+            continue;
+        }
+        // heads: not Merger/SplitMerge per Algorithm 1, or any leftover
+        let mut chain = vec![u];
+        visited[u] = true;
+        let mut cur = u;
+        loop {
+            if ug.barrier[cur] || ug.succs[cur].len() != 1 {
+                break;
+            }
+            let next = ug.succs[cur][0];
+            if visited[next]
+                || ug.preds[next].len() != 1
+                || ug.barrier[next]
+            {
+                break;
+            }
+            chain.push(next);
+            visited[next] = true;
+            cur = next;
+        }
+        let id = branches.len();
+        for &m in &chain {
+            branch_of_unit[m] = id;
+        }
+        branches.push(Branch {
+            id,
+            flops: chain.iter().map(|&m| ug.flops[m]).sum(),
+            ops: chain.iter().map(|&m| ug.ops[m]).sum(),
+            has_delegate: chain.iter().any(|&m| matches!(ug.units[m], Unit::Region(_))),
+            units: chain,
+        });
+    }
+    (branches, branch_of_unit)
+}
+
+/// Group branches into topological layers (Algorithm 2/4).
+pub fn build_layers(ug: &UnitGraph, branches: &[Branch], branch_of_unit: &[usize]) -> Vec<Vec<usize>> {
+    let nb = branches.len();
+    // branch dependency in-degrees (dedup'd edges)
+    let mut deps: Vec<std::collections::HashSet<usize>> = vec![Default::default(); nb];
+    for (u, succs) in ug.succs.iter().enumerate() {
+        let bu = branch_of_unit[u];
+        for &v in succs {
+            let bv = branch_of_unit[v];
+            if bu != bv {
+                deps[bv].insert(bu);
+            }
+        }
+    }
+    let mut indeg: Vec<usize> = deps.iter().map(|d| d.len()).collect();
+    let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    for (b, ds) in deps.iter().enumerate() {
+        for &d in ds {
+            dependents[d].push(b);
+        }
+    }
+
+    let mut layers = Vec::new();
+    let mut queue: Vec<usize> = (0..nb).filter(|&b| indeg[b] == 0).collect();
+    let mut placed = 0;
+    while !queue.is_empty() {
+        let layer = std::mem::take(&mut queue);
+        for &b in &layer {
+            placed += 1;
+            for &d in &dependents[b] {
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    queue.push(d);
+                }
+            }
+        }
+        layers.push(layer);
+    }
+    assert_eq!(placed, nb, "branch dependency graph has a cycle");
+    layers
+}
+
+/// §3.1 refinement: the *balanced parallel subset* of a layer.
+///
+/// Qualifying branches (CPU, N > 2) are sorted by descending FLOPs and
+/// the maximal prefix with `F_max / F_i ≤ β` is taken — the heaviest
+/// balanced group.  Anything outside the subset (tiny glue chains,
+/// off-balance stragglers) runs sequentially, so fan-out never pays
+/// more in synchronisation than it gains in overlap.  Returns branch
+/// ids; parallel execution is worthwhile iff the subset has ≥ 2.
+pub fn balanced_parallel_subset(branches: &[Branch], layer: &[usize], beta: f64) -> Vec<usize> {
+    let mut q: Vec<usize> = layer
+        .iter()
+        .copied()
+        .filter(|&b| !branches[b].has_delegate && branches[b].ops >= MIN_BRANCH_OPS)
+        .collect();
+    if q.len() < 2 {
+        return Vec::new();
+    }
+    q.sort_by(|&a, &b| branches[b].flops.cmp(&branches[a].flops));
+    let fmax = branches[q[0]].flops.max(1) as f64;
+    let take = q
+        .iter()
+        .take_while(|&&b| fmax / branches[b].flops.max(1) as f64 <= beta)
+        .count();
+    if take < 2 {
+        Vec::new()
+    } else {
+        q.truncate(take);
+        q
+    }
+}
+
+/// §3.1 refinement verdict for a layer: does a balanced parallel subset
+/// of ≥ 2 branches exist?
+pub fn layer_is_parallel(branches: &[Branch], layer: &[usize], beta: f64) -> bool {
+    !balanced_parallel_subset(branches, layer, beta).is_empty()
+}
+
+/// Run the full §3.1 pipeline on a partitioned graph.
+pub fn plan(g: &Graph, p: &Partition, beta: f64) -> BranchPlan {
+    let ug = UnitGraph::build(g, p);
+    let (branches, branch_of_unit) = extract_branches(&ug);
+    let layers = build_layers(&ug, &branches, &branch_of_unit);
+    let layer_parallel = layers
+        .iter()
+        .map(|l| layer_is_parallel(&branches, l, beta))
+        .collect();
+    BranchPlan { unit_graph: ug, branches, branch_of_unit, layers, layer_parallel }
+}
+
+impl BranchPlan {
+    /// Table 7 metrics: (layers, parallel layers, max branches in a layer).
+    pub fn table7_metrics(&self) -> (usize, usize, usize) {
+        let layers = self.layers.len();
+        let par = self.layer_parallel.iter().filter(|&&p| p).count();
+        let maxb = self.layers.iter().map(Vec::len).max().unwrap_or(0);
+        (layers, par, maxb)
+    }
+
+    /// All graph nodes of a branch, in unit order (regions expanded).
+    pub fn branch_nodes(&self, _g: &Graph, p: &Partition, b: usize) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        for &u in &self.branches[b].units {
+            match &self.unit_graph.units[u] {
+                Unit::Cpu(id) => out.push(*id),
+                Unit::Region(ri) => out.extend(p.regions[*ri].iter().copied()),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::micro;
+    use crate::partition::{partition, CostModel};
+
+    fn cpu_only(g: &crate::graph::Graph) -> Partition {
+        // cost model that rejects everything -> all CPU
+        partition(g, &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 })
+    }
+
+    #[test]
+    fn chain_is_one_branch() {
+        let g = micro::chain(10);
+        let p = cpu_only(&g);
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        assert_eq!(plan.branches.len(), 1);
+        assert_eq!(plan.layers.len(), 1);
+        assert!(!plan.layer_parallel[0]); // single branch: not parallel
+    }
+
+    #[test]
+    fn parallel_chains_form_k_branches_in_one_layer() {
+        let g = micro::parallel_chains(4, 5);
+        let p = cpu_only(&g);
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        // split head, 4 chains, merge tail
+        let (layers, par, maxb) = plan.table7_metrics();
+        assert_eq!(maxb, 4, "{:?}", plan.layers);
+        assert!(par >= 1);
+        assert!(layers >= 3);
+        // the 4 chains are balanced (equal flops) and long enough
+        let mid = plan
+            .layers
+            .iter()
+            .position(|l| l.len() == 4)
+            .expect("4-wide layer");
+        assert!(plan.layer_parallel[mid]);
+    }
+
+    #[test]
+    fn unbalanced_diamond_fails_beta() {
+        // short=3 vs long=12 relus: both N>2, flops ratio 4 > 1.5
+        let g = micro::diamond(3, 12);
+        let p = cpu_only(&g);
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        assert!(plan.layer_parallel.iter().all(|&x| !x));
+        // but a generous beta accepts it
+        let plan2 = plan_beta(&g, &p, 5.0);
+        assert!(plan2.layer_parallel.iter().any(|&x| x));
+    }
+
+    fn plan_beta(
+        g: &crate::graph::Graph,
+        p: &Partition,
+        beta: f64,
+    ) -> BranchPlan {
+        plan(g, p, beta)
+    }
+
+    #[test]
+    fn short_branches_fail_min_ops() {
+        // 2-op branches: N = 2 < 3 -> never parallel
+        let g = micro::parallel_chains(4, 2);
+        let p = cpu_only(&g);
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        assert!(plan.layer_parallel.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn every_unit_in_exactly_one_branch() {
+        let g = crate::models::ModelKind::ClipText.build();
+        let p = partition(&g, &CostModel::default());
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        let mut count = vec![0usize; plan.unit_graph.len()];
+        for b in &plan.branches {
+            for &u in &b.units {
+                count[u] += 1;
+            }
+        }
+        assert!(count.iter().all(|&c| c == 1));
+        // branch_of_unit consistent
+        for b in &plan.branches {
+            for &u in &b.units {
+                assert_eq!(plan.branch_of_unit[u], b.id);
+            }
+        }
+    }
+
+    #[test]
+    fn layers_respect_dependencies() {
+        let g = crate::models::ModelKind::DistilBert.build();
+        let p = partition(&g, &CostModel::default());
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        // layer index of each branch
+        let mut layer_of = vec![usize::MAX; plan.branches.len()];
+        for (li, layer) in plan.layers.iter().enumerate() {
+            for &b in layer {
+                layer_of[b] = li;
+            }
+        }
+        // for every unit edge across branches, layer must strictly increase
+        for (u, succs) in plan.unit_graph.succs.iter().enumerate() {
+            for &v in succs {
+                let (bu, bv) = (plan.branch_of_unit[u], plan.branch_of_unit[v]);
+                if bu != bv {
+                    assert!(
+                        layer_of[bu] < layer_of[bv],
+                        "dependency violated: branch {bu} (layer {}) -> {bv} (layer {})",
+                        layer_of[bu],
+                        layer_of[bv]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn control_flow_is_singleton_branch() {
+        let g = crate::models::ModelKind::WhisperTiny.build();
+        let p = partition(&g, &CostModel::default());
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        for (u, unit) in plan.unit_graph.units.iter().enumerate() {
+            if plan.unit_graph.barrier[u] {
+                let b = plan.branch_of_unit[u];
+                assert_eq!(
+                    plan.branches[b].units.len(),
+                    1,
+                    "barrier unit {unit:?} must be alone in its branch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qkv_branches_visible_in_clip() {
+        // CLIP attention blocks expose >= 3 concurrent branches (q/k/v)
+        let g = crate::models::ModelKind::ClipText.build();
+        let p = cpu_only(&g);
+        let plan = plan(&g, &p, DEFAULT_BETA);
+        let (_, _, maxb) = plan.table7_metrics();
+        assert!(maxb >= 3, "expected q/k/v parallelism, got max {maxb}");
+    }
+}

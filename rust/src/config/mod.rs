@@ -1,0 +1,172 @@
+//! Run configuration: a minimal TOML-subset loader + the typed config
+//! the CLI and examples consume.
+//!
+//! Offline environment — no `toml` crate — so we parse the subset we
+//! emit: `key = value` lines under `[section]` headers, with string,
+//! integer, float and boolean values.  Comments (`#`) and blank lines
+//! are ignored.
+
+use std::collections::HashMap;
+
+use crate::device::SocProfile;
+use crate::models::ModelKind;
+use crate::sched::SchedCfg;
+use crate::sim::Mode;
+
+/// Flat `section.key -> value` view of a TOML-subset document.
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    values: HashMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(src: &str) -> Result<Self, String> {
+        let mut section = String::new();
+        let mut values = HashMap::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(format!("line {}: expected key = value", lineno + 1));
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim().trim_matches('"').to_string();
+            values.insert(key, v);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::parse(&src)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Typed run configuration (CLI flags override file values).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelKind,
+    pub device: SocProfile,
+    pub mode: Mode,
+    pub sched: SchedCfg,
+    pub runs: usize,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: ModelKind::ClipText,
+            device: SocProfile::pixel6(),
+            mode: Mode::CpuOnly,
+            sched: SchedCfg::default(),
+            runs: 20,
+            warmup: 5,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Merge a raw config file into the defaults.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self, String> {
+        let mut c = Self::default();
+        if let Some(m) = raw.get("run.model") {
+            c.model = ModelKind::from_slug(m).ok_or_else(|| format!("unknown model {m}"))?;
+        }
+        if let Some(d) = raw.get("run.device") {
+            c.device = SocProfile::by_name(d).ok_or_else(|| format!("unknown device {d}"))?;
+        }
+        if let Some(m) = raw.get("run.mode") {
+            c.mode = match m {
+                "cpu" => Mode::CpuOnly,
+                "het" | "heterogeneous" => Mode::Heterogeneous,
+                _ => return Err(format!("unknown mode {m}")),
+            };
+        }
+        c.sched.max_threads = raw.get_usize("scheduler.max_threads", c.sched.max_threads);
+        c.sched.margin = raw.get_f64("scheduler.margin", c.sched.margin);
+        c.runs = raw.get_usize("run.runs", c.runs);
+        c.warmup = raw.get_usize("run.warmup", c.warmup);
+        c.seed = raw.get_usize("run.seed", c.seed as usize) as u64;
+        if !(0.0..1.0).contains(&c.sched.margin) {
+            return Err(format!("margin {} out of [0,1)", c.sched.margin));
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Parallax run config
+[run]
+model = "whisper-tiny"
+device = "redmik50"
+mode = "het"
+runs = 10
+
+[scheduler]
+max_threads = 4
+margin = 0.3
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let raw = RawConfig::parse(SAMPLE).unwrap();
+        assert_eq!(raw.get("run.model"), Some("whisper-tiny"));
+        assert_eq!(raw.get_usize("scheduler.max_threads", 6), 4);
+        let c = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.model, ModelKind::WhisperTiny);
+        assert_eq!(c.device.name, "redmik50");
+        assert_eq!(c.mode, Mode::Heterogeneous);
+        assert_eq!(c.sched.max_threads, 4);
+        assert!((c.sched.margin - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let raw = RawConfig::parse("[run]\nmodel = \"gpt5\"\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[scheduler]\nmargin = 1.5\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+        assert!(RawConfig::parse("not a toml line").is_err());
+    }
+
+    #[test]
+    fn defaults_survive_empty_file() {
+        let raw = RawConfig::parse("").unwrap();
+        let c = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(c.sched.max_threads, 6);
+        assert_eq!(c.runs, 20);
+    }
+}

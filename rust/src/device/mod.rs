@@ -1,0 +1,219 @@
+//! Simulated edge SoC device models.
+//!
+//! The paper's testbed (Google Pixel 6 / Huawei P30 Pro / Redmi K50) is
+//! replaced by parameterised SoC profiles (DESIGN.md §Substitutions):
+//! per-core CPU throughput, accelerator throughput + dispatch latency,
+//! memory bandwidth, RAM, and a power-state energy model.  Values are
+//! anchored to the paper's §3.1 representative numbers and public SoC
+//! specs; absolute ms/mJ are calibration targets, the *relative*
+//! behaviour (who wins, where crossovers fall) is what the simulator
+//! must reproduce.
+
+use crate::util::rng::Rng;
+
+/// One SoC profile.
+#[derive(Clone, Debug)]
+pub struct SocProfile {
+    pub name: &'static str,
+    /// Total CPU cores (big + little).
+    pub cpu_cores: usize,
+    /// Sustained per-big-core compute rate, FLOP/s (2 FLOPs per MAC).
+    pub cpu_flops_per_core: f64,
+    /// Relative throughput of additional cores (big.LITTLE scaling):
+    /// core i contributes `cpu_flops_per_core * core_scale[i]`.
+    pub core_scale: [f64; 8],
+    /// Accelerator peak compute rate, FLOP/s.
+    pub acc_flops: f64,
+    /// Sustained fraction of peak an NNAPI delegate reaches on the
+    /// zoo's region sizes (small tensors never fill the MAC array).
+    pub acc_utilization: f64,
+    /// Accelerator dispatch latency per delegate invocation, seconds.
+    pub acc_dispatch_s: f64,
+    /// Host<->accelerator transfer bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Physical RAM, bytes.
+    pub ram_bytes: u64,
+    /// OS + resident apps baseline, bytes (free mem = ram - this - jitter).
+    pub os_reserved: u64,
+    /// Whether the accelerator is reachable (P30 Pro's NPU is not
+    /// NNAPI-accessible; its GPU path has higher dispatch cost).
+    pub nnapi: bool,
+    /// Per-active-CPU-core power, watts.
+    pub p_core_w: f64,
+    /// Accelerator active power, watts.
+    pub p_acc_w: f64,
+    /// Idle/baseline platform power, watts.
+    pub p_idle_w: f64,
+}
+
+impl SocProfile {
+    /// Google Pixel 6 — Google Tensor: 2×X1@2.80GHz + 2×A76 + 4×A55, TPU.
+    pub fn pixel6() -> Self {
+        Self {
+            name: "pixel6",
+            cpu_cores: 8,
+            // ~2.8GHz X1, 2×128-bit NEON FMA ≈ 8 f32 FLOPs/cycle sustained
+            cpu_flops_per_core: 21.0e9,
+            core_scale: [1.0, 1.0, 0.85, 0.85, 0.55, 0.50, 0.45, 0.40],
+            acc_flops: 30.0e12, // EdgeTPU-class
+            acc_utilization: 0.22,
+            acc_dispatch_s: 0.20e-3,
+            mem_bw: 51.2e9, // LPDDR5
+            ram_bytes: 8 * (1 << 30),
+            os_reserved: 4 * (1 << 30),
+            nnapi: true,
+            p_core_w: 1.9,
+            p_acc_w: 2.4,
+            p_idle_w: 0.65,
+        }
+    }
+
+    /// Huawei P30 Pro — Kirin 980: 2×A76@2.60GHz + 2×A76 + 4×A55.
+    /// NPU not NNAPI-accessible; OpenCL GPU path with high dispatch.
+    pub fn p30_pro() -> Self {
+        Self {
+            name: "p30pro",
+            cpu_cores: 8,
+            cpu_flops_per_core: 14.5e9,
+            core_scale: [1.0, 1.0, 0.75, 0.75, 0.45, 0.40, 0.35, 0.30],
+            acc_flops: 6.0e12, // Mali-G76 via OpenCL
+            acc_utilization: 0.15,
+            acc_dispatch_s: 1.1e-3, // GL/CL queue latency
+            mem_bw: 34.1e9, // LPDDR4X
+            ram_bytes: 8 * (1 << 30),
+            os_reserved: 4 * (1 << 30) + (1 << 29),
+            nnapi: false,
+            p_core_w: 1.7,
+            p_acc_w: 3.1,
+            p_idle_w: 0.70,
+        }
+    }
+
+    /// Redmi K50 — Dimensity 8100: 4×A78@2.85GHz + 4×A55, MDLA/DSP/GPU.
+    pub fn redmi_k50() -> Self {
+        Self {
+            name: "redmik50",
+            cpu_cores: 8,
+            cpu_flops_per_core: 18.5e9,
+            core_scale: [1.0, 1.0, 1.0, 1.0, 0.50, 0.45, 0.40, 0.35],
+            acc_flops: 12.0e12, // MDLA 3.0
+            acc_utilization: 0.20,
+            acc_dispatch_s: 0.35e-3,
+            mem_bw: 51.2e9, // LPDDR5
+            ram_bytes: 8 * (1 << 30),
+            os_reserved: 3 * (1 << 30) + (1 << 29),
+            nnapi: true,
+            p_core_w: 1.5,
+            p_acc_w: 2.0,
+            p_idle_w: 0.60,
+        }
+    }
+
+    pub const ALL: [fn() -> SocProfile; 3] =
+        [Self::pixel6, Self::p30_pro, Self::redmi_k50];
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "pixel6" => Some(Self::pixel6()),
+            "p30pro" => Some(Self::p30_pro()),
+            "redmik50" => Some(Self::redmi_k50()),
+            _ => None,
+        }
+    }
+
+    /// Paper's display name.
+    pub fn display_name(&self) -> &'static str {
+        match self.name {
+            "pixel6" => "Google Pixel 6",
+            "p30pro" => "Huawei P30 Pro",
+            "redmik50" => "Redmi K50",
+            _ => self.name,
+        }
+    }
+
+    /// Aggregate CPU rate with `k` threads busy (big cores first):
+    /// Σ_{i<k} cpu_flops_per_core * core_scale[i].
+    pub fn cpu_rate(&self, k: usize) -> f64 {
+        let k = k.clamp(1, self.cpu_cores);
+        self.core_scale[..k]
+            .iter()
+            .map(|s| self.cpu_flops_per_core * s)
+            .sum()
+    }
+
+    /// Effective intra-op parallel speedup for one operator spread over
+    /// `threads` cores: heavy ops scale sub-linearly (sync + memory
+    /// bound), tiny ops not at all.
+    pub fn intra_op_speedup(&self, flops: u64, threads: usize) -> f64 {
+        if threads <= 1 {
+            return 1.0;
+        }
+        let ideal = self.cpu_rate(threads) / self.cpu_rate(1);
+        // efficiency falls off for small ops: below ~2 MFLOP a kernel
+        // can't amortise the fork/join.
+        let eff = (flops as f64 / 2.0e6).min(1.0).max(0.0);
+        1.0 + (ideal - 1.0) * eff
+    }
+
+    /// OS free-memory query (§3.3: "continuously queries the operating
+    /// system for available free memory") with load jitter.
+    pub fn query_free_memory(&self, rng: &mut Rng) -> u64 {
+        let base = self.ram_bytes - self.os_reserved;
+        let jitter = (base as f64 * 0.08 * (rng.f64() - 0.5)) as i64;
+        (base as i64 + jitter).max(1 << 28) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_resolve_by_name() {
+        for f in SocProfile::ALL {
+            let p = f();
+            assert_eq!(SocProfile::by_name(p.name).unwrap().name, p.name);
+        }
+        assert!(SocProfile::by_name("iphone").is_none());
+    }
+
+    #[test]
+    fn cpu_rate_monotone_in_threads() {
+        let p = SocProfile::pixel6();
+        let mut prev = 0.0;
+        for k in 1..=8 {
+            let r = p.cpu_rate(k);
+            assert!(r > prev);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn intra_op_speedup_bounds() {
+        let p = SocProfile::pixel6();
+        // tiny op: no speedup
+        assert!((p.intra_op_speedup(1_000, 6) - 1.0).abs() < 0.05);
+        // huge op: meaningful but sub-linear speedup
+        let s = p.intra_op_speedup(1_000_000_000, 6);
+        assert!(s > 1.8 && s < 6.0, "speedup {s}");
+        // single thread: exactly 1
+        assert_eq!(p.intra_op_speedup(1_000_000_000, 1), 1.0);
+    }
+
+    #[test]
+    fn free_memory_within_physical() {
+        let p = SocProfile::pixel6();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let f = p.query_free_memory(&mut rng);
+            assert!(f < p.ram_bytes);
+            assert!(f > (1 << 28));
+        }
+    }
+
+    #[test]
+    fn p30_has_no_nnapi() {
+        assert!(!SocProfile::p30_pro().nnapi);
+        assert!(SocProfile::pixel6().nnapi);
+    }
+}

@@ -1,0 +1,218 @@
+//! Pure-Rust reference kernels for glue ops.
+//!
+//! The real execution engine runs program-hinted blocks through AOT
+//! PJRT artifacts; everything in between (elementwise glue, softmax,
+//! shape plumbing, the dynamic ops no artifact can cover) runs here.
+//! These are correctness-first implementations — the heavy FLOPs all
+//! live in the artifacts, so these loops stay off the critical path.
+
+use crate::runtime::Tensor;
+
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (sa, sb) = (a.shape(), b.shape());
+    assert_eq!(sa.len(), 2, "matmul lhs must be rank-2");
+    assert_eq!(sb.len(), 2, "matmul rhs must be rank-2");
+    let (m, k) = (sa[0], sa[1]);
+    let (k2, n) = (sb[0], sb[1]);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let mut out = vec![0f32; m * n];
+    let (da, db) = (a.data(), b.data());
+    for i in 0..m {
+        for kk in 0..k {
+            let av = da[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let row = &db[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(row) {
+                *o += av * bv;
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Broadcasting binary op: supports equal shapes and trailing-axis
+/// broadcast (bias-style `(..., N) ⊕ (N,)`).
+pub fn binary(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    if a.shape() == b.shape() {
+        let data = a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
+        return Tensor::new(a.shape().to_vec(), data);
+    }
+    let n = *b.shape().last().unwrap_or(&1);
+    assert_eq!(
+        b.len(),
+        n,
+        "binary broadcast supports (..,N) op (N,) only: {:?} vs {:?}",
+        a.shape(),
+        b.shape()
+    );
+    assert_eq!(a.len() % n, 0);
+    let mut out = Vec::with_capacity(a.len());
+    for (i, &x) in a.data().iter().enumerate() {
+        out.push(f(x, b.data()[i % n]));
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+pub fn unary(a: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(a.shape().to_vec(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+pub fn relu(x: f32) -> f32 {
+    x.max(0.0)
+}
+
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn gelu(x: f32) -> f32 {
+    // tanh approximation (matches jax.nn.gelu default)
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)).tanh()))
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Softmax over the last axis.
+pub fn softmax(a: &Tensor) -> Tensor {
+    let d = *a.shape().last().expect("softmax needs rank>=1");
+    let mut out = a.data().to_vec();
+    for row in out.chunks_mut(d) {
+        let m = row.iter().fold(f32::MIN, |acc, &x| acc.max(x));
+        let mut sum = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= sum;
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// LayerNorm over the last axis with gamma/beta.
+pub fn layernorm(a: &Tensor, gamma: &Tensor, beta: &Tensor, eps: f32) -> Tensor {
+    let d = *a.shape().last().expect("layernorm needs rank>=1");
+    assert_eq!(gamma.len(), d);
+    assert_eq!(beta.len(), d);
+    let mut out = a.data().to_vec();
+    for row in out.chunks_mut(d) {
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = (*x - mean) * inv * gamma.data()[j] + beta.data()[j];
+        }
+    }
+    Tensor::new(a.shape().to_vec(), out)
+}
+
+/// Single-head scaled-dot-product attention on rank-2 q/k/v.
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d = q.shape()[1] as f32;
+    let kt = transpose2(k);
+    let mut scores = matmul(q, &kt);
+    for x in scores.data_mut() {
+        *x /= d.sqrt();
+    }
+    let probs = softmax(&scores);
+    matmul(&probs, v)
+}
+
+pub fn transpose2(a: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.data()[i * n + j];
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// Mean over all but the last axis -> (1, D).
+pub fn mean_rows(a: &Tensor) -> Tensor {
+    let d = *a.shape().last().unwrap();
+    let rows = a.len() / d;
+    let mut out = vec![0f32; d];
+    for r in 0..rows {
+        for j in 0..d {
+            out[j] += a.data()[r * d + j];
+        }
+    }
+    for x in &mut out {
+        *x /= rows as f32;
+    }
+    Tensor::new(vec![1, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(matmul(&a, &i), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let a = Tensor::randn(vec![4, 8], 3);
+        let s = softmax(&a);
+        for row in s.data().chunks(8) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let a = Tensor::randn(vec![3, 16], 5);
+        let g = Tensor::new(vec![16], vec![1.0; 16]);
+        let b = Tensor::new(vec![16], vec![0.0; 16]);
+        let o = layernorm(&a, &g, &b, 1e-5);
+        for row in o.data().chunks(16) {
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let a = Tensor::new(vec![2, 3], vec![0.; 6]);
+        let b = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let o = binary(&a, &b, |x, y| x + y);
+        assert_eq!(o.data(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Tensor::randn(vec![3, 5], 1);
+        assert_eq!(transpose2(&transpose2(&a)), a);
+    }
+
+    #[test]
+    fn attention_uniform_is_mean() {
+        // q == 0 -> uniform probs -> output = mean of v rows
+        let q = Tensor::zeros(vec![1, 4]);
+        let k = Tensor::randn(vec![3, 4], 2);
+        let v = Tensor::new(vec![3, 4], (0..12).map(|i| i as f32).collect());
+        let o = attention(&q, &k, &v);
+        assert!((o.data()[0] - 4.0).abs() < 1e-5); // mean of 0,4,8
+    }
+}

@@ -1,0 +1,213 @@
+//! Operator-level FLOP estimation (paper Appendix A).
+//!
+//! | Op class           | FLOPs per node                                   |
+//! |--------------------|--------------------------------------------------|
+//! | Conv2D / Depthwise | 2·Cin·Hout·Wout·Kh·Kw·Cout (÷Cin groups for DW)  |
+//! | MatMul / Dense     | 2·M·N·K                                          |
+//! | Elementwise        | output_size                                      |
+//! | Pooling / Reduce   | Hout·Wout·Kh·Kw (per channel·batch)              |
+//! | Misc. / Other      | 0 (shape plumbing)                               |
+//!
+//! Dynamic dims are counted at their upper bound — the delegate cost
+//! model (§3.1) wants the worst case, and the simulator rescales by the
+//! drawn fill factor at run time.
+
+use crate::graph::{Graph, NodeId, OpClass, OpKind};
+
+/// Estimated FLOPs for one node at worst-case (max) shapes.
+pub fn node_flops(g: &Graph, id: NodeId) -> u64 {
+    let n = g.node(id);
+    let out_numel = |i: usize| -> u64 {
+        n.outputs
+            .get(i)
+            .map(|&t| g.tensor_info(t).numel_max() as u64)
+            .unwrap_or(0)
+    };
+    let in_numel = |i: usize| -> u64 {
+        n.inputs
+            .get(i)
+            .map(|&t| g.tensor_info(t).numel_max() as u64)
+            .unwrap_or(0)
+    };
+    match &n.kind {
+        OpKind::Conv2D { kh, kw, .. } => {
+            // out: (N, Ho, Wo, Cout); weights: in[1] = (kh, kw, Cin, Cout)
+            let cin = conv_cin(g, id);
+            2 * out_numel(0) * (*kh as u64) * (*kw as u64) * cin
+        }
+        OpKind::DepthwiseConv2D { kh, kw, .. } => {
+            2 * out_numel(0) * (*kh as u64) * (*kw as u64)
+        }
+        OpKind::FullyConnected | OpKind::MatMul => {
+            // out (…, M, N); the contraction length K comes from input 0's
+            // last dim.
+            let k = n
+                .inputs
+                .first()
+                .and_then(|&t| g.tensor_info(t).shape.last().map(|d| d.max() as u64))
+                .unwrap_or(1);
+            2 * out_numel(0) * k
+        }
+        OpKind::Attention { .. } => {
+            // QK^T + PV over (T, D): 4·T·T·D — the quadratic part only;
+            // projections appear as separate MatMul nodes.
+            let t_d = out_numel(0); // (T, D)
+            let t = n
+                .outputs
+                .first()
+                .map(|&o| g.tensor_info(o).shape.first().map(|d| d.max()).unwrap_or(1))
+                .unwrap_or(1) as u64;
+            4 * t_d * t
+        }
+        k if k.class() == OpClass::Elementwise => out_numel(0),
+        OpKind::Softmax => 5 * out_numel(0),
+        OpKind::LayerNorm => 8 * out_numel(0),
+        OpKind::AvgPool { k, .. } | OpKind::MaxPool { k, .. } => {
+            out_numel(0) * (*k as u64) * (*k as u64)
+        }
+        OpKind::Mean | OpKind::Sum => in_numel(0),
+        k if k.class() == OpClass::Shape => 0,
+        // dynamic ops: small constant workload (paper: "assigned a small
+        // constant workload")
+        OpKind::NonMaxSuppression => 512 * 1024,
+        OpKind::BeamSearchStep => 256 * 1024,
+        OpKind::EmbeddingLookup => out_numel(0),
+        OpKind::If | OpKind::While => 1024,
+        _ => 0,
+    }
+}
+
+fn conv_cin(g: &Graph, id: NodeId) -> u64 {
+    let n = g.node(id);
+    // Input activation is (N, H, W, Cin) — last dim.
+    n.inputs
+        .first()
+        .and_then(|&t| g.tensor_info(t).shape.last().map(|d| d.max() as u64))
+        .unwrap_or(1)
+}
+
+/// Sum of node FLOPs over a set of nodes.
+pub fn region_flops(g: &Graph, nodes: &[NodeId]) -> u64 {
+    nodes.iter().map(|&id| node_flops(g, id)).sum()
+}
+
+/// Total graph FLOPs.
+pub fn graph_flops(g: &Graph) -> u64 {
+    g.nodes().iter().map(|n| node_flops(g, n.id)).sum()
+}
+
+/// Boundary transfer bytes of a node set S: tensors crossing ∂S
+/// (inputs produced outside S + outputs consumed outside S), per §3.1.
+pub fn boundary_bytes(g: &Graph, nodes: &[NodeId]) -> u64 {
+    let in_set = |id: NodeId| nodes.contains(&id);
+    let mut seen = std::collections::HashSet::new();
+    let mut total = 0u64;
+    for &id in nodes {
+        let n = g.node(id);
+        for &t in &n.inputs {
+            let from_outside = g.producer(t).map(|p| !in_set(p)).unwrap_or(true);
+            if from_outside && seen.insert(t) {
+                total += g.tensor_info(t).byte_size_max() as u64;
+            }
+        }
+        for &t in &n.outputs {
+            let read_outside = g.consumers(t).iter().any(|&c| !in_set(c));
+            if read_outside && seen.insert(t) {
+                total += g.tensor_info(t).byte_size_max() as u64;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, Dim, OpKind};
+
+    #[test]
+    fn conv_flops_formula() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[1, 8, 8, 16], "x");
+        let w = g.tensor(&[3, 3, 16, 32], "w");
+        let y = g.tensor(&[1, 8, 8, 32], "y");
+        let id = g.add_node("c", OpKind::Conv2D { kh: 3, kw: 3, stride: 1 }, vec![x, w], vec![y]);
+        // 2 * (1*8*8*32) * 3*3*16
+        assert_eq!(node_flops(&g, id), 2 * 2048 * 9 * 16);
+    }
+
+    #[test]
+    fn matmul_flops_formula() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[4, 8], "x");
+        let w = g.tensor(&[8, 6], "w");
+        let y = g.tensor(&[4, 6], "y");
+        let id = g.add_node("m", OpKind::MatMul, vec![x, w], vec![y]);
+        assert_eq!(node_flops(&g, id), 2 * 4 * 6 * 8);
+    }
+
+    #[test]
+    fn elementwise_is_output_size() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[10, 10], "x");
+        let y = g.tensor(&[10, 10], "y");
+        let z = g.tensor(&[10, 10], "z");
+        let id = g.add_node("a", OpKind::Add, vec![x, y], vec![z]);
+        assert_eq!(node_flops(&g, id), 100);
+    }
+
+    #[test]
+    fn shape_ops_are_free() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[10, 10], "x");
+        let y = g.tensor(&[100], "y");
+        let id = g.add_node("r", OpKind::Reshape, vec![x], vec![y]);
+        assert_eq!(node_flops(&g, id), 0);
+    }
+
+    #[test]
+    fn dynamic_dims_use_upper_bound() {
+        let mut g = Graph::new("t");
+        let x = g.add_tensor(
+            vec![Dim::Dynamic { max: 16 }, Dim::Static(8)],
+            DType::F32,
+            "x",
+        );
+        let w = g.tensor(&[8, 6], "w");
+        let y = g.add_tensor(
+            vec![Dim::Dynamic { max: 16 }, Dim::Static(6)],
+            DType::F32,
+            "y",
+        );
+        let id = g.add_node("m", OpKind::MatMul, vec![x, w], vec![y]);
+        assert_eq!(node_flops(&g, id), 2 * 16 * 6 * 8);
+    }
+
+    #[test]
+    fn boundary_bytes_diamond() {
+        let mut g = Graph::new("t");
+        let t0 = g.tensor(&[4], "in"); // 16 B
+        let ta = g.tensor(&[8], "a"); // 32 B
+        let tb = g.tensor(&[2], "b"); // 8 B
+        g.add_node("a", OpKind::Relu, vec![t0], vec![ta]);
+        let nb = g.add_node("b", OpKind::Relu, vec![ta], vec![tb]);
+        let tc = g.tensor(&[2], "c");
+        let nc = g.add_node("c", OpKind::Relu, vec![tb], vec![tc]);
+        // region {b}: boundary = ta (in) + tb (out to c)
+        assert_eq!(boundary_bytes(&g, &[nb]), 32 + 8);
+        // region {b, c}: boundary = ta in + tc (graph output, no consumer)
+        assert_eq!(boundary_bytes(&g, &[nb, nc]), 32);
+    }
+
+    #[test]
+    fn region_is_sum() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[10], "x");
+        let y = g.tensor(&[10], "y");
+        let z = g.tensor(&[10], "z");
+        let n1 = g.add_node("r1", OpKind::Relu, vec![x], vec![y]);
+        let n2 = g.add_node("r2", OpKind::Relu, vec![y], vec![z]);
+        assert_eq!(region_flops(&g, &[n1, n2]), 20);
+        assert_eq!(graph_flops(&g), 20);
+    }
+}

@@ -1,0 +1,357 @@
+//! The computation DAG: nodes (operations) + edges (tensor deps).
+//!
+//! This is the substrate every Parallax stage operates on: delegate
+//! partitioning walks it, branch extraction re-labels it, the memory
+//! planner reads tensor liveness off its topological order, and the
+//! simulator executes it.  All traversals are O(|V|+|E|), matching the
+//! complexity the paper claims for its analyses.
+
+use std::collections::HashMap;
+
+use super::op::OpKind;
+use super::tensor::{DType, Dim, TensorId, TensorInfo};
+
+/// Unique node identifier within a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// One operation in the DAG.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<TensorId>,
+    pub outputs: Vec<TensorId>,
+    /// L2 program this node anchors, if any.  When the real-execution
+    /// engine reaches a node with a program hint it invokes the AOT
+    /// artifact for the whole fused block this node represents; nodes
+    /// covered by someone else's hint carry `fused_into`.
+    pub program: Option<String>,
+    /// Set when this node's computation is subsumed by another node's
+    /// program artifact (real execution skips it; analysis still sees it).
+    pub fused_into: Option<NodeId>,
+}
+
+/// A computation graph (DAG).
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub name: String,
+    nodes: Vec<Node>,
+    tensors: Vec<TensorInfo>,
+    /// producer[tensor] = node that writes it (None for graph inputs).
+    producer: Vec<Option<NodeId>>,
+    /// consumers[tensor] = nodes that read it.
+    consumers: Vec<Vec<NodeId>>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), ..Default::default() }
+    }
+
+    // -- construction ---------------------------------------------------
+
+    /// Add a tensor; returns its id.
+    pub fn add_tensor(&mut self, shape: Vec<Dim>, dtype: DType, label: impl Into<String>) -> TensorId {
+        let id = TensorId(self.tensors.len() as u32);
+        self.tensors.push(TensorInfo { id, shape, dtype, label: label.into() });
+        self.producer.push(None);
+        self.consumers.push(Vec::new());
+        id
+    }
+
+    /// Convenience: all-static f32 tensor.
+    pub fn tensor(&mut self, dims: &[usize], label: &str) -> TensorId {
+        self.add_tensor(dims.iter().map(|&d| Dim::Static(d)).collect(), DType::F32, label)
+    }
+
+    /// Add a node; returns its id.  Panics on dangling tensor ids or
+    /// double-produced tensors (DAG property).
+    pub fn add_node(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        for &t in inputs.iter().chain(outputs.iter()) {
+            assert!((t.0 as usize) < self.tensors.len(), "dangling tensor {t:?}");
+        }
+        for &t in &outputs {
+            assert!(
+                self.producer[t.0 as usize].is_none(),
+                "tensor {t:?} already produced"
+            );
+            self.producer[t.0 as usize] = Some(id);
+        }
+        for &t in &inputs {
+            self.consumers[t.0 as usize].push(id);
+        }
+        self.nodes.push(Node {
+            id,
+            name: name.into(),
+            kind,
+            inputs,
+            outputs,
+            program: None,
+            fused_into: None,
+        });
+        id
+    }
+
+    /// Attach an L2 program hint to a node.
+    pub fn set_program(&mut self, node: NodeId, program: impl Into<String>) {
+        self.nodes[node.0 as usize].program = Some(program.into());
+    }
+
+    /// Mark a node as fused into another's program artifact.
+    pub fn set_fused_into(&mut self, node: NodeId, anchor: NodeId) {
+        self.nodes[node.0 as usize].fused_into = Some(anchor);
+    }
+
+    // -- accessors --------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn tensor_info(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id.0 as usize]
+    }
+
+    pub fn tensors(&self) -> &[TensorInfo] {
+        &self.tensors
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.consumers.iter().map(Vec::len).sum()
+    }
+
+    /// Node that produces a tensor (None for graph inputs/consts fed in).
+    pub fn producer(&self, t: TensorId) -> Option<NodeId> {
+        self.producer[t.0 as usize]
+    }
+
+    /// Nodes that consume a tensor.
+    pub fn consumers(&self, t: TensorId) -> &[NodeId] {
+        &self.consumers[t.0 as usize]
+    }
+
+    /// Predecessor node ids (dedup'd, order-preserving).
+    pub fn preds(&self, id: NodeId) -> Vec<NodeId> {
+        let mut seen = Vec::new();
+        for &t in &self.node(id).inputs {
+            if let Some(p) = self.producer(t) {
+                if !seen.contains(&p) {
+                    seen.push(p);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Successor node ids (dedup'd, order-preserving).
+    pub fn succs(&self, id: NodeId) -> Vec<NodeId> {
+        let mut seen = Vec::new();
+        for &t in &self.node(id).outputs {
+            for &c in self.consumers(t) {
+                if !seen.contains(&c) {
+                    seen.push(c);
+                }
+            }
+        }
+        seen
+    }
+
+    /// In-degree in node space.
+    pub fn in_degree(&self, id: NodeId) -> usize {
+        self.preds(id).len()
+    }
+
+    /// Out-degree in node space.
+    pub fn out_degree(&self, id: NodeId) -> usize {
+        self.succs(id).len()
+    }
+
+    /// Whether any input or output tensor has a dynamic dim.
+    pub fn node_has_dynamic_shape(&self, id: NodeId) -> bool {
+        let n = self.node(id);
+        n.inputs
+            .iter()
+            .chain(n.outputs.iter())
+            .any(|&t| self.tensor_info(t).has_dynamic_dim())
+    }
+
+    // -- traversal ---------------------------------------------------------
+
+    /// Kahn topological order.  Returns None if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        for node in &self.nodes {
+            indeg[node.id.0 as usize] = self.in_degree(node.id);
+        }
+        let mut queue: std::collections::VecDeque<NodeId> = (0..n)
+            .filter(|&i| indeg[i] == 0)
+            .map(|i| NodeId(i as u32))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for v in self.succs(u) {
+                indeg[v.0 as usize] -= 1;
+                if indeg[v.0 as usize] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        (order.len() == n).then_some(order)
+    }
+
+    /// Validate DAG invariants; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.topo_order().is_none() {
+            problems.push("graph has a cycle".to_string());
+        }
+        for t in &self.tensors {
+            let produced = self.producer[t.id.0 as usize].is_some();
+            let consumed = !self.consumers[t.id.0 as usize].is_empty();
+            if !produced && !consumed {
+                problems.push(format!("orphan tensor {} ({:?})", t.label, t.id));
+            }
+        }
+        for node in &self.nodes {
+            if node.outputs.is_empty() && !matches!(node.kind, OpKind::Output) {
+                problems.push(format!("node {} has no outputs", node.name));
+            }
+        }
+        problems
+    }
+
+    // -- export -------------------------------------------------------------
+
+    /// Graphviz DOT text (for debugging / the paper's Fig. 1-style views).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name);
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "  n{} [label=\"{}\\n{}\"];\n",
+                n.id.0,
+                n.name,
+                n.kind.mnemonic()
+            ));
+        }
+        for n in &self.nodes {
+            for v in self.succs(n.id) {
+                s.push_str(&format!("  n{} -> n{};\n", n.id.0, v.0));
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+
+    /// Summary counts by op class (debugging; Table 7 uses partition data).
+    pub fn class_histogram(&self) -> HashMap<&'static str, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            *h.entry(n.kind.mnemonic()).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// a -> b -> d, a -> c -> d (diamond)
+    fn diamond() -> Graph {
+        let mut g = Graph::new("diamond");
+        let t0 = g.tensor(&[4], "in");
+        let ta = g.tensor(&[4], "a_out");
+        let tb = g.tensor(&[4], "b_out");
+        let tc = g.tensor(&[4], "c_out");
+        let td = g.tensor(&[4], "d_out");
+        g.add_node("a", OpKind::Relu, vec![t0], vec![ta]);
+        g.add_node("b", OpKind::Relu, vec![ta], vec![tb]);
+        g.add_node("c", OpKind::Silu, vec![ta], vec![tc]);
+        g.add_node("d", OpKind::Add, vec![tb, tc], vec![td]);
+        g
+    }
+
+    #[test]
+    fn degrees_and_topo() {
+        let g = diamond();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.in_degree(NodeId(0)), 0);
+        assert_eq!(g.out_degree(NodeId(0)), 2);
+        assert_eq!(g.in_degree(NodeId(3)), 2);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order.len(), 4);
+        let pos: Vec<usize> = (0..4)
+            .map(|i| order.iter().position(|&n| n == NodeId(i)).unwrap())
+            .collect();
+        assert!(pos[0] < pos[1] && pos[0] < pos[2]);
+        assert!(pos[1] < pos[3] && pos[2] < pos[3]);
+    }
+
+    #[test]
+    fn validate_clean_graph() {
+        assert!(diamond().validate().is_empty());
+    }
+
+    #[test]
+    fn orphan_tensor_detected() {
+        let mut g = diamond();
+        g.tensor(&[1], "orphan");
+        assert!(!g.validate().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "already produced")]
+    fn double_producer_panics() {
+        let mut g = Graph::new("bad");
+        let t0 = g.tensor(&[1], "in");
+        let t1 = g.tensor(&[1], "x");
+        g.add_node("a", OpKind::Relu, vec![t0], vec![t1]);
+        g.add_node("b", OpKind::Relu, vec![t0], vec![t1]);
+    }
+
+    #[test]
+    fn dynamic_shape_detection() {
+        let mut g = Graph::new("dyn");
+        let t0 = g.add_tensor(
+            vec![Dim::Static(1), Dim::Dynamic { max: 100 }],
+            DType::F32,
+            "boxes",
+        );
+        let t1 = g.tensor(&[1], "out");
+        let n = g.add_node("nms", OpKind::NonMaxSuppression, vec![t0], vec![t1]);
+        assert!(g.node_has_dynamic_shape(n));
+    }
+
+    #[test]
+    fn dot_export_mentions_nodes() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 -> n1"));
+    }
+
+    #[test]
+    fn edge_count() {
+        // a->b, a->c (tensor ta consumed twice = 2 edges), b->d, c->d + input edge t0->a
+        let g = diamond();
+        assert_eq!(g.num_edges(), 5);
+    }
+}

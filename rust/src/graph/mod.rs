@@ -1,0 +1,15 @@
+//! Computation-graph IR: tensors, operators, and the DAG.
+//!
+//! Everything Parallax does — delegate partitioning (§3.1), branch and
+//! layer extraction (Algorithms 1–4), arena planning (§3.2) and
+//! resource-constrained scheduling (§3.3) — is a pure function of this
+//! IR.  Model weights never appear here: the paper's framework is
+//! non-invasive and operates on structure + metadata only.
+
+mod dag;
+mod op;
+mod tensor;
+
+pub use dag::{Graph, Node, NodeId};
+pub use op::{OpClass, OpKind};
+pub use tensor::{DType, Dim, TensorId, TensorInfo};

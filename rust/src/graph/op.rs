@@ -1,0 +1,198 @@
+//! Operator vocabulary, mirroring the TFLite op classes the paper's
+//! Appendix A groups for FLOP estimation.
+
+/// Operator kind + the attributes the analyses need.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    // -- compute-heavy (delegateable when shapes are static) ----------
+    /// kh, kw, stride; channels come from the tensor shapes.
+    Conv2D { kh: usize, kw: usize, stride: usize },
+    DepthwiseConv2D { kh: usize, kw: usize, stride: usize },
+    /// Dense / FullyConnected; transpose flags omitted (row-major).
+    FullyConnected,
+    MatMul,
+    /// Fused scaled-dot-product attention (appears post-fusion in
+    /// transformer graphs).
+    Attention { heads: usize },
+
+    // -- elementwise ---------------------------------------------------
+    Add,
+    Sub,
+    Mul,
+    Maximum,
+    Relu,
+    Silu,
+    Gelu,
+    Tanh,
+    Logistic,
+
+    // -- normalisation / reduction -------------------------------------
+    Softmax,
+    LayerNorm,
+    AvgPool { k: usize, stride: usize },
+    MaxPool { k: usize, stride: usize },
+    Mean,
+    Sum,
+
+    // -- shape plumbing (0-FLOP) ----------------------------------------
+    Reshape,
+    Transpose,
+    Slice,
+    Concat,
+    Split { ways: usize },
+    Pad,
+    Gather,
+    Cast,
+
+    // -- dynamic / control flow (never delegateable) ---------------------
+    /// Conditional subgraph execution.
+    If,
+    /// Loop (e.g. beam-search decode steps).
+    While,
+    /// Produces a dynamically-shaped output (e.g. NonMaxSuppression).
+    NonMaxSuppression,
+    /// Dynamic-length decode step (beam search).
+    BeamSearchStep,
+    /// Embedding lookup with dynamic sequence length.
+    EmbeddingLookup,
+
+    // -- sources/sinks -----------------------------------------------------
+    Input,
+    Output,
+    Const,
+}
+
+/// Coarse delegation class — drives both NNAPI-style support checks and
+/// the Appendix A FLOP grouping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    ConvLike,
+    MatMulLike,
+    Elementwise,
+    PoolReduce,
+    Shape,
+    Dynamic,
+    SourceSink,
+}
+
+impl OpKind {
+    pub fn class(&self) -> OpClass {
+        use OpKind::*;
+        match self {
+            Conv2D { .. } | DepthwiseConv2D { .. } => OpClass::ConvLike,
+            FullyConnected | MatMul | Attention { .. } => OpClass::MatMulLike,
+            Add | Sub | Mul | Maximum | Relu | Silu | Gelu | Tanh | Logistic => {
+                OpClass::Elementwise
+            }
+            Softmax | LayerNorm | AvgPool { .. } | MaxPool { .. } | Mean | Sum => {
+                OpClass::PoolReduce
+            }
+            Reshape | Transpose | Slice | Concat | Split { .. } | Pad | Gather | Cast => {
+                OpClass::Shape
+            }
+            If | While | NonMaxSuppression | BeamSearchStep | EmbeddingLookup => {
+                OpClass::Dynamic
+            }
+            Input | Output | Const => OpClass::SourceSink,
+        }
+    }
+
+    /// Whether an accelerator delegate supports this op *kind* at all
+    /// (shape dynamism is checked separately — a supported kind with a
+    /// dynamic input still falls back).  Mirrors the NNAPI 1.3 operator
+    /// set: no LayerNorm, no GELU, no fused attention — the boundaries
+    /// that fragment transformer graphs into many small delegates (the
+    /// paper's core fallback story).
+    pub fn delegate_supported(&self) -> bool {
+        if matches!(
+            self,
+            OpKind::LayerNorm | OpKind::Gelu | OpKind::Attention { .. }
+        ) {
+            return false;
+        }
+        !matches!(
+            self.class(),
+            OpClass::Dynamic | OpClass::SourceSink
+        )
+    }
+
+    /// Control-flow ops are Split-Merge barriers for branch extraction
+    /// (§3.1: "control-flow operators are marked Split-Merge to ensure
+    /// sequential correctness").
+    pub fn is_control_flow(&self) -> bool {
+        matches!(self, OpKind::If | OpKind::While | OpKind::BeamSearchStep)
+    }
+
+    /// Short mnemonic for DOT export / tables.
+    pub fn mnemonic(&self) -> &'static str {
+        use OpKind::*;
+        match self {
+            Conv2D { .. } => "conv",
+            DepthwiseConv2D { .. } => "dwconv",
+            FullyConnected => "fc",
+            MatMul => "matmul",
+            Attention { .. } => "attn",
+            Add => "add",
+            Sub => "sub",
+            Mul => "mul",
+            Maximum => "max",
+            Relu => "relu",
+            Silu => "silu",
+            Gelu => "gelu",
+            Tanh => "tanh",
+            Logistic => "sigmoid",
+            Softmax => "softmax",
+            LayerNorm => "lnorm",
+            AvgPool { .. } => "avgpool",
+            MaxPool { .. } => "maxpool",
+            Mean => "mean",
+            Sum => "sum",
+            Reshape => "reshape",
+            Transpose => "transpose",
+            Slice => "slice",
+            Concat => "concat",
+            Split { .. } => "split",
+            Pad => "pad",
+            Gather => "gather",
+            Cast => "cast",
+            If => "if",
+            While => "while",
+            NonMaxSuppression => "nms",
+            BeamSearchStep => "beam",
+            EmbeddingLookup => "embed",
+            Input => "input",
+            Output => "output",
+            Const => "const",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_consistent() {
+        assert_eq!(OpKind::Conv2D { kh: 3, kw: 3, stride: 1 }.class(), OpClass::ConvLike);
+        assert_eq!(OpKind::MatMul.class(), OpClass::MatMulLike);
+        assert_eq!(OpKind::Relu.class(), OpClass::Elementwise);
+        assert_eq!(OpKind::Reshape.class(), OpClass::Shape);
+        assert_eq!(OpKind::While.class(), OpClass::Dynamic);
+    }
+
+    #[test]
+    fn dynamic_ops_never_delegate() {
+        assert!(!OpKind::NonMaxSuppression.delegate_supported());
+        assert!(!OpKind::While.delegate_supported());
+        assert!(!OpKind::Input.delegate_supported());
+        assert!(OpKind::MatMul.delegate_supported());
+        assert!(OpKind::Softmax.delegate_supported());
+    }
+
+    #[test]
+    fn control_flow_flags() {
+        assert!(OpKind::If.is_control_flow());
+        assert!(OpKind::While.is_control_flow());
+        assert!(!OpKind::NonMaxSuppression.is_control_flow());
+    }
+}

@@ -1,0 +1,120 @@
+//! Tensor metadata: shapes with (optionally) dynamic dimensions.
+//!
+//! Parallax never touches tensor *values* during analysis — only
+//! shapes, dtypes and liveness.  Dynamic dimensions (the paper's §3.2
+//! "Handling Dynamic Tensor Shapes") carry an upper bound so static
+//! peak-memory estimation stays safe, and the simulator draws a
+//! concrete value per inference to model runtime variability.
+
+/// One dimension of a tensor shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dim {
+    /// Statically known.
+    Static(usize),
+    /// Resolved only at runtime; `max` bounds memory planning.
+    Dynamic { max: usize },
+}
+
+impl Dim {
+    /// Upper bound (the value used for arena sizing).
+    pub fn max(&self) -> usize {
+        match *self {
+            Dim::Static(n) => n,
+            Dim::Dynamic { max } => max,
+        }
+    }
+
+    /// Concrete value given a dynamic-fill factor in (0, 1].
+    pub fn resolve(&self, fill: f64) -> usize {
+        match *self {
+            Dim::Static(n) => n,
+            Dim::Dynamic { max } => ((max as f64 * fill).ceil() as usize).max(1),
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, Dim::Dynamic { .. })
+    }
+}
+
+/// Element type.  The zoo models use F32/F16/INT8 per Table 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn byte_width(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// Unique tensor identifier within a graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+/// Static tensor metadata.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub shape: Vec<Dim>,
+    pub dtype: DType,
+    /// Human-readable label (op output name), for DOT export/debugging.
+    pub label: String,
+}
+
+impl TensorInfo {
+    /// Worst-case element count.
+    pub fn numel_max(&self) -> usize {
+        self.shape.iter().map(Dim::max).product()
+    }
+
+    /// Worst-case byte size — what the memory planner reserves.
+    pub fn byte_size_max(&self) -> usize {
+        self.numel_max() * self.dtype.byte_width()
+    }
+
+    /// Concrete byte size for a dynamic-fill draw.
+    pub fn byte_size_at(&self, fill: f64) -> usize {
+        self.shape.iter().map(|d| d.resolve(fill)).product::<usize>()
+            * self.dtype.byte_width()
+    }
+
+    pub fn has_dynamic_dim(&self) -> bool {
+        self.shape.iter().any(Dim::is_dynamic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim_resolution() {
+        assert_eq!(Dim::Static(8).resolve(0.1), 8);
+        assert_eq!(Dim::Dynamic { max: 100 }.resolve(0.25), 25);
+        assert_eq!(Dim::Dynamic { max: 100 }.resolve(0.001), 1);
+        assert_eq!(Dim::Dynamic { max: 100 }.max(), 100);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        let t = TensorInfo {
+            id: TensorId(0),
+            shape: vec![Dim::Static(2), Dim::Dynamic { max: 10 }],
+            dtype: DType::F16,
+            label: "t".into(),
+        };
+        assert_eq!(t.numel_max(), 20);
+        assert_eq!(t.byte_size_max(), 40);
+        assert_eq!(t.byte_size_at(0.5), 2 * 5 * 2);
+        assert!(t.has_dynamic_dim());
+    }
+}

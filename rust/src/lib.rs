@@ -1,0 +1,40 @@
+//! # Parallax
+//!
+//! Reproduction of *"Parallax: Runtime Parallelization for Operator
+//! Fallbacks in Heterogeneous Edge Systems"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: non-invasive graph
+//!   analysis ([`partition`], [`branch`]), branch-aware memory
+//!   management ([`memory`]), resource-constrained parallel scheduling
+//!   ([`sched`]), plus the substrates it needs: a graph IR ([`graph`]),
+//!   a model zoo ([`models`]), simulated edge SoCs ([`device`]), a
+//!   discrete-event executor ([`sim`]), baseline frameworks
+//!   ([`baselines`]), a real PJRT execution engine ([`exec`],
+//!   [`runtime`]) and a serving front-end ([`serve`]).
+//! * **L2** — `python/compile/model.py`: JAX branch programs.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels, AOT-lowered to
+//!   HLO text that this crate loads via PJRT (`make artifacts`).
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod util;
+pub mod branch;
+pub mod config;
+pub mod device;
+pub mod eval;
+pub mod exec;
+pub mod flops;
+pub mod graph;
+pub mod memory;
+pub mod models;
+pub mod partition;
+pub mod runtime;
+pub mod sched;
+pub mod serve;
+pub mod sim;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

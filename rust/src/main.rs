@@ -1,0 +1,258 @@
+//! `parallax` — CLI for the Parallax reproduction.
+//!
+//! ```text
+//! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
+//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|all>
+//! parallax inspect --model whisper-tiny        # graph/branch/layer stats
+//! parallax serve --requests 64 --concurrency 8 # serving demo
+//! parallax smoke                               # PJRT round-trip check
+//! ```
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::config::{RawConfig, RunConfig};
+use parallax::device::SocProfile;
+use parallax::models::ModelKind;
+use parallax::partition::{partition, CostModel};
+use parallax::sched::SchedCfg;
+use parallax::sim::Mode;
+use parallax::util::cli::Args;
+use parallax::util::stats::summarize;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "eval" => cmd_eval(&args),
+        "inspect" => cmd_inspect(&args),
+        "serve" => cmd_serve(&args),
+        "smoke" => cmd_smoke(),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"parallax — runtime parallelization for operator fallbacks (paper repro)
+
+USAGE:
+  parallax run     --model <slug> --device <name> [--mode cpu|het]
+                   [--threads N] [--margin F] [--runs N] [--framework NAME]
+                   [--config file.toml]
+  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|all>
+  parallax inspect --model <slug> [--device <name>]
+  parallax serve   [--requests N] [--concurrency N] [--threads N]
+  parallax smoke
+
+models:  yolov8n whisper-tiny swinv2-tiny clip-text distilbert
+devices: pixel6 p30pro redmik50
+"#;
+
+fn run_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_raw(
+            &RawConfig::load(std::path::Path::new(path)).map_err(anyhow::Error::msg)?,
+        )
+        .map_err(anyhow::Error::msg)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = ModelKind::from_slug(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown model '{m}'"))?;
+    }
+    if let Some(d) = args.get("device") {
+        cfg.device =
+            SocProfile::by_name(d).ok_or_else(|| anyhow::anyhow!("unknown device '{d}'"))?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = match m {
+            "cpu" => Mode::CpuOnly,
+            "het" => Mode::Heterogeneous,
+            _ => anyhow::bail!("mode must be cpu|het"),
+        };
+    }
+    cfg.sched.max_threads = args.get_usize("threads", cfg.sched.max_threads);
+    cfg.sched.margin = args.get_f64("margin", cfg.sched.margin);
+    cfg.runs = args.get_usize("runs", cfg.runs);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = run_config(args)?;
+    let fw = match args.get_str("framework", "parallax") {
+        "ort" => Framework::Ort,
+        "executorch" | "et" => Framework::ExecuTorch,
+        "tflite" => Framework::TfLite,
+        _ => Framework::Parallax,
+    };
+    let pipe = match Pipeline::build(fw, cfg.model, &cfg.device, cfg.mode, cfg.sched) {
+        Ok(p) => p,
+        Err(e) => {
+            println!(
+                "{:?} on {} in {:?} mode: unsupported ({e:?})",
+                fw,
+                cfg.device.display_name(),
+                cfg.mode
+            );
+            return Ok(());
+        }
+    };
+    let results = pipe.run_protocol(cfg.runs + cfg.warmup, cfg.seed);
+    let timed = &results[cfg.warmup.min(results.len() - 1)..];
+    let lats: Vec<f64> = timed.iter().map(|r| r.latency_s * 1e3).collect();
+    let s = summarize(&lats).unwrap();
+    let peak = timed.iter().map(|r| r.peak_mem_bytes).max().unwrap();
+    let energy = timed.iter().map(|r| r.energy_j).sum::<f64>() / timed.len() as f64;
+    println!(
+        "{:?} | {} | {} | {:?} | threads={}",
+        fw,
+        cfg.model.display_name(),
+        cfg.device.display_name(),
+        cfg.mode,
+        cfg.sched.max_threads
+    );
+    println!(
+        "latency ms: min {:.1} / mean {:.1} / p95 {:.1} / max {:.1}   \
+         peak mem {:.1} MB   energy {:.1} mJ",
+        s.min,
+        s.mean,
+        s.p95,
+        s.max,
+        peak as f64 / 1e6,
+        energy * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    if which == "all" {
+        for name in parallax::eval::ALL_EXPERIMENTS {
+            println!("{}", parallax::eval::run(name).unwrap());
+        }
+        return Ok(());
+    }
+    match parallax::eval::run(which) {
+        Some(t) => {
+            println!("{t}");
+            Ok(())
+        }
+        None => anyhow::bail!("unknown experiment '{which}' (see --help)"),
+    }
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let cfg = run_config(args)?;
+    let g = cfg.model.build();
+    println!(
+        "model: {} ({} nodes, {} edges, {} tensors)",
+        cfg.model.display_name(),
+        g.num_nodes(),
+        g.num_edges(),
+        g.tensors().len()
+    );
+    println!(
+        "total FLOPs: {:.2} G",
+        parallax::flops::graph_flops(&g) as f64 / 1e9
+    );
+    for (label, cm) in [
+        (
+            "pre  (all CPU)",
+            CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+        ),
+        (
+            "post (naive delegation)",
+            CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        ),
+        ("parallax (cost model)", CostModel::default()),
+    ] {
+        let p = partition(&g, &cm);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let (layers, par, maxb) = plan.table7_metrics();
+        println!(
+            "  {label:<26} nodes={:<5} regions={:<3} branches={:<4} layers={:<4} \
+             par-layers={:<3} max-branches={}",
+            p.post_node_count(),
+            p.regions.len(),
+            plan.branches.len(),
+            layers,
+            par,
+            maxb
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Simulated-device executors behind the real request router (the
+    // real-engine serving demo is examples/serve_text_encoders.rs).
+    let n = args.get_usize("requests", 64);
+    let conc = args.get_usize("concurrency", 8);
+    let threads = args.get_usize("threads", 6);
+    let soc = SocProfile::pixel6();
+    let cfg = SchedCfg { max_threads: threads, ..SchedCfg::default() };
+
+    let mut server = parallax::serve::Server::new();
+    for model in [ModelKind::ClipText, ModelKind::DistilBert] {
+        let pipe = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, cfg)
+            .expect("cpu supported");
+        let mut rng = parallax::util::rng::Rng::new(7);
+        server.register(
+            model.slug(),
+            Box::new(parallax::serve::FnExecutor(move |seed| {
+                let fill = 0.15 + 0.85 * ((seed % 97) as f64 / 97.0);
+                let r = pipe.run(&mut rng, fill);
+                Ok((r.latency_s, r.energy_j))
+            })),
+        );
+    }
+    let report = server.run_load(&["clip-text", "distilbert"], n, conc, 11)?;
+    println!(
+        "served {n} requests at concurrency {conc}: {:.1} req/s (wall {:.2}s)",
+        report.throughput_rps, report.wall_s
+    );
+    for (model, s) in &report.latency {
+        println!(
+            "  {model:<12} p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms",
+            s.p50 * 1e3,
+            s.p95 * 1e3,
+            s.max * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_smoke() -> anyhow::Result<()> {
+    let dir = parallax::runtime::default_artifact_dir();
+    anyhow::ensure!(
+        parallax::runtime::artifacts_available(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let pool = parallax::runtime::RuntimePool::new(&dir, 1)?;
+    println!("manifest: {} programs", pool.manifest().len());
+    let t = parallax::runtime::Tensor::randn(vec![64, 64], 1);
+    let u = parallax::runtime::Tensor::randn(vec![64, 64], 2);
+    let out = pool.execute("matmul_64x64x64", vec![t.clone(), u.clone()])?;
+    let mut expect = vec![0f32; 64 * 64];
+    for i in 0..64 {
+        for k in 0..64 {
+            let a = t.data()[i * 64 + k];
+            for j in 0..64 {
+                expect[i * 64 + j] += a * u.data()[k * 64 + j];
+            }
+        }
+    }
+    let max_diff = out[0]
+        .data()
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("matmul_64x64x64 max |diff| vs host = {max_diff:.2e}");
+    anyhow::ensure!(max_diff < 1e-3, "numeric mismatch");
+    println!("three-layer pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,348 @@
+//! Arena allocators: offset-planning over tensor lifetimes.
+//!
+//! Three planners, matching the frameworks compared in Table 5:
+//!
+//! * [`plan_naive`] — one buffer per tensor, no reuse ("TFLite (Naive)").
+//! * [`plan_greedy_global`] — single global arena, best-fit offset
+//!   assignment over lifetimes (TFLite/ORT-style aggressive reuse; the
+//!   data-dependency coupling this creates is exactly what blocks
+//!   branch-level parallelism in the baselines).
+//! * [`BumpArena`] — Parallax's per-branch allocator: bump pointer +
+//!   first-fit free list with coalescing (§3.2 "In-Branch Memory
+//!   Reuse").  One instance per branch; instances are independent, so
+//!   concurrent branches never contend (no lock on the hot path).
+
+use super::liveness::Lifetime;
+
+/// Result of offset planning: arena size + per-tensor offsets.
+#[derive(Clone, Debug)]
+pub struct ArenaPlan {
+    pub arena_bytes: usize,
+    /// (lifetime index, offset)
+    pub offsets: Vec<usize>,
+}
+
+/// Alignment for all planners (TFLite uses 64).
+pub const ALIGN: usize = 64;
+
+fn align_up(x: usize) -> usize {
+    (x + ALIGN - 1) & !(ALIGN - 1)
+}
+
+/// One buffer per tensor: arena = Σ aligned sizes.
+pub fn plan_naive(lifetimes: &[Lifetime]) -> ArenaPlan {
+    let mut offsets = Vec::with_capacity(lifetimes.len());
+    let mut cur = 0usize;
+    for lt in lifetimes {
+        offsets.push(cur);
+        cur += align_up(lt.bytes);
+    }
+    ArenaPlan { arena_bytes: cur, offsets }
+}
+
+/// Greedy best-fit offset planner over lifetimes (the TFLite
+/// `SimpleMemoryArena` / ORT arena strategy): process tensors in
+/// decreasing size; place each at the lowest offset where it fits
+/// without overlapping any already-placed tensor with an intersecting
+/// lifetime.
+pub fn plan_greedy_global(lifetimes: &[Lifetime]) -> ArenaPlan {
+    let mut idx: Vec<usize> = (0..lifetimes.len()).collect();
+    idx.sort_by_key(|&i| std::cmp::Reverse(lifetimes[i].bytes));
+
+    let mut placed: Vec<(usize, usize, usize)> = Vec::new(); // (lt idx, offset, end)
+    let mut offsets = vec![0usize; lifetimes.len()];
+    let mut arena = 0usize;
+
+    for &i in &idx {
+        let li = &lifetimes[i];
+        let size = align_up(li.bytes);
+        // collect blocked intervals from lifetime-overlapping tensors
+        let mut blocked: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|(j, _, _)| {
+                let lj = &lifetimes[*j];
+                !(li.last_use < lj.def_pos || lj.last_use < li.def_pos)
+            })
+            .map(|&(_, off, end)| (off, end))
+            .collect();
+        blocked.sort_unstable();
+        // lowest gap that fits
+        let mut candidate = 0usize;
+        for (off, end) in blocked {
+            if candidate + size <= off {
+                break;
+            }
+            candidate = candidate.max(end);
+        }
+        offsets[i] = candidate;
+        placed.push((i, candidate, candidate + size));
+        arena = arena.max(candidate + size);
+    }
+    ArenaPlan { arena_bytes: arena, offsets }
+}
+
+/// Parallax per-branch bump-pointer arena with first-fit free list and
+/// coalescing (§3.2).  This is the *runtime* allocator — dynamic shapes
+/// allocate at their concrete (drawn) size, not the planner's
+/// worst-case bound, and resizes stay inside the owning branch's arena.
+#[derive(Debug, Default)]
+pub struct BumpArena {
+    /// High-water mark = arena size so far.
+    high: usize,
+    /// Free blocks (offset, size), sorted by offset, coalesced.
+    free: Vec<(usize, usize)>,
+    /// Live allocations (offset -> size) for validation.
+    live: std::collections::HashMap<usize, usize>,
+    /// Peak of the *live* byte total (≤ high).
+    live_bytes: usize,
+    peak_live: usize,
+}
+
+impl BumpArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `bytes`; returns the offset.
+    pub fn alloc(&mut self, bytes: usize) -> usize {
+        let size = align_up(bytes.max(1));
+        // first-fit over the free list
+        for k in 0..self.free.len() {
+            let (off, fsize) = self.free[k];
+            if fsize >= size {
+                if fsize == size {
+                    self.free.remove(k);
+                } else {
+                    self.free[k] = (off + size, fsize - size);
+                }
+                self.live.insert(off, size);
+                self.live_bytes += size;
+                self.peak_live = self.peak_live.max(self.live_bytes);
+                return off;
+            }
+        }
+        // bump
+        let off = self.high;
+        self.high += size;
+        self.live.insert(off, size);
+        self.live_bytes += size;
+        self.peak_live = self.peak_live.max(self.live_bytes);
+        off
+    }
+
+    /// Release an allocation back to the free list (coalescing).
+    pub fn free(&mut self, offset: usize) {
+        let size = self
+            .live
+            .remove(&offset)
+            .expect("freeing an offset that is not live");
+        self.live_bytes -= size;
+        let pos = self.free.partition_point(|&(o, _)| o < offset);
+        self.free.insert(pos, (offset, size));
+        // coalesce with next then prev
+        if pos + 1 < self.free.len() {
+            let (o, s) = self.free[pos];
+            let (on, sn) = self.free[pos + 1];
+            if o + s == on {
+                self.free[pos] = (o, s + sn);
+                self.free.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (op, sp) = self.free[pos - 1];
+            let (o, s) = self.free[pos];
+            if op + sp == o {
+                self.free[pos - 1] = (op, sp + s);
+                self.free.remove(pos);
+            }
+        }
+    }
+
+    /// Arena footprint (high-water mark).
+    pub fn footprint(&self) -> usize {
+        self.high
+    }
+
+    /// Peak concurrently-live bytes.
+    pub fn peak_live(&self) -> usize {
+        self.peak_live
+    }
+
+    /// Bytes currently live.
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    /// Number of live allocations.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Transfer this arena's free capacity to a fresh arena for a
+    /// non-concurrent branch (§3.2 "Cross-Arena Buffer Sharing"): the
+    /// new arena starts with this one's full extent as free space.
+    pub fn donate(self) -> BumpArena {
+        BumpArena {
+            high: self.high,
+            free: if self.high > 0 { vec![(0, self.high)] } else { vec![] },
+            live: Default::default(),
+            live_bytes: 0,
+            peak_live: 0,
+        }
+    }
+
+    /// Validate internal consistency (tests/debug).
+    pub fn check(&self) -> bool {
+        // free blocks sorted, non-overlapping, within high
+        let mut prev_end = 0usize;
+        for &(o, s) in &self.free {
+            if o < prev_end || o + s > self.high {
+                return false;
+            }
+            prev_end = o + s;
+        }
+        // live allocations don't overlap free blocks
+        for (&o, &s) in &self.live {
+            for &(fo, fs) in &self.free {
+                if o < fo + fs && fo < o + s {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Plan a branch arena by replaying lifetimes through a [`BumpArena`]
+/// in execution order — returns (footprint, offsets aligned to
+/// `lifetimes` order).  This is what the §3.3 estimator uses for M_i.
+pub fn plan_branch(lifetimes: &[Lifetime]) -> ArenaPlan {
+    // events in execution order
+    let n = lifetimes.len();
+    let mut arena = BumpArena::new();
+    let mut offsets = vec![0usize; n];
+    // sort def events by def_pos, frees by last_use
+    let mut defs: Vec<usize> = (0..n).collect();
+    defs.sort_by_key(|&i| lifetimes[i].def_pos);
+    let mut frees: Vec<usize> = (0..n).collect();
+    frees.sort_by_key(|&i| lifetimes[i].last_use);
+    let mut fi = 0;
+    for &i in &defs {
+        // release everything whose last_use < this def_pos
+        while fi < n && lifetimes[frees[fi]].last_use < lifetimes[i].def_pos {
+            if !lifetimes[frees[fi]].escapes {
+                arena.free(offsets[frees[fi]]);
+            }
+            fi += 1;
+        }
+        offsets[i] = arena.alloc(lifetimes[i].bytes);
+    }
+    ArenaPlan { arena_bytes: arena.footprint(), offsets }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::TensorId;
+
+    fn lt(def: usize, last: usize, bytes: usize) -> Lifetime {
+        Lifetime { tensor: TensorId(0), def_pos: def, last_use: last, escapes: false, bytes }
+    }
+
+    #[test]
+    fn naive_is_sum() {
+        let p = plan_naive(&[lt(0, 1, 100), lt(1, 2, 100)]);
+        assert_eq!(p.arena_bytes, 2 * 128);
+    }
+
+    #[test]
+    fn greedy_reuses_disjoint_lifetimes() {
+        // a: [0,1], b: [2,3] -> same offset
+        let p = plan_greedy_global(&[lt(0, 1, 100), lt(2, 3, 100)]);
+        assert_eq!(p.arena_bytes, 128);
+        assert_eq!(p.offsets[0], p.offsets[1]);
+    }
+
+    #[test]
+    fn greedy_never_overlaps_live_tensors() {
+        let lts = vec![lt(0, 2, 64), lt(1, 3, 64), lt(2, 4, 64), lt(5, 6, 192)];
+        let p = plan_greedy_global(&lts);
+        for i in 0..lts.len() {
+            for j in (i + 1)..lts.len() {
+                let overlap_life = !(lts[i].last_use < lts[j].def_pos
+                    || lts[j].last_use < lts[i].def_pos);
+                let (oi, si) = (p.offsets[i], align_up(lts[i].bytes));
+                let (oj, sj) = (p.offsets[j], align_up(lts[j].bytes));
+                let overlap_mem = oi < oj + sj && oj < oi + si;
+                assert!(!(overlap_life && overlap_mem), "{i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn bump_arena_reuses_freed_blocks() {
+        let mut a = BumpArena::new();
+        let o1 = a.alloc(100);
+        let _o2 = a.alloc(50);
+        a.free(o1);
+        let o3 = a.alloc(80); // fits in o1's 128-byte block
+        assert_eq!(o3, o1);
+        assert!(a.check());
+        assert_eq!(a.footprint(), 128 + 64);
+    }
+
+    #[test]
+    fn bump_arena_coalesces() {
+        let mut a = BumpArena::new();
+        let o1 = a.alloc(64);
+        let o2 = a.alloc(64);
+        let o3 = a.alloc(64);
+        a.free(o1);
+        a.free(o2); // coalesce with o1
+        let big = a.alloc(128);
+        assert_eq!(big, o1);
+        assert!(a.check());
+        a.free(o3);
+        a.free(big);
+        assert_eq!(a.live_count(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not live")]
+    fn double_free_panics() {
+        let mut a = BumpArena::new();
+        let o = a.alloc(10);
+        a.free(o);
+        a.free(o);
+    }
+
+    #[test]
+    fn donate_passes_capacity() {
+        let mut a = BumpArena::new();
+        let o = a.alloc(1000);
+        a.free(o);
+        let mut b = a.donate();
+        let o2 = b.alloc(500);
+        assert_eq!(o2, 0);
+        assert_eq!(b.footprint(), 1024); // no growth needed
+    }
+
+    #[test]
+    fn plan_branch_between_naive_and_peak() {
+        let lts = vec![lt(0, 1, 100), lt(1, 2, 100), lt(2, 3, 100), lt(3, 4, 100)];
+        let b = plan_branch(&lts);
+        let n = plan_naive(&lts);
+        // chain: at most 2 live at once -> ~2 slots
+        assert!(b.arena_bytes <= n.arena_bytes);
+        assert_eq!(b.arena_bytes, 2 * 128);
+    }
+
+    #[test]
+    fn escaping_tensors_not_freed() {
+        let mut lts = vec![lt(0, 0, 100), lt(1, 1, 100)];
+        lts[0].escapes = true;
+        let b = plan_branch(&lts);
+        // escape keeps slot 0 alive; second tensor needs a new slot
+        assert_eq!(b.arena_bytes, 2 * 128);
+    }
+}

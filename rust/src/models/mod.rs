@@ -1,0 +1,115 @@
+//! The model zoo: structurally faithful synthetic reconstructions of
+//! the paper's five benchmark DNNs (Table 2), plus micro graphs for
+//! tests.
+//!
+//! Parallax is weight-agnostic — every analysis consumes only DAG
+//! topology, op metadata, shapes and FLOPs — so a topology-faithful
+//! synthetic graph exercises the full pipeline exactly as the real
+//! model would (see DESIGN.md §Substitutions).  Node counts are
+//! calibrated against Table 7's "Pre" column.
+
+pub mod blocks;
+pub mod clip_text;
+pub mod distilbert;
+pub mod micro;
+pub mod swinv2_tiny;
+pub mod whisper_tiny;
+pub mod yolov8n;
+
+use crate::graph::Graph;
+
+/// The five paper models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Yolov8n,
+    WhisperTiny,
+    Swinv2Tiny,
+    ClipText,
+    DistilBert,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 5] = [
+        ModelKind::Yolov8n,
+        ModelKind::WhisperTiny,
+        ModelKind::Swinv2Tiny,
+        ModelKind::ClipText,
+        ModelKind::DistilBert,
+    ];
+
+    /// Paper's display name (Tables 3–7 row label).
+    pub fn display_name(&self) -> &'static str {
+        match self {
+            ModelKind::Yolov8n => "YOLOv8n",
+            ModelKind::WhisperTiny => "Whisper-Tiny",
+            ModelKind::Swinv2Tiny => "SwinV2-Tiny",
+            ModelKind::ClipText => "CLIP Text Encoder",
+            ModelKind::DistilBert => "DistilBERT",
+        }
+    }
+
+    /// CLI identifier.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            ModelKind::Yolov8n => "yolov8n",
+            ModelKind::WhisperTiny => "whisper-tiny",
+            ModelKind::Swinv2Tiny => "swinv2-tiny",
+            ModelKind::ClipText => "clip-text",
+            ModelKind::DistilBert => "distilbert",
+        }
+    }
+
+    pub fn from_slug(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|m| m.slug() == s)
+    }
+
+    /// Static weight bytes (Table 2 params × dtype width) — part of the
+    /// peak-memory accounting in Table 4.
+    pub fn weight_bytes(&self) -> u64 {
+        match self {
+            ModelKind::Yolov8n => 3_190_000 * 4,
+            ModelKind::WhisperTiny => 46_510_000, // INT8-quantised weights
+            ModelKind::Swinv2Tiny => 28_600_000 * 2, // FP16
+            ModelKind::ClipText => 63_170_000 * 4,
+            ModelKind::DistilBert => 66_960_000 * 4,
+        }
+    }
+
+    /// Build the computation graph.
+    pub fn build(&self) -> Graph {
+        match self {
+            ModelKind::Yolov8n => yolov8n::build(),
+            ModelKind::WhisperTiny => whisper_tiny::build(),
+            ModelKind::Swinv2Tiny => swinv2_tiny::build(),
+            ModelKind::ClipText => clip_text::build(),
+            ModelKind::DistilBert => distilbert::build(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for kind in ModelKind::ALL {
+            let g = kind.build();
+            assert!(
+                g.validate().is_empty(),
+                "{}: {:?}",
+                kind.display_name(),
+                g.validate()
+            );
+            assert!(g.topo_order().is_some(), "{}", kind.display_name());
+        }
+    }
+
+    #[test]
+    fn slug_round_trip() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::from_slug(kind.slug()), Some(kind));
+        }
+        assert_eq!(ModelKind::from_slug("nope"), None);
+    }
+}

@@ -1,0 +1,234 @@
+//! YOLOv8n object detector (Table 2: [1,3,640,640], FP32, 3.19M).
+//!
+//! Converter-grained graph: SiLU expanded to Logistic+Mul, explicit
+//! Pads on stride-2 convs, C2f split/concat blocks, SPPF, FPN/PAN neck,
+//! decoupled detect head with DFL, and a final NonMaxSuppression whose
+//! output box count is dynamic — the op that forces every baseline
+//! framework onto the CPU for the tail of this graph.
+
+use super::blocks::{conv1x1, conv_silu};
+use crate::graph::{DType, Dim, Graph, OpKind, TensorId};
+
+/// One C2f block: cv1 → split → n bottlenecks (+pass-through) → concat → cv2.
+#[allow(clippy::too_many_arguments)]
+fn c2f(
+    g: &mut Graph,
+    x: TensorId,
+    h: usize,
+    w: usize,
+    c: usize,
+    n: usize,
+    tag: &str,
+) -> TensorId {
+    let half = c / 2;
+    let cv1 = conv1x1(g, x, h, w, c, c, true, &format!("{tag}.cv1"));
+    // split into two halves
+    let s1 = g.tensor(&[1, h, w, half], &format!("{tag}.split1"));
+    let s2 = g.tensor(&[1, h, w, half], &format!("{tag}.split2"));
+    g.add_node(format!("{tag}.split"), OpKind::Split { ways: 2 }, vec![cv1], vec![s1, s2]);
+    let mut parts = vec![s1, s2];
+    let mut cur = s2;
+    for i in 0..n {
+        let b1 = conv_silu(g, cur, h, w, half, half, 1, &format!("{tag}.m{i}.cv1"), None);
+        let b2 = conv_silu(g, b1, h, w, half, half, 1, &format!("{tag}.m{i}.cv2"), None);
+        let added = g.tensor(&[1, h, w, half], &format!("{tag}.m{i}.add"));
+        g.add_node(format!("{tag}.m{i}.add"), OpKind::Add, vec![cur, b2], vec![added]);
+        parts.push(added);
+        cur = added;
+    }
+    let cat = g.tensor(&[1, h, w, half * parts.len()], &format!("{tag}.cat"));
+    g.add_node(format!("{tag}.concat"), OpKind::Concat, parts, vec![cat]);
+    conv1x1(g, cat, h, w, half * (n + 2), c, true, &format!("{tag}.cv2"))
+}
+
+/// SPPF: cv1 → 3 chained maxpools → concat → cv2.
+fn sppf(g: &mut Graph, x: TensorId, h: usize, w: usize, c: usize, tag: &str) -> TensorId {
+    let half = c / 2;
+    let cv1 = conv1x1(g, x, h, w, c, half, true, &format!("{tag}.cv1"));
+    let mut pools = vec![cv1];
+    let mut cur = cv1;
+    for i in 0..3 {
+        let p = g.tensor(&[1, h, w, half], &format!("{tag}.pool{i}"));
+        g.add_node(
+            format!("{tag}.pool{i}"),
+            OpKind::MaxPool { k: 5, stride: 1 },
+            vec![cur],
+            vec![p],
+        );
+        pools.push(p);
+        cur = p;
+    }
+    let cat = g.tensor(&[1, h, w, half * 4], &format!("{tag}.cat"));
+    g.add_node(format!("{tag}.concat"), OpKind::Concat, pools, vec![cat]);
+    conv1x1(g, cat, h, w, half * 4, c, true, &format!("{tag}.cv2"))
+}
+
+/// Detect head for one scale: separate box and cls conv towers (the
+/// paper's 6-branch layer: 3 scales × 2 towers), DFL decode on the box
+/// side.
+fn detect_head(
+    g: &mut Graph,
+    x: TensorId,
+    h: usize,
+    w: usize,
+    c: usize,
+    tag: &str,
+) -> (TensorId, TensorId) {
+    // box tower
+    let b1 = conv_silu(g, x, h, w, c, 64, 1, &format!("{tag}.box1"), None);
+    let b2 = conv_silu(g, b1, h, w, 64, 64, 1, &format!("{tag}.box2"), None);
+    let box_raw = conv1x1(g, b2, h, w, 64, 64, false, &format!("{tag}.box3"));
+    // DFL: shape glue + reshape -> softmax over 16 bins -> expectation
+    // matmul -> reshape, then grid/anchor decode (slice, add, mul, concat).
+    let shp = g.tensor(&[4], &format!("{tag}.dfl.shape"));
+    g.add_node(format!("{tag}.dfl.shape"), OpKind::Cast, vec![box_raw], vec![shp]);
+    let r1 = g.tensor(&[1, h * w * 4, 16], &format!("{tag}.dfl.r1"));
+    g.add_node(format!("{tag}.dfl.reshape1"), OpKind::Reshape, vec![box_raw, shp], vec![r1]);
+    let tr = g.tensor(&[1, 16, h * w * 4], &format!("{tag}.dfl.t"));
+    g.add_node(format!("{tag}.dfl.transpose"), OpKind::Transpose, vec![r1], vec![tr]);
+    let sm = g.tensor(&[1, 16, h * w * 4], &format!("{tag}.dfl.sm"));
+    g.add_node(format!("{tag}.dfl.softmax"), OpKind::Softmax, vec![tr], vec![sm]);
+    let dflw = g.tensor(&[16, 1], &format!("{tag}.dfl.w"));
+    let expd = g.tensor(&[1, h * w * 4, 1], &format!("{tag}.dfl.mm"));
+    g.add_node(format!("{tag}.dfl.expect"), OpKind::MatMul, vec![sm, dflw], vec![expd]);
+    let dist = g.tensor(&[1, h * w, 4], &format!("{tag}.dist"));
+    g.add_node(format!("{tag}.dfl.reshape2"), OpKind::Reshape, vec![expd], vec![dist]);
+    // grid decode: anchors + strides (lt/rb slices, sub/add, concat, mul)
+    let anchors = g.tensor(&[1, h * w, 2], &format!("{tag}.anchors"));
+    let lt = g.tensor(&[1, h * w, 2], &format!("{tag}.lt"));
+    g.add_node(format!("{tag}.lt_slice"), OpKind::Slice, vec![dist], vec![lt]);
+    let rb = g.tensor(&[1, h * w, 2], &format!("{tag}.rb"));
+    g.add_node(format!("{tag}.rb_slice"), OpKind::Slice, vec![dist], vec![rb]);
+    let x1y1 = g.tensor(&[1, h * w, 2], &format!("{tag}.x1y1"));
+    g.add_node(format!("{tag}.x1y1"), OpKind::Sub, vec![anchors, lt], vec![x1y1]);
+    let x2y2 = g.tensor(&[1, h * w, 2], &format!("{tag}.x2y2"));
+    g.add_node(format!("{tag}.x2y2"), OpKind::Add, vec![anchors, rb], vec![x2y2]);
+    let xyxy = g.tensor(&[1, h * w, 4], &format!("{tag}.xyxy"));
+    g.add_node(format!("{tag}.xyxy"), OpKind::Concat, vec![x1y1, x2y2], vec![xyxy]);
+    let stride_t = g.tensor(&[1], &format!("{tag}.stride"));
+    let boxes = g.tensor(&[1, h * w, 4], &format!("{tag}.boxes"));
+    g.add_node(format!("{tag}.stride_mul"), OpKind::Mul, vec![xyxy, stride_t], vec![boxes]);
+
+    // cls tower
+    let c1 = conv_silu(g, x, h, w, c, 80, 1, &format!("{tag}.cls1"), None);
+    let c2 = conv_silu(g, c1, h, w, 80, 80, 1, &format!("{tag}.cls2"), None);
+    let cls_raw = conv1x1(g, c2, h, w, 80, 80, false, &format!("{tag}.cls3"));
+    let cls_r = g.tensor(&[1, h * w, 80], &format!("{tag}.cls_r"));
+    g.add_node(format!("{tag}.cls.reshape"), OpKind::Reshape, vec![cls_raw], vec![cls_r]);
+    let cls = g.tensor(&[1, h * w, 80], &format!("{tag}.cls_sig"));
+    g.add_node(format!("{tag}.cls.sigmoid"), OpKind::Logistic, vec![cls_r], vec![cls]);
+    (boxes, cls)
+}
+
+pub fn build() -> Graph {
+    let mut g = Graph::new("yolov8n");
+
+    let raw = g.tensor(&[1, 640, 640, 3], "image_in");
+    let img = g.tensor(&[1, 640, 640, 3], "image");
+    g.add_node("input", OpKind::Input, vec![raw], vec![img]);
+
+    // backbone (channels scaled for the nano model, converter-grained)
+    let x = conv_silu(&mut g, img, 640, 640, 3, 16, 2, "stem0", None); // 320
+    let x = conv_silu(&mut g, x, 320, 320, 16, 32, 2, "stem1", None); // 160
+    let x = c2f(&mut g, x, 160, 160, 32, 3, "s1.c2f");
+    let x = conv_silu(&mut g, x, 160, 160, 32, 64, 2, "s2.down", None); // 80
+    let p3 = c2f(&mut g, x, 80, 80, 64, 6, "s2.c2f");
+    let x = conv_silu(
+        &mut g, p3, 80, 80, 64, 128, 2,
+        "s3.down", Some("conv3x3_silu_40x40x64x128_s2"),
+    ); // 40
+    let p4 = c2f(&mut g, x, 40, 40, 128, 6, "s3.c2f");
+    let x = conv_silu(&mut g, p4, 40, 40, 128, 256, 2, "s4.down", None); // 20
+    let x = c2f(&mut g, x, 20, 20, 256, 3, "s4.c2f");
+    let p5 = sppf(&mut g, x, 20, 20, 256, "sppf");
+
+    // neck: top-down (FPN)
+    let up4 = g.tensor(&[1, 40, 40, 256], "up4");
+    g.add_node("up4.resize", OpKind::Cast, vec![p5], vec![up4]); // nearest-resize
+    let cat4 = g.tensor(&[1, 40, 40, 384], "cat4");
+    g.add_node("cat4", OpKind::Concat, vec![up4, p4], vec![cat4]);
+    let n4 = c2f(&mut g, cat4, 40, 40, 128, 2, "neck.p4");
+
+    let up3 = g.tensor(&[1, 80, 80, 128], "up3");
+    g.add_node("up3.resize", OpKind::Cast, vec![n4], vec![up3]);
+    let cat3 = g.tensor(&[1, 80, 80, 192], "cat3");
+    g.add_node("cat3", OpKind::Concat, vec![up3, p3], vec![cat3]);
+    let n3 = c2f(&mut g, cat3, 80, 80, 64, 2, "neck.p3");
+
+    // bottom-up (PAN)
+    let d3 = conv_silu(&mut g, n3, 80, 80, 64, 64, 2, "pan.d3", None); // 40
+    let cat4b = g.tensor(&[1, 40, 40, 192], "cat4b");
+    g.add_node("cat4b", OpKind::Concat, vec![d3, n4], vec![cat4b]);
+    let n4b = c2f(&mut g, cat4b, 40, 40, 128, 2, "pan.p4");
+
+    let d4 = conv_silu(&mut g, n4b, 40, 40, 128, 128, 2, "pan.d4", None); // 20
+    let cat5 = g.tensor(&[1, 20, 20, 384], "cat5");
+    g.add_node("cat5", OpKind::Concat, vec![d4, p5], vec![cat5]);
+    let n5 = c2f(&mut g, cat5, 20, 20, 256, 2, "pan.p5");
+
+    // decoupled heads at 3 scales (box + cls towers = 6 parallel branches)
+    let (b3, c3) = detect_head(&mut g, n3, 80, 80, 64, "head.p3");
+    let (b4, c4) = detect_head(&mut g, n4b, 40, 40, 128, "head.p4");
+    let (b5, c5) = detect_head(&mut g, n5, 20, 20, 256, "head.p5");
+
+    // gather detections and NMS (dynamic output)
+    let all_boxes = g.tensor(&[1, 8400, 4], "all_boxes");
+    g.add_node("cat_boxes", OpKind::Concat, vec![b3, b4, b5], vec![all_boxes]);
+    let all_cls = g.tensor(&[1, 8400, 80], "all_cls");
+    g.add_node("cat_cls", OpKind::Concat, vec![c3, c4, c5], vec![all_cls]);
+    let dets = g.add_tensor(
+        vec![Dim::Static(1), Dim::Dynamic { max: 300 }, Dim::Static(6)],
+        DType::F32,
+        "detections",
+    );
+    g.add_node("nms", OpKind::NonMaxSuppression, vec![all_boxes, all_cls], vec![dets]);
+    let out = g.add_tensor(
+        vec![Dim::Static(1), Dim::Dynamic { max: 300 }, Dim::Static(6)],
+        DType::F32,
+        "out",
+    );
+    g.add_node("output", OpKind::Output, vec![dets], vec![out]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_count_near_table7() {
+        // Table 7 "Pre": 480 nodes.
+        let g = build();
+        let n = g.num_nodes();
+        assert!(
+            (220..=600).contains(&n),
+            "YOLOv8n node count {n} too far from Table 7's 480"
+        );
+    }
+
+    #[test]
+    fn validates() {
+        let g = build();
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert!(g.topo_order().is_some());
+    }
+
+    #[test]
+    fn nms_is_dynamic() {
+        let g = build();
+        let nms = g.nodes().iter().find(|n| n.name == "nms").unwrap();
+        assert!(g.node_has_dynamic_shape(nms.id));
+    }
+
+    #[test]
+    fn flops_in_nano_range() {
+        // YOLOv8n is ~8.7 GFLOPs at 640x640; converter-grained graph with
+        // scaled channels should land within 2-20 G.
+        let g = build();
+        let f = crate::flops::graph_flops(&g);
+        assert!(
+            (2e9..2e10).contains(&(f as f64)),
+            "YOLOv8n flops {f} out of range"
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! `artifacts/manifest.json` — the contract between `python/compile`
+//! (build time) and the Rust engine (run time).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+/// Signature of one AOT-lowered branch program.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    /// Stable program identifier, e.g. `ffn_77x512x2048`.
+    pub name: String,
+    /// HLO text file name, relative to the artifact dir.
+    pub file: String,
+    /// Input shapes, in argument order (f32).
+    pub inputs: Vec<Vec<usize>>,
+    /// Output shapes (programs return tuples).
+    pub outputs: Vec<Vec<usize>>,
+    /// Analytic FLOP count from the L2 registry — used to cross-check
+    /// the L3 FLOP estimator against what is actually executed.
+    pub flops: u64,
+}
+
+impl ProgramSpec {
+    /// Total bytes of all inputs (f32).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|s| s.iter().product::<usize>() * 4).sum()
+    }
+
+    /// Total bytes of all outputs (f32).
+    pub fn output_bytes(&self) -> usize {
+        self.outputs.iter().map(|s| s.iter().product::<usize>() * 4).sum()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let shapes = |key: &str| -> anyhow::Result<Vec<Vec<usize>>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .context("missing shape list")?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .context("shape not an array")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim not a number"))
+                        .collect()
+                })
+                .collect()
+        };
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .context("missing name")?
+                .to_string(),
+            file: j
+                .get("file")
+                .and_then(Json::as_str)
+                .context("missing file")?
+                .to_string(),
+            inputs: shapes("inputs")?,
+            outputs: shapes("outputs")?,
+            flops: j.get("flops").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    dir: PathBuf,
+    programs: HashMap<String, ProgramSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let raw = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let json = Json::parse(&raw).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let list = json.as_arr().context("manifest must be a JSON array")?;
+        let mut programs = HashMap::new();
+        for item in list {
+            let spec = ProgramSpec::from_json(item)?;
+            programs.insert(spec.name.clone(), spec);
+        }
+        Ok(Self { dir, programs })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ProgramSpec> {
+        self.programs.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.programs.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.programs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.programs.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.programs.keys().map(|s| s.as_str())
+    }
+
+    /// Absolute path of a program's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Option<PathBuf> {
+        self.get(name).map(|p| self.dir.join(&p.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"[{"name":"m","file":"m.hlo.txt","inputs":[[2,3],[3]],"outputs":[[2,3]],"flops":36}]"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("plx_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.len(), 1);
+        let p = m.get("m").unwrap();
+        assert_eq!(p.input_bytes(), (6 + 3) * 4);
+        assert_eq!(p.output_bytes(), 24);
+        assert!(m.hlo_path("m").unwrap().ends_with("m.hlo.txt"));
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load("/nonexistent/plx").is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! L3 runtime: load AOT artifacts and execute them via PJRT.
+//!
+//! The build pipeline (`make artifacts`) lowers every L2 branch program
+//! to HLO *text* under `artifacts/` plus a `manifest.json`.  This module
+//! is the only place in the crate that touches the `xla` crate:
+//!
+//! * [`Manifest`] — parsed `manifest.json`, program signatures.
+//! * [`PjrtWorker`] — a dedicated OS thread owning a `PjRtClient` (the
+//!   crate's client is `Rc`-based and not `Send`, so it can never cross
+//!   threads) with a lazily-populated executable cache.  Callers talk to
+//!   it through an mpsc request channel and get results on a per-request
+//!   reply channel.
+//! * [`RuntimePool`] — N workers (N = real parallel lanes for branch
+//!   execution) with round-robin dispatch.
+//!
+//! Python never runs on this path: after `make artifacts` the binary is
+//! self-contained.
+
+mod manifest;
+mod tensor;
+mod worker;
+
+pub use manifest::{Manifest, ProgramSpec};
+pub use tensor::Tensor;
+pub use worker::{PjrtWorker, RuntimePool, WorkerClient, WorkerHandle};
+
+/// Default artifact directory, resolved relative to the crate root so
+/// tests and examples work from any CWD.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+/// True when AOT artifacts have been built (used to gate integration
+/// tests so `cargo test` passes on a tree without `make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}

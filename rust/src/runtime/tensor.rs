@@ -1,0 +1,128 @@
+//! Host tensor: the coordinator's unit of data on the request path.
+//!
+//! Deliberately minimal — dense f32, row-major — because Parallax's
+//! contribution is scheduling, not a tensor library.  Conversions to and
+//! from `xla::Literal` live in the worker.
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Build from shape + data; panics if the element count mismatches.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Self { shape, data }
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Deterministic pseudo-random tensor (xorshift on the seed) —
+    /// used for synthetic weights/inputs in examples and benches.
+    pub fn randn(shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            // xorshift64* then map to ~N(0,1) via sum of uniforms (CLT-ish)
+            let mut acc = 0.0f32;
+            for _ in 0..4 {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                let u = (s >> 11) as f32 / (1u64 << 53) as f32;
+                acc += u;
+            }
+            data.push((acc - 2.0) * 1.732_050_8);
+        }
+        Self { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes (f32).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn into_parts(self) -> (Vec<usize>, Vec<f32>) {
+        (self.shape, self.data)
+    }
+
+    /// Max |a - b| against another tensor; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.byte_size(), 24);
+    }
+
+    #[test]
+    #[should_panic]
+    fn new_rejects_bad_len() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn randn_is_deterministic() {
+        let a = Tensor::randn(vec![16], 7);
+        let b = Tensor::randn(vec![16], 7);
+        assert_eq!(a, b);
+        let c = Tensor::randn(vec![16], 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn randn_roughly_centered() {
+        let t = Tensor::randn(vec![4096], 1);
+        let mean: f32 = t.data().iter().sum::<f32>() / 4096.0;
+        assert!(mean.abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![1.5, 2.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT worker threads and the runtime pool.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so each
+//! worker owns its client on a dedicated OS thread and callers submit
+//! [`ExecRequest`]s over an mpsc channel.  Executables are compiled on
+//! first use and cached for the lifetime of the worker — compilation is
+//! the expensive step (tens of ms), execution is the hot path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{Manifest, Tensor};
+
+/// A request to run one AOT program with concrete inputs.
+struct ExecRequest {
+    program: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<anyhow::Result<Vec<Tensor>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// Compile (warm the cache for) a program without running it.
+    Warm(String, mpsc::Sender<anyhow::Result<()>>),
+    Shutdown,
+}
+
+/// Handle to a single PJRT worker thread.
+pub struct PjrtWorker {
+    tx: mpsc::Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+    /// Number of in-flight + completed requests (observability).
+    submitted: Arc<AtomicUsize>,
+}
+
+/// Cloneable, `Send` client to one worker — what engine threads carry
+/// into scoped parallel branch execution.
+#[derive(Clone)]
+pub struct WorkerClient {
+    tx: mpsc::Sender<Msg>,
+    submitted: Arc<AtomicUsize>,
+}
+
+impl WorkerClient {
+    /// Execute `program` with `inputs`; blocks until the result arrives.
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Exec(ExecRequest { program: program.to_string(), inputs, reply }))
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+}
+
+impl PjrtWorker {
+    /// Spawn a worker owning its own `PjRtClient::cpu()`.
+    pub fn spawn(manifest: Manifest) -> anyhow::Result<Self> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-worker".into())
+            .spawn(move || worker_main(manifest, rx, ready_tx))?;
+        // Surface client-creation failures at spawn time.
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("worker died during init"))??;
+        Ok(Self { tx, join: Some(join), submitted: Arc::new(AtomicUsize::new(0)) })
+    }
+
+    /// Execute `program` with `inputs`; blocks until the result is ready.
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Msg::Exec(ExecRequest { program: program.to_string(), inputs, reply }))
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+
+    /// Compile a program ahead of time so the first execute is fast.
+    pub fn warm(&self, program: &str) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Warm(program.to_string(), reply))
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+
+    /// Requests submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// A cloneable `Send` client for cross-thread submission.
+    pub fn client(&self) -> WorkerClient {
+        WorkerClient { tx: self.tx.clone(), submitted: self.submitted.clone() }
+    }
+}
+
+impl Drop for PjrtWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_main(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<anyhow::Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Warm(name, reply) => {
+                let r = ensure_compiled(&client, &manifest, &mut cache, &name).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Msg::Exec(req) => {
+                let result = run_one(&client, &manifest, &mut cache, &req.program, &req.inputs);
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> anyhow::Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let path = manifest
+            .hlo_path(name)
+            .ok_or_else(|| anyhow::anyhow!("program {name} not in manifest"))?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+fn run_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: &[Tensor],
+) -> anyhow::Result<Vec<Tensor>> {
+    let spec = manifest
+        .get(name)
+        .ok_or_else(|| anyhow::anyhow!("program {name} not in manifest"))?
+        .clone();
+    if inputs.len() != spec.inputs.len() {
+        anyhow::bail!(
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape() != s.as_slice() {
+            anyhow::bail!("{name}: input {i} shape {:?} != spec {:?}", t.shape(), s);
+        }
+    }
+    let exe = ensure_compiled(client, manifest, cache, name)?;
+
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(t.data())
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshape input: {e}"))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+    // aot.py lowers with return_tuple=True, so outputs arrive as a tuple.
+    let parts = lit
+        .to_tuple()
+        .map_err(|e| anyhow::anyhow!("untuple result: {e}"))?;
+    if parts.len() != spec.outputs.len() {
+        anyhow::bail!(
+            "{name}: expected {} outputs, got {}",
+            spec.outputs.len(),
+            parts.len()
+        );
+    }
+    parts
+        .into_iter()
+        .zip(&spec.outputs)
+        .map(|(l, shape)| {
+            let v = l
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("read output: {e}"))?;
+            Ok(Tensor::new(shape.clone(), v))
+        })
+        .collect()
+}
+
+/// Pool of PJRT workers with round-robin dispatch.
+///
+/// On a many-core host each worker is a real parallel lane for branch
+/// execution; the pool size is the runtime analogue of the paper's
+/// "maximum parallel threads" knob (Fig. 3).
+pub struct RuntimePool {
+    workers: Vec<PjrtWorker>,
+    next: AtomicUsize,
+    manifest: Manifest,
+}
+
+/// Cheap clonable handle onto one worker slot of the pool.
+pub struct WorkerHandle<'a> {
+    pub(crate) worker: &'a PjrtWorker,
+}
+
+impl RuntimePool {
+    /// Spawn `n` workers over the artifacts in `dir`.
+    pub fn new(dir: impl AsRef<std::path::Path>, n: usize) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let workers = (0..n.max(1))
+            .map(|_| PjrtWorker::spawn(manifest.clone()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { workers, next: AtomicUsize::new(0), manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Round-robin pick of a worker.
+    pub fn worker(&self) -> WorkerHandle<'_> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        WorkerHandle { worker: &self.workers[i] }
+    }
+
+    /// Round-robin cloneable client (for engine threads).
+    pub fn client(&self) -> WorkerClient {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+        self.workers[i].client()
+    }
+
+    /// Execute on the next worker (round-robin).
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        self.worker().worker.execute(program, inputs)
+    }
+
+    /// Pre-compile the given programs across all workers.
+    pub fn warm(&self, programs: &[&str]) -> anyhow::Result<()> {
+        for w in &self.workers {
+            for p in programs {
+                w.warm(p)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl WorkerHandle<'_> {
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        self.worker.execute(program, inputs)
+    }
+}

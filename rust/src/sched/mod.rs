@@ -1,0 +1,262 @@
+//! Resource-constrained parallel scheduling (paper §3.3).
+//!
+//! Per layer, pick the largest subset of branches whose combined
+//! estimated peak memory fits the working budget
+//! `M_budget = free_mem × (1 − margin)`; run the rest sequentially.
+//! Concurrency is additionally capped by `max_threads` (Fig. 3's knob):
+//! a layer wider than the cap executes in waves.
+
+use crate::branch::{Branch, BranchPlan};
+use crate::memory::BranchMemory;
+
+/// Scheduler configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedCfg {
+    /// Max concurrently executing CPU branches (paper default 6).
+    pub max_threads: usize,
+    /// Safety margin over reported free memory (paper: 0.3–0.5).
+    pub margin: f64,
+}
+
+impl Default for SchedCfg {
+    fn default() -> Self {
+        Self { max_threads: 6, margin: 0.4 }
+    }
+}
+
+impl SchedCfg {
+    /// Working budget from an OS free-memory reading.
+    pub fn budget(&self, free_mem: u64) -> u64 {
+        (free_mem as f64 * (1.0 - self.margin)) as u64
+    }
+}
+
+/// Execution plan for one layer: parallel waves followed by the
+/// sequential spill (each spilled branch runs alone).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerSchedule {
+    /// Groups of branch ids that run concurrently (each group ≤
+    /// max_threads wide and within budget).
+    pub waves: Vec<Vec<usize>>,
+    /// Branches that must run one-at-a-time (memory spill).
+    pub sequential: Vec<usize>,
+}
+
+impl LayerSchedule {
+    /// All branches, in execution order.
+    pub fn all(&self) -> impl Iterator<Item = usize> + '_ {
+        self.waves
+            .iter()
+            .flatten()
+            .copied()
+            .chain(self.sequential.iter().copied())
+    }
+
+    /// Max concurrency used.
+    pub fn width(&self) -> usize {
+        self.waves.iter().map(Vec::len).max().unwrap_or(0).max(
+            usize::from(!self.sequential.is_empty()),
+        )
+    }
+}
+
+/// Greedy §3.3 selection for one layer.
+///
+/// Branches are sorted by ascending M_i so the chosen subset is the
+/// *largest possible* count within the budget; the spill runs
+/// sequentially.  Chosen branches are then chunked into waves of
+/// `max_threads`.  Delegate branches occupy the accelerator, not a CPU
+/// thread — they are always scheduled into the first wave.
+pub fn schedule_layer(
+    _branches: &[Branch],
+    mems: &[BranchMemory],
+    layer: &[usize],
+    budget: u64,
+    cfg: &SchedCfg,
+    parallel_ok: bool,
+) -> LayerSchedule {
+    let (delegated, cpu): (Vec<usize>, Vec<usize>) = layer
+        .iter()
+        .copied()
+        .partition(|&b| _branches[b].has_delegate);
+
+    // §3.1 refinement: only the balanced subset is worth fanning out;
+    // the rest of the layer runs sequentially either way.
+    let subset =
+        crate::branch::balanced_parallel_subset(_branches, layer, crate::branch::DEFAULT_BETA);
+
+    if !parallel_ok || subset.len() < 2 {
+        // whole layer sequential (plus delegate branches in wave 0 so
+        // they still overlap with the first CPU branch).
+        let mut waves = Vec::new();
+        if !delegated.is_empty() {
+            waves.push(delegated);
+        }
+        return LayerSchedule { waves, sequential: cpu };
+    }
+
+    let leftover: Vec<usize> =
+        cpu.iter().copied().filter(|b| !subset.contains(b)).collect();
+
+    // ascending M_i -> maximize chosen count
+    let mut order = subset;
+    order.sort_by_key(|&b| mems[b].total());
+    let mut chosen = Vec::new();
+    let mut spill = Vec::new();
+    let mut used = 0u64;
+    for b in order {
+        let m = mems[b].total() as u64;
+        if used + m <= budget {
+            used += m;
+            chosen.push(b);
+        } else {
+            spill.push(b);
+        }
+    }
+    if chosen.len() < 2 {
+        // parallelism didn't survive the budget: run everything
+        // sequentially (chosen ∪ spill ∪ leftover), delegates overlap.
+        let mut seq = chosen;
+        seq.extend(spill);
+        seq.extend(leftover);
+        let mut waves = Vec::new();
+        if !delegated.is_empty() {
+            waves.push(delegated);
+        }
+        return LayerSchedule { waves, sequential: seq };
+    }
+
+    // chunk into waves of max_threads; delegates join the first wave
+    let mut waves: Vec<Vec<usize>> = chosen
+        .chunks(cfg.max_threads.max(1))
+        .map(|c| c.to_vec())
+        .collect();
+    if !delegated.is_empty() {
+        waves.first_mut().unwrap().extend(delegated);
+    }
+    let mut sequential = spill;
+    sequential.extend(leftover);
+    LayerSchedule { waves, sequential }
+}
+
+/// Full-model schedule: one [`LayerSchedule`] per layer.
+pub fn schedule(
+    plan: &BranchPlan,
+    mems: &[BranchMemory],
+    budget: u64,
+    cfg: &SchedCfg,
+) -> Vec<LayerSchedule> {
+    plan.layers
+        .iter()
+        .zip(&plan.layer_parallel)
+        .map(|(layer, &ok)| {
+            schedule_layer(&plan.branches, mems, layer, budget, cfg, ok)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::branch::{self, DEFAULT_BETA};
+    use crate::memory::{branch_memories, BranchMemory};
+    use crate::models::micro;
+    use crate::partition::{partition, CostModel};
+
+    fn cpu_only(g: &crate::graph::Graph) -> crate::partition::Partition {
+        partition(g, &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 })
+    }
+
+    #[test]
+    fn budget_respected() {
+        let g = micro::parallel_chains(6, 5);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg::default();
+        // budget that fits about half the branches
+        let per = mems.iter().map(|m| m.total()).max().unwrap() as u64;
+        let budget = per * 3;
+        for (li, layer) in plan.layers.iter().enumerate() {
+            let ls = schedule_layer(
+                &plan.branches, &mems, layer, budget, &cfg, plan.layer_parallel[li],
+            );
+            for wave in &ls.waves {
+                let sum: u64 = wave
+                    .iter()
+                    .filter(|&&b| !plan.branches[b].has_delegate)
+                    .map(|&b| mems[b].total() as u64)
+                    .sum();
+                assert!(sum <= budget, "wave over budget: {sum} > {budget}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_budget_forces_sequential() {
+        let g = micro::parallel_chains(4, 5);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg::default();
+        let scheds = schedule(&plan, &mems, 0, &cfg);
+        for s in &scheds {
+            assert!(s.waves.iter().all(|w| w.is_empty()) || s.waves.is_empty());
+        }
+        // every branch still executes exactly once
+        let total: usize = scheds.iter().map(|s| s.all().count()).sum();
+        assert_eq!(total, plan.branches.len());
+    }
+
+    #[test]
+    fn max_threads_caps_wave_width() {
+        let g = micro::parallel_chains(8, 5);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg { max_threads: 3, margin: 0.4 };
+        let scheds = schedule(&plan, &mems, u64::MAX, &cfg);
+        for s in &scheds {
+            for w in &s.waves {
+                assert!(w.len() <= 3);
+            }
+        }
+        // the 8-wide layer splits into ceil(8/3) = 3 waves
+        let wide = scheds.iter().find(|s| s.all().count() == 8).unwrap();
+        assert_eq!(wide.waves.len(), 3);
+    }
+
+    #[test]
+    fn all_branches_scheduled_exactly_once() {
+        let g = crate::models::ModelKind::ClipText.build();
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let scheds = schedule(&plan, &mems, 1 << 30, &SchedCfg::default());
+        let mut seen = vec![false; plan.branches.len()];
+        for s in &scheds {
+            for b in s.all() {
+                assert!(!seen[b], "branch {b} scheduled twice");
+                seen[b] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn single_chosen_branch_degenerates_to_sequential() {
+        // budget fits exactly one branch -> no point "parallelising"
+        let g = micro::parallel_chains(4, 5);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let per = mems.iter().map(BranchMemory::total).max().unwrap() as u64;
+        let cfg = SchedCfg::default();
+        let li = plan.layers.iter().position(|l| l.len() == 4).unwrap();
+        let ls = schedule_layer(
+            &plan.branches, &mems, &plan.layers[li], per, &cfg, plan.layer_parallel[li],
+        );
+        assert!(ls.waves.is_empty());
+        assert_eq!(ls.sequential.len(), 4);
+    }
+}

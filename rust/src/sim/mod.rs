@@ -1,0 +1,508 @@
+//! Discrete-event execution simulator.
+//!
+//! Charges analytic time/energy for a scheduled Branch-Layer plan on a
+//! [`SocProfile`] — the substitution for the paper's on-phone
+//! measurements (DESIGN.md).  One simulation = one inference with a
+//! concrete dynamic-shape draw; Table 3's min/max come from sweeping
+//! the draw across the paper's 30-input protocol.
+//!
+//! Timing model:
+//! * CPU unit in a parallel wave: runs on its own core,
+//!   `t = F_eff / (flops_per_core · core_scale)` + per-op dispatch.
+//! * CPU unit running alone: intra-op parallelism over the framework's
+//!   thread pool (`SocProfile::intra_op_speedup`).
+//! * Delegate region: `L + F/R_acc + B/B_bw`, overlapping the first CPU
+//!   wave of its layer (§3.1 cost model, Appendix B).
+//! * Wave fork/join: `sync_overhead`.
+//!
+//! Energy: `P_idle·T + P_core·core_seconds + P_acc·acc_busy` (Fig. 2).
+
+use crate::branch::{BranchPlan, Unit};
+use crate::device::SocProfile;
+use crate::flops;
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::memory::{self, BranchMemory};
+use crate::partition::Partition;
+use crate::sched::{LayerSchedule, SchedCfg};
+
+/// Per-framework execution personality (dispatch costs + capabilities).
+#[derive(Clone, Copy, Debug)]
+pub struct FrameworkProfile {
+    pub name: &'static str,
+    /// Per-operator dispatch/interpreter overhead, seconds.
+    pub per_op_dispatch_s: f64,
+    /// One-off per-inference overhead (input staging, graph setup).
+    pub graph_overhead_s: f64,
+    /// Thread fork/join cost per parallel wave, seconds.
+    pub sync_overhead_s: f64,
+    /// Framework-resident memory overhead, bytes (runtime structures).
+    pub mem_overhead_bytes: u64,
+    /// Executes independent branches concurrently (only Parallax).
+    pub branch_parallel: bool,
+    /// Intra-op thread-pool efficiency multiplier (quality of the
+    /// framework's parallel kernels).
+    pub intra_op_quality: f64,
+    /// Cost per dynamic-shaped op to invalidate + reallocate arena
+    /// regions (§3 problem (ii)).  Parallax confines dynamic resizes to
+    /// the owning branch's arena and pays almost nothing; global-arena
+    /// planners must re-plan and memmove.
+    pub dyn_realloc_s: f64,
+    /// Host<->accelerator context switch per delegate region invocation
+    /// (NNAPI subgraph setup/sync).  The source of the baselines'
+    /// "heterogeneous slower than CPU" collapse on fragmented models;
+    /// Parallax's fine-grained subgraph control keeps it small.
+    pub ctx_switch_s: f64,
+}
+
+/// Inference execution mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    CpuOnly,
+    Heterogeneous,
+}
+
+/// Per-layer profile line (Table 6).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProfile {
+    pub layer: usize,
+    pub latency_s: f64,
+    pub branches: usize,
+    pub has_delegate: bool,
+}
+
+/// One simulated inference.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub latency_s: f64,
+    pub peak_mem_bytes: u64,
+    pub energy_j: f64,
+    pub cpu_core_seconds: f64,
+    pub acc_busy_s: f64,
+    pub per_layer: Vec<LayerProfile>,
+}
+
+/// Single-core share of the SoC memory bandwidth (one streaming core
+/// cannot saturate the LPDDR controller).
+const BW_SHARE_1CORE: f64 = 0.35;
+/// Multi-thread share (an intra-op parallel kernel streams somewhat
+/// more, still short of peak).
+const BW_SHARE_MULTI: f64 = 0.55;
+
+/// Effective FLOPs of a node for a dynamic-fill draw: dynamic dims are
+/// scaled by `fill` (attention-style quadratic ops by `fill²`).
+pub fn effective_node_flops(g: &Graph, id: NodeId, fill: f64) -> f64 {
+    let base = flops::node_flops(g, id) as f64;
+    if !g.node_has_dynamic_shape(id) {
+        return base;
+    }
+    match g.node(id).kind {
+        OpKind::Attention { .. } => base * fill * fill,
+        _ => base * fill,
+    }
+}
+
+/// Bytes a node streams (inputs + outputs, worst case × fill).
+/// Memory-bound ops (elementwise, softmax, reshuffles) are dominated by
+/// this, not FLOPs — the reason they don't profit from intra-op thread
+/// pools but *do* overlap across branches.
+pub fn effective_node_bytes(g: &Graph, id: NodeId, fill: f64) -> f64 {
+    let n = g.node(id);
+    let mut total = 0.0;
+    for &t in n.inputs.iter().chain(n.outputs.iter()) {
+        let info = g.tensor_info(t);
+        let b = info.byte_size_max() as f64;
+        total += if info.has_dynamic_dim() { b * fill } else { b };
+    }
+    // pure shape ops (reshape on contiguous buffers) are zero-copy
+    if matches!(n.kind, OpKind::Reshape | OpKind::Cast) {
+        total *= 0.1;
+    }
+    total
+}
+
+/// Count of dynamic-shaped CPU ops in a unit (each pays the
+/// framework's reallocation penalty).
+fn unit_dynamic_ops(g: &Graph, p: &Partition, plan: &BranchPlan, u: usize) -> usize {
+    match &plan.unit_graph.units[u] {
+        Unit::Cpu(id) => usize::from(g.node_has_dynamic_shape(*id)),
+        Unit::Region(ri) => p.regions[*ri]
+            .iter()
+            .filter(|&&id| g.node_has_dynamic_shape(id))
+            .count(),
+    }
+}
+
+/// Effective (FLOPs, streamed bytes) of a unit.
+pub fn effective_unit_cost(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    u: usize,
+    fill: f64,
+) -> (f64, f64) {
+    match &plan.unit_graph.units[u] {
+        Unit::Cpu(id) => (
+            effective_node_flops(g, *id, fill),
+            effective_node_bytes(g, *id, fill),
+        ),
+        Unit::Region(ri) => p.regions[*ri].iter().fold((0.0, 0.0), |(f, b), &id| {
+            (
+                f + effective_node_flops(g, id, fill),
+                b + effective_node_bytes(g, id, fill),
+            )
+        }),
+    }
+}
+
+/// Time for one branch inside a parallel wave: pinned to a core group
+/// of `threads` cores starting at `core_scale`, with nested intra-op
+/// parallelism across the group when the wave is narrower than the
+/// thread budget (Parallax's hybrid fan-out).
+#[allow(clippy::too_many_arguments)]
+fn branch_time_wave(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    fw: &FrameworkProfile,
+    soc: &SocProfile,
+    b: usize,
+    core_scale: f64,
+    threads: usize,
+    fill: f64,
+) -> f64 {
+    let rate = soc.cpu_flops_per_core * core_scale;
+    let bw = soc.mem_bw
+        * if threads > 1 { BW_SHARE_MULTI } else { BW_SHARE_1CORE };
+    let mut t = 0.0;
+    for &u in &plan.branches[b].units {
+        let (f, bytes) = effective_unit_cost(g, p, plan, u, fill);
+        let speedup = if threads > 1 {
+            let raw = soc.intra_op_speedup(f as u64, threads);
+            1.0 + (raw - 1.0) * fw.intra_op_quality
+        } else {
+            1.0
+        };
+        t += (f / (rate * speedup)).max(bytes / bw)
+            + fw.per_op_dispatch_s * plan.unit_graph.ops[u] as f64
+            + fw.dyn_realloc_s * unit_dynamic_ops(g, p, plan, u) as f64;
+    }
+    t
+}
+
+/// Time for one branch run alone with intra-op parallelism.
+fn branch_time_intra_op(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    fw: &FrameworkProfile,
+    soc: &SocProfile,
+    b: usize,
+    threads: usize,
+    fill: f64,
+) -> (f64, f64) {
+    // returns (time, core_seconds)
+    let bw = soc.mem_bw * BW_SHARE_MULTI;
+    let mut t = 0.0;
+    let mut cs = 0.0;
+    for &u in &plan.branches[b].units {
+        let (f, bytes) = effective_unit_cost(g, p, plan, u, fill);
+        let raw_speedup = soc.intra_op_speedup(f as u64, threads);
+        let speedup = 1.0 + (raw_speedup - 1.0) * fw.intra_op_quality;
+        let ut = (f / (soc.cpu_flops_per_core * speedup)).max(bytes / bw)
+            + fw.per_op_dispatch_s * plan.unit_graph.ops[u] as f64
+            + fw.dyn_realloc_s * unit_dynamic_ops(g, p, plan, u) as f64;
+        t += ut;
+        cs += ut * speedup.min(threads as f64);
+    }
+    (t, cs)
+}
+
+/// Accelerator time of a delegate branch (§3.1 model): per region,
+/// `L + F/R_acc + B/B_bw`.
+fn branch_time_delegate(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    fw: &FrameworkProfile,
+    soc: &SocProfile,
+    b: usize,
+    fill: f64,
+) -> f64 {
+    let mut t = 0.0;
+    for &u in &plan.branches[b].units {
+        match &plan.unit_graph.units[u] {
+            Unit::Region(ri) => {
+                let f: f64 = p.regions[*ri]
+                    .iter()
+                    .map(|&id| effective_node_flops(g, id, fill))
+                    .sum();
+                let bnd = flops::boundary_bytes(g, &p.regions[*ri]) as f64;
+                t += soc.acc_dispatch_s
+                    + fw.ctx_switch_s
+                    + f / (soc.acc_flops * soc.acc_utilization)
+                    + bnd / soc.mem_bw;
+            }
+            Unit::Cpu(id) => {
+                // glue node inside a delegate branch: runs on CPU core 0
+                t += effective_node_flops(g, *id, fill) / soc.cpu_flops_per_core;
+            }
+        }
+    }
+    t
+}
+
+/// Fill-independent activation footprint for a framework's planner —
+/// compute once per pipeline, pass into [`simulate`].
+pub fn activation_footprint(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    fw: &FrameworkProfile,
+) -> u64 {
+    if fw.branch_parallel {
+        memory::parallax_footprint(g, p, plan).total() as u64
+    } else {
+        let (_, greedy) = memory::baseline_footprints(g);
+        greedy as u64
+    }
+}
+
+/// Simulate one inference of a scheduled plan.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    schedules: &[LayerSchedule],
+    mems: &[BranchMemory],
+    fw: &FrameworkProfile,
+    soc: &SocProfile,
+    cfg: &SchedCfg,
+    mode: Mode,
+    fill: f64,
+    weight_bytes: u64,
+    activation_bytes: u64,
+) -> SimResult {
+    let mut total = fw.graph_overhead_s;
+    let mut core_seconds = 0.0;
+    let mut acc_busy = 0.0;
+    let mut per_layer = Vec::with_capacity(schedules.len());
+
+    let hetero = mode == Mode::Heterogeneous;
+
+    for (li, ls) in schedules.iter().enumerate() {
+        let mut layer_t = 0.0;
+        let mut layer_branches = 0usize;
+        let mut layer_has_delegate = false;
+
+        for (wi, wave) in ls.waves.iter().enumerate() {
+            if wave.is_empty() {
+                continue;
+            }
+            layer_branches += wave.len();
+            // split wave into delegate + cpu lanes
+            let mut cpu_times: Vec<f64> = Vec::new();
+            let mut delegate_t = 0.0f64;
+            // heaviest branches to biggest cores
+            let mut cpu_branches: Vec<usize> = wave
+                .iter()
+                .copied()
+                .filter(|&b| !(hetero && plan.branches[b].has_delegate))
+                .collect();
+            cpu_branches.sort_by(|&a, &b| {
+                plan.branches[b].flops.cmp(&plan.branches[a].flops)
+            });
+            // hybrid fan-out: unused thread budget nests inside branches
+            let threads_per_branch = if cpu_branches.is_empty() {
+                1
+            } else {
+                (cfg.max_threads / cpu_branches.len()).max(1)
+            };
+            for (slot, &b) in cpu_branches.iter().enumerate() {
+                let base = slot * threads_per_branch;
+                let scale = soc.core_scale[base.min(soc.cpu_cores - 1)];
+                let t = branch_time_wave(
+                    g, p, plan, fw, soc, b, scale, threads_per_branch, fill,
+                );
+                cpu_times.push(t);
+                core_seconds += t * scale * threads_per_branch as f64 * 0.8;
+            }
+            for &b in wave {
+                if hetero && plan.branches[b].has_delegate {
+                    layer_has_delegate = true;
+                    let t = branch_time_delegate(g, p, plan, fw, soc, b, fill);
+                    delegate_t += t;
+                    acc_busy += t;
+                }
+            }
+            let cpu_wave_t = cpu_times.iter().fold(0.0, |a: f64, &b| a.max(b));
+            let wave_t = cpu_wave_t.max(delegate_t)
+                + if cpu_branches.len() > 1 {
+                    fw.sync_overhead_s
+                } else {
+                    0.0
+                };
+            let _ = wi;
+            layer_t += wave_t;
+        }
+
+        for &b in &ls.sequential {
+            layer_branches += 1;
+            if hetero && plan.branches[b].has_delegate {
+                layer_has_delegate = true;
+                let t = branch_time_delegate(g, p, plan, fw, soc, b, fill);
+                acc_busy += t;
+                layer_t += t;
+            } else {
+                let (t, cs) =
+                    branch_time_intra_op(g, p, plan, fw, soc, b, cfg.max_threads, fill);
+                layer_t += t;
+                core_seconds += cs;
+            }
+        }
+
+        per_layer.push(LayerProfile {
+            layer: li,
+            latency_s: layer_t,
+            branches: layer_branches,
+            has_delegate: layer_has_delegate,
+        });
+        total += layer_t;
+    }
+
+    // memory: weights + activation footprint (precomputed by the
+    // caller — it is fill-independent) + runtime overhead
+    let peak_mem = weight_bytes + activation_bytes + fw.mem_overhead_bytes;
+    let _ = mems;
+
+    let energy = soc.p_idle_w * total
+        + soc.p_core_w * core_seconds
+        + soc.p_acc_w * acc_busy;
+
+    SimResult {
+        latency_s: total,
+        peak_mem_bytes: peak_mem,
+        energy_j: energy,
+        cpu_core_seconds: core_seconds,
+        acc_busy_s: acc_busy,
+        per_layer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::branch::{self, DEFAULT_BETA};
+    use crate::memory::branch_memories;
+    use crate::models::micro;
+    use crate::partition::{partition, CostModel};
+    use crate::sched;
+
+    fn setup(
+        g: &Graph,
+    ) -> (Partition, BranchPlan, Vec<BranchMemory>, Vec<LayerSchedule>) {
+        let p = partition(g, &CostModel::default());
+        let plan = branch::plan(g, &p, DEFAULT_BETA);
+        let mems = branch_memories(g, &p, &plan);
+        let cfg = SchedCfg::default();
+        let scheds = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        (p, plan, mems, scheds)
+    }
+
+    #[test]
+    fn parallel_beats_sequential_on_branchy_graph() {
+        let g = micro::parallel_chains(4, 400);
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let seq_scheds: Vec<LayerSchedule> = scheds
+            .iter()
+            .map(|s| LayerSchedule {
+                waves: vec![],
+                sequential: s.all().collect(),
+            })
+            .collect();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let par = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        let seq = simulate(&g, &p, &plan, &seq_scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        assert!(
+            par.latency_s < seq.latency_s,
+            "parallel {} !< sequential {}",
+            par.latency_s,
+            seq.latency_s
+        );
+    }
+
+    #[test]
+    fn fill_scales_latency_monotonically() {
+        let g = crate::models::ModelKind::ClipText.build();
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let lo = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 0.2, 0, act);
+        let hi = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        assert!(lo.latency_s < hi.latency_s);
+    }
+
+    #[test]
+    fn energy_positive_and_scales_with_time() {
+        let g = micro::parallel_chains(4, 100);
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let r = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        assert!(r.energy_j > 0.0);
+        assert!(r.energy_j >= soc.p_idle_w * r.latency_s);
+    }
+
+    #[test]
+    fn hetero_uses_accelerator_on_delegated_graph() {
+        let g = micro::mixed();
+        let p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: 1e9 });
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg::default();
+        let scheds = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let soc = SocProfile::pixel6();
+        let plx = baselines::parallax();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let het = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::Heterogeneous, 1.0, 0, act);
+        let cpu = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        assert!(het.acc_busy_s > 0.0);
+        assert_eq!(cpu.acc_busy_s, 0.0);
+        // the conv trunk is heavy and static -> accelerator should win
+        assert!(het.latency_s < cpu.latency_s);
+    }
+
+    #[test]
+    fn per_layer_sums_to_total() {
+        let g = crate::models::ModelKind::DistilBert.build();
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let r = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
+        let sum: f64 = r.per_layer.iter().map(|l| l.latency_s).sum();
+        assert!((sum + plx.graph_overhead_s - r.latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peak_memory_includes_weights() {
+        let g = crate::models::ModelKind::ClipText.build();
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let w = 100_000_000;
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let r = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, w, act);
+        assert!(r.peak_mem_bytes > w);
+    }
+}

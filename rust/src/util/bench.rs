@@ -1,0 +1,159 @@
+//! Micro-bench harness (offline replacement for `criterion`).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = Bench::new("arena_alloc");
+//! b.iter("bump_alloc_1k", || { ... });
+//! b.report();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to exceed
+//! a minimum measurement window; mean/p50/min are reported.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One timed case.
+#[derive(Debug)]
+pub struct Case {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+}
+
+/// A named group of timed cases.
+pub struct Bench {
+    name: String,
+    min_window: Duration,
+    samples: usize,
+    cases: Vec<Case>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            min_window: Duration::from_millis(200),
+            samples: 20,
+            cases: Vec::new(),
+        }
+    }
+
+    /// Override the measurement window (per sample batch).
+    pub fn with_window(mut self, d: Duration) -> Self {
+        self.min_window = d;
+        self
+    }
+
+    /// Time `f`, auto-scaling the iteration count.
+    pub fn iter<F: FnMut()>(&mut self, case: &str, mut f: F) {
+        // Warm-up + calibration: find iters such that a batch ~ window/samples
+        let mut iters = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.min_window / self.samples as u32 || iters > 1 << 28 {
+                break;
+            }
+            iters = (iters * 2).max(
+                (iters as f64 * (self.min_window.as_secs_f64() / self.samples as f64)
+                    / dt.as_secs_f64().max(1e-9)) as u64,
+            );
+        }
+        let mut per_iter = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let s = stats::summarize(&per_iter).unwrap();
+        self.cases.push(Case {
+            name: case.to_string(),
+            iters,
+            mean_ns: s.mean,
+            p50_ns: s.p50,
+            min_ns: s.min,
+        });
+    }
+
+    /// Record an externally measured value (e.g. one long end-to-end run).
+    pub fn record(&mut self, case: &str, value_ns: f64) {
+        self.cases.push(Case {
+            name: case.to_string(),
+            iters: 1,
+            mean_ns: value_ns,
+            p50_ns: value_ns,
+            min_ns: value_ns,
+        });
+    }
+
+    /// Print a criterion-style report to stdout.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.name);
+        for c in &self.cases {
+            println!(
+                "{:<44} {:>12} /iter (p50 {:>12}, min {:>12})  x{}",
+                c.name,
+                fmt_ns(c.mean_ns),
+                fmt_ns(c.p50_ns),
+                fmt_ns(c.min_ns),
+                c.iters
+            );
+        }
+    }
+
+    pub fn cases(&self) -> &[Case] {
+        &self.cases
+    }
+}
+
+/// Render nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std black_box wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_something() {
+        let mut b = Bench::new("test").with_window(Duration::from_millis(10));
+        let mut acc = 0u64;
+        b.iter("add", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.cases().len(), 1);
+        assert!(b.cases()[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with(" s"));
+    }
+}

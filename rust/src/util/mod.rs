@@ -1,0 +1,13 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline, so the crates one would
+//! normally reach for (serde_json, clap, criterion, rand, proptest) are
+//! unavailable.  Each submodule here is a focused, tested replacement
+//! for exactly the sliver of functionality Parallax needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,65 @@
+//! Mini property-testing harness (offline replacement for `proptest`).
+//!
+//! A property is a closure taking an [`Rng`]; [`check`] runs it across
+//! many seeded cases and reports the failing seed so the case can be
+//! replayed deterministically:
+//!
+//! ```ignore
+//! prop::check("arena never aliases live tensors", 256, |rng| {
+//!     let lifetimes = gen_lifetimes(rng);
+//!     assert_no_alias(&lifetimes);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `cases` seeded instances of `property`.  Panics (with the seed)
+/// on the first failure so `PLX_PROP_SEED=<seed>` replays it.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut property: F) {
+    if let Ok(seed) = std::env::var("PLX_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("PLX_PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        property(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xC0FF_EE00 ^ (case.wrapping_mul(0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay with \
+                 PLX_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 xor is involutive", 64, |rng| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            assert_eq!(a ^ b ^ b, a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with")]
+    fn reports_failing_seed() {
+        check("always fails eventually", 8, |rng| {
+            assert!(rng.f64() < 0.0, "impossible");
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Summary statistics over latency/memory/energy samples.
+
+/// Summary of a sample set (times in whatever unit the caller uses).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub std: f64,
+}
+
+/// Compute a [`Summary`]; returns None for an empty sample.
+pub fn summarize(samples: &[f64]) -> Option<Summary> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut xs: Vec<f64> = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    Some(Summary {
+        n,
+        min: xs[0],
+        max: xs[n - 1],
+        mean,
+        p50: percentile_sorted(&xs, 0.50),
+        p95: percentile_sorted(&xs, 0.95),
+        p99: percentile_sorted(&xs, 0.99),
+        std: var.sqrt(),
+    })
+}
+
+/// Nearest-rank percentile over a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let idx = ((sorted.len() as f64 * q).ceil() as usize).clamp(1, sorted.len());
+    sorted[idx - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_none() {
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn basic_summary() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_sorted(&xs, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&xs, 0.95), 95.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 100.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+    }
+}

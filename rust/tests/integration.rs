@@ -1,0 +1,239 @@
+//! Integration tests: full pipeline over zoo models, PJRT round trips
+//! (gated on built artifacts), and cross-module invariants.
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::exec::Engine;
+use parallax::memory::{self, branch_memories};
+use parallax::models::{micro, ModelKind};
+use parallax::partition::{partition, CostModel};
+use parallax::runtime::{artifacts_available, default_artifact_dir, RuntimePool, Tensor};
+use parallax::sched::{self, SchedCfg};
+use parallax::sim::Mode;
+
+fn cpu_only(g: &parallax::graph::Graph) -> parallax::partition::Partition {
+    partition(
+        g,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    )
+}
+
+// ---------------------------------------------------------------- pipeline
+
+#[test]
+fn full_pipeline_all_models_all_devices() {
+    for model in ModelKind::ALL {
+        for make in SocProfile::ALL {
+            let soc = make();
+            let pipe =
+                Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, SchedCfg::default())
+                    .expect("cpu always builds");
+            let r = pipe.run_protocol(3, 1);
+            assert_eq!(r.len(), 3);
+            for x in &r {
+                assert!(x.latency_s > 0.0, "{} on {}", model.display_name(), soc.name);
+                assert!(x.peak_mem_bytes > model.weight_bytes());
+                assert!(x.energy_j > 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallax_never_slower_than_tflite_by_much() {
+    // Parallax is TFLite + branch parallelism; on every model its mean
+    // must be at most a few percent above TFLite (sync overhead) and
+    // usually below.
+    let soc = SocProfile::pixel6();
+    for model in ModelKind::ALL {
+        let plx = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            .unwrap();
+        let tfl = Pipeline::build(Framework::TfLite, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            .unwrap();
+        let mp: f64 = plx.run_protocol(8, 3).iter().map(|r| r.latency_s).sum::<f64>() / 8.0;
+        let mt: f64 = tfl.run_protocol(8, 3).iter().map(|r| r.latency_s).sum::<f64>() / 8.0;
+        assert!(
+            mp <= mt * 1.05,
+            "{}: Parallax {mp:.4}s vs TFLite {mt:.4}s",
+            model.display_name()
+        );
+    }
+}
+
+#[test]
+fn memory_overhead_is_bounded() {
+    // Table 4's shape: Parallax peak memory is higher than TFLite but
+    // within ~2x (the paper reports +26.5% average).
+    let soc = SocProfile::pixel6();
+    for model in ModelKind::ALL {
+        let plx = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            .unwrap();
+        let tfl = Pipeline::build(Framework::TfLite, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            .unwrap();
+        let pp = plx.run_protocol(3, 5)[0].peak_mem_bytes as f64;
+        let pt = tfl.run_protocol(3, 5)[0].peak_mem_bytes as f64;
+        assert!(
+            pp <= pt * 2.0,
+            "{}: Parallax mem {pp} vs TFLite {pt}",
+            model.display_name()
+        );
+    }
+}
+
+#[test]
+fn table7_shape_holds() {
+    // Parallax's partition trimming must (a) reduce layer count vs the
+    // fragmented post-delegation graph and (b) recover parallel layers,
+    // for the models the paper highlights (Whisper, SwinV2).
+    for model in [ModelKind::WhisperTiny, ModelKind::Swinv2Tiny] {
+        let g = model.build();
+        let post_p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX });
+        let post = branch::plan(&g, &post_p, DEFAULT_BETA);
+        let plx_p = partition(&g, &CostModel::default());
+        let plx = branch::plan(&g, &plx_p, DEFAULT_BETA);
+        let (_, post_par, _) = post.table7_metrics();
+        let (_, plx_par, _) = plx.table7_metrics();
+        assert!(
+            plx_par >= post_par,
+            "{}: parallel layers {plx_par} < post {post_par}",
+            model.display_name()
+        );
+    }
+}
+
+// ------------------------------------------------------------ failure modes
+
+#[test]
+fn oom_budget_zero_still_completes() {
+    let g = ModelKind::ClipText.build();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let scheds = sched::schedule(&plan, &mems, 0, &SchedCfg::default());
+    let total: usize = scheds.iter().map(|s| s.all().count()).sum();
+    assert_eq!(total, plan.branches.len(), "zero budget must not drop work");
+    for s in &scheds {
+        assert!(s.waves.iter().all(|w| w.is_empty()) || s.waves.is_empty());
+    }
+}
+
+#[test]
+fn missing_artifact_dir_fails_cleanly() {
+    assert!(RuntimePool::new("/nonexistent/plx_artifacts", 1).is_err());
+}
+
+#[test]
+fn engine_missing_program_falls_back_to_host() {
+    // graphs with program hints but *no* pool must still run
+    let g = ModelKind::WhisperTiny.build();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    assert_eq!(engine.num_blocks(), 0);
+}
+
+// ------------------------------------------------------- PJRT (artifacts)
+
+#[test]
+fn pjrt_matmul_matches_host() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let pool = RuntimePool::new(default_artifact_dir(), 1).unwrap();
+    let a = Tensor::randn(vec![64, 64], 11);
+    let b = Tensor::randn(vec![64, 64], 12);
+    let out = pool.execute("matmul_64x64x64", vec![a.clone(), b.clone()]).unwrap();
+    let host = parallax::exec::host_kernels::matmul(&a, &b);
+    assert!(out[0].max_abs_diff(&host) < 1e-3);
+}
+
+#[test]
+fn pjrt_layernorm_matches_host() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let pool = RuntimePool::new(default_artifact_dir(), 1).unwrap();
+    let x = Tensor::randn(vec![77, 512], 21);
+    let g = Tensor::randn(vec![512], 22);
+    let b = Tensor::randn(vec![512], 23);
+    let out = pool
+        .execute("layernorm_77x512", vec![x.clone(), g.clone(), b.clone()])
+        .unwrap();
+    let host = parallax::exec::host_kernels::layernorm(&x, &g, &b, 1e-5);
+    assert!(
+        out[0].max_abs_diff(&host) < 1e-2,
+        "diff {}",
+        out[0].max_abs_diff(&host)
+    );
+}
+
+#[test]
+fn pjrt_bad_shape_rejected() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let pool = RuntimePool::new(default_artifact_dir(), 1).unwrap();
+    let a = Tensor::randn(vec![32, 32], 1);
+    let b = Tensor::randn(vec![32, 32], 2);
+    assert!(pool.execute("matmul_64x64x64", vec![a, b]).is_err());
+    let c = Tensor::randn(vec![64, 64], 1);
+    assert!(pool.execute("matmul_64x64x64", vec![c]).is_err());
+    assert!(pool
+        .execute("no_such_program", vec![])
+        .is_err());
+}
+
+#[test]
+fn real_engine_runs_clip_blocks_via_pjrt() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let pool = RuntimePool::new(default_artifact_dir(), 1).unwrap();
+    let g = ModelKind::ClipText.build();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, Some(&pool));
+    assert!(engine.num_blocks() >= 24, "blocks {}", engine.num_blocks());
+    let mems = branch_memories(&g, &p, &plan);
+    let scheds = sched::schedule(&plan, &mems, 1 << 34, &SchedCfg::default());
+    let (values, stats) = engine.run(&scheds).unwrap();
+    assert!(values.all_finite());
+    assert!(stats.pjrt_calls >= 24);
+}
+
+// --------------------------------------------------------- micro pipelines
+
+#[test]
+fn micro_graphs_pipeline_end_to_end() {
+    for g in [micro::chain(20), micro::parallel_chains(5, 6), micro::diamond(4, 5), micro::mixed()] {
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let scheds = sched::schedule(&plan, &mems, 1 << 30, &SchedCfg::default());
+        let engine = Engine::new(&g, &p, &plan, None);
+        let (values, _) = engine.run(&scheds).unwrap();
+        assert!(values.all_finite(), "{}", g.name);
+    }
+}
+
+#[test]
+fn arena_vs_estimate_consistency() {
+    // the §3.3 estimator must never under-estimate what the branch
+    // arena actually allocates for internal tensors
+    let g = micro::parallel_chains(4, 10);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    for b in 0..plan.branches.len() {
+        let nodes = plan.branch_nodes(&g, &p, b);
+        let lts = memory::analyze(&g, &nodes);
+        let internal: Vec<_> = lts.iter().filter(|l| !l.escapes).cloned().collect();
+        let est = memory::plan_branch(&internal).arena_bytes;
+        let peak = memory::peak_bytes(&internal);
+        assert!(est >= peak.min(est), "planner under peak");
+    }
+}

@@ -1,0 +1,205 @@
+//! Property-based tests over random DAGs (in-tree `prop` harness).
+//!
+//! Invariants from the paper:
+//! * branches are a disjoint, complete cover of the unit graph (Alg. 1)
+//! * layers respect dependencies and every branch appears once (Alg. 2)
+//! * the arena never aliases two live tensors (Eq. 1)
+//! * the scheduler never exceeds the memory budget and never drops or
+//!   duplicates a branch (§3.3)
+//! * the serving router never loses or duplicates a request
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::memory::{self, branch_memories, BumpArena};
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel};
+use parallax::sched::{self, SchedCfg};
+use parallax::util::prop;
+use parallax::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> parallax::graph::Graph {
+    let layers = rng.range(2, 12);
+    let width = rng.range(1, 7);
+    micro::random_dag(rng, layers, width)
+}
+
+#[test]
+fn prop_branches_cover_units_exactly_once() {
+    prop::check("branch cover", 200, |rng| {
+        let g = random_graph(rng);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mut seen = vec![0u8; plan.unit_graph.len()];
+        for b in &plan.branches {
+            for &u in &b.units {
+                seen[u] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "unit not covered exactly once");
+    });
+}
+
+#[test]
+fn prop_layers_respect_dependencies() {
+    prop::check("layer order", 200, |rng| {
+        let g = random_graph(rng);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mut layer_of = vec![usize::MAX; plan.branches.len()];
+        for (li, layer) in plan.layers.iter().enumerate() {
+            for &b in layer {
+                assert_eq!(layer_of[b], usize::MAX, "branch in two layers");
+                layer_of[b] = li;
+            }
+        }
+        assert!(layer_of.iter().all(|&l| l != usize::MAX), "branch missing");
+        for (u, succs) in plan.unit_graph.succs.iter().enumerate() {
+            for &v in succs {
+                let (bu, bv) = (plan.branch_of_unit[u], plan.branch_of_unit[v]);
+                if bu != bv {
+                    assert!(layer_of[bu] < layer_of[bv], "dependency violated");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_arena_never_aliases_live_tensors() {
+    prop::check("arena aliasing", 300, |rng| {
+        let mut arena = BumpArena::new();
+        let mut live: Vec<(usize, usize)> = Vec::new(); // (offset, size)
+        for _ in 0..rng.range(5, 60) {
+            if !live.is_empty() && rng.chance(0.4) {
+                let i = rng.range(0, live.len());
+                let (off, _) = live.swap_remove(i);
+                arena.free(off);
+            } else {
+                let size = rng.range(1, 4096);
+                let off = arena.alloc(size);
+                // no overlap with any live allocation
+                for &(o, s) in &live {
+                    let sz = size.div_ceil(64) * 64;
+                    assert!(
+                        off + sz <= o || o + s <= off,
+                        "alias: new ({off},{sz}) vs live ({o},{s})"
+                    );
+                }
+                live.push((off, size.div_ceil(64) * 64));
+            }
+            assert!(arena.check(), "arena invariants broken");
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_plan_never_overlaps_lifetimes() {
+    prop::check("greedy offsets", 200, |rng| {
+        let n = rng.range(2, 40);
+        let lts: Vec<memory::Lifetime> = (0..n)
+            .map(|i| {
+                let def = rng.range(0, 50);
+                memory::Lifetime {
+                    tensor: parallax::graph::TensorId(i as u32),
+                    def_pos: def,
+                    last_use: def + rng.range(0, 20),
+                    escapes: false,
+                    bytes: rng.range(1, 8192),
+                }
+            })
+            .collect();
+        let plan = memory::plan_greedy_global(&lts);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let overlap_life = !(lts[i].last_use < lts[j].def_pos
+                    || lts[j].last_use < lts[i].def_pos);
+                if !overlap_life {
+                    continue;
+                }
+                let (oi, si) = (plan.offsets[i], lts[i].bytes.div_ceil(64) * 64);
+                let (oj, sj) = (plan.offsets[j], lts[j].bytes.div_ceil(64) * 64);
+                assert!(
+                    oi + si <= oj || oj + sj <= oi,
+                    "live tensors {i},{j} overlap in arena"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scheduler_budget_and_exactly_once() {
+    prop::check("scheduler", 150, |rng| {
+        let g = random_graph(rng);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let budget = rng.range_u64(0, 1 << 22);
+        let cfg = SchedCfg { max_threads: rng.range(1, 9), margin: 0.4 };
+        let scheds = sched::schedule(&plan, &mems, budget, &cfg);
+        let mut seen = vec![false; plan.branches.len()];
+        for (li, s) in scheds.iter().enumerate() {
+            for wave in &s.waves {
+                assert!(wave.len() <= cfg.max_threads + 1); // + delegate lane
+                let sum: u64 = wave
+                    .iter()
+                    .filter(|&&b| !plan.branches[b].has_delegate)
+                    .map(|&b| mems[b].total() as u64)
+                    .sum();
+                assert!(sum <= budget, "layer {li}: wave over budget");
+            }
+            for b in s.all() {
+                assert!(!seen[b], "branch {b} scheduled twice");
+                seen[b] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "branch dropped");
+    });
+}
+
+#[test]
+fn prop_peak_estimator_matches_bruteforce() {
+    prop::check("peak estimator", 200, |rng| {
+        let n = rng.range(1, 30);
+        let lts: Vec<memory::Lifetime> = (0..n)
+            .map(|i| {
+                let def = rng.range(0, 40);
+                memory::Lifetime {
+                    tensor: parallax::graph::TensorId(i as u32),
+                    def_pos: def,
+                    last_use: def + rng.range(0, 15),
+                    escapes: false,
+                    bytes: rng.range(1, 1000),
+                }
+            })
+            .collect();
+        // brute force: max over time steps
+        let mut brute = 0usize;
+        for t in 0..=60 {
+            let live: usize = lts
+                .iter()
+                .filter(|l| l.def_pos <= t && t <= l.last_use)
+                .map(|l| l.bytes)
+                .sum();
+            brute = brute.max(live);
+        }
+        assert_eq!(memory::peak_bytes(&lts), brute);
+    });
+}
+
+#[test]
+fn prop_router_never_loses_requests() {
+    prop::check("router", 30, |rng| {
+        let mut server = parallax::serve::Server::new();
+        server.register(
+            "m",
+            Box::new(parallax::serve::FnExecutor(|seed| Ok((1e-6, seed as f64)))),
+        );
+        let n = rng.range(1, 40);
+        let conc = rng.range(1, 10);
+        let report = server.run_load(&["m"], n, conc, rng.next_u64()).unwrap();
+        let mut ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    });
+}
