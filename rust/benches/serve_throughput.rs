@@ -1,0 +1,191 @@
+//! Serving-throughput bench: one governed, micro-batching dispatcher
+//! vs the per-model-isolated baseline (ISSUE 2 acceptance criterion).
+//!
+//! `cargo bench --bench serve_throughput` drives identical closed-loop
+//! CLIP-text + DistilBERT + YOLOv8n traffic (same skewed mix, offered
+//! load, and seeds) through two deployments:
+//!
+//! * **isolated** — the pre-governor layout: one single-worker server
+//!   per model, private unlimited ledgers, no batching;
+//! * **governed** — one shared dispatcher: pooled workers, round-robin
+//!   fairness, micro-batching, and one device-wide [`MemoryGovernor`]
+//!   that every admission leases branch-peak memory from.
+//!
+//! Reports per-model p50/p99, total throughput, mean batch size, and
+//! the governor's peak-reserved high-water mark vs its budget.
+//!
+//! [`MemoryGovernor`]: parallax::sched::MemoryGovernor
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::device::SocProfile;
+use parallax::models::ModelKind;
+use parallax::sched::{MemoryGovernor, SchedCfg};
+use parallax::serve::{pipeline_executor, ModelExecutor, Response, ServeCfg, Server};
+use parallax::sim::Mode;
+use parallax::util::stats::summarize;
+
+const MODELS: [ModelKind; 3] =
+    [ModelKind::ClipText, ModelKind::DistilBert, ModelKind::Yolov8n];
+/// 4:1:1 skew toward the text encoder — the mix where work-conserving
+/// shared workers pay off over private lanes.
+const LOAD: [&str; 6] =
+    ["clip-text", "clip-text", "distilbert", "clip-text", "clip-text", "yolov8n"];
+const N: usize = 240;
+const CONCURRENCY: usize = 12;
+const SEED: u64 = 2026;
+
+fn build_pipeline(model: ModelKind, gov: Option<&Arc<MemoryGovernor>>) -> Pipeline {
+    let pipe = Pipeline::build(
+        Framework::Parallax,
+        model,
+        &SocProfile::pixel6(),
+        Mode::CpuOnly,
+        SchedCfg::default(),
+    )
+    .expect("cpu always supported");
+    match gov {
+        Some(g) => pipe.with_governor(g.clone()),
+        None => pipe,
+    }
+}
+
+fn executor(pipe: Pipeline, rng_seed: u64) -> Box<dyn ModelExecutor> {
+    pipeline_executor(pipe, rng_seed).1
+}
+
+/// Closed-loop driver: `n` requests over the load mix, `conc` in
+/// flight, routed to whichever server owns the model.
+fn drive(
+    servers: &[Server],
+    pick: impl Fn(&str) -> usize,
+    n: usize,
+    conc: usize,
+    seed: u64,
+) -> (Vec<Response>, f64) {
+    let t0 = Instant::now();
+    let mut pending: Vec<mpsc::Receiver<anyhow::Result<Response>>> = Vec::new();
+    let mut done: Vec<Response> = Vec::new();
+    for i in 0..n {
+        let model = LOAD[i % LOAD.len()];
+        let srv = &servers[pick(model)];
+        pending.push(srv.submit(model, seed ^ i as u64).expect("known model"));
+        if pending.len() >= conc {
+            done.push(pending.remove(0).recv().expect("reply").expect("exec ok"));
+        }
+    }
+    for rx in pending {
+        done.push(rx.recv().expect("reply").expect("exec ok"));
+    }
+    (done, t0.elapsed().as_secs_f64())
+}
+
+fn report(tag: &str, responses: &[Response], wall: f64) -> f64 {
+    println!("\n-- {tag}: {} req in {wall:.2}s = {:.1} req/s", responses.len(),
+        responses.len() as f64 / wall);
+    let mut overall: Vec<f64> = Vec::new();
+    for model in MODELS {
+        let lats: Vec<f64> = responses
+            .iter()
+            .filter(|r| r.model == model.slug())
+            .map(|r| r.latency_s * 1e3)
+            .collect();
+        overall.extend(lats.iter().map(|l| l / 1e3));
+        let s = summarize(&lats).expect("model served");
+        println!(
+            "   {:<12} n={:<3} p50 {:>8.2} ms  p99 {:>8.2} ms  max {:>8.2} ms",
+            model.slug(),
+            s.n,
+            s.p50,
+            s.p99,
+            s.max
+        );
+    }
+    let s = summarize(&overall).unwrap();
+    let batch: f64 = responses.iter().map(|r| r.batched as f64).sum::<f64>()
+        / responses.len() as f64;
+    println!(
+        "   {:<12} n={:<3} p50 {:>8.2} ms  p99 {:>8.2} ms  mean batch {batch:.2}",
+        "ALL",
+        s.n,
+        s.p50 * 1e3,
+        s.p99 * 1e3
+    );
+    s.p99
+}
+
+fn main() {
+    // per-model branch-peak demands drive both sizing and admission
+    let demands: Vec<u64> = MODELS
+        .iter()
+        .map(|&m| build_pipeline(m, None).peak_branch_demand())
+        .collect();
+    for (model, d) in MODELS.iter().zip(&demands) {
+        println!("{:<12} branch-peak demand {:>7.2} MB", model.slug(), *d as f64 / 1e6);
+    }
+
+    // -------- baseline: per-model isolated lanes (old layout) --------
+    let isolated: Vec<Server> = MODELS
+        .iter()
+        .enumerate()
+        .map(|(i, &model)| {
+            let gov = Arc::new(MemoryGovernor::unlimited());
+            let mut s =
+                Server::with_config(ServeCfg { workers: 1, max_batch: 1 }, gov.clone());
+            s.register_with_demand(
+                model.slug(),
+                demands[i],
+                executor(build_pipeline(model, None), 7 + i as u64),
+            );
+            s
+        })
+        .collect();
+    let route = |m: &str| MODELS.iter().position(|k| k.slug() == m).unwrap();
+    let (iso_resp, iso_wall) = drive(&isolated, route, N, CONCURRENCY, SEED);
+    let iso_p99 = report("isolated (1 worker/model, no batching)", &iso_resp, iso_wall);
+    drop(isolated);
+
+    // -------- governed: shared dispatcher + device-wide ledger --------
+    let mut sorted = demands.clone();
+    sorted.sort_unstable();
+    // room for the two hungriest models at once; the third must wait
+    let budget = sorted[sorted.len() - 1] + sorted[sorted.len() - 2];
+    let gov = Arc::new(MemoryGovernor::new(budget));
+    let mut governed =
+        Server::with_config(ServeCfg { workers: 3, max_batch: 8 }, gov.clone());
+    for (i, &model) in MODELS.iter().enumerate() {
+        governed.register_with_demand(
+            model.slug(),
+            demands[i],
+            executor(build_pipeline(model, Some(&gov)), 7 + i as u64),
+        );
+    }
+    let (gov_resp, gov_wall) = drive(
+        std::slice::from_ref(&governed),
+        |_| 0,
+        N,
+        CONCURRENCY,
+        SEED,
+    );
+    let gov_p99 = report("governed (3 shared workers, micro-batching)", &gov_resp, gov_wall);
+
+    let stats = gov.stats();
+    println!(
+        "\ngovernor: budget {:.2} MB, peak reserved {:.2} MB ({}), \
+         {} grants, {} waits, {} over-budget",
+        budget as f64 / 1e6,
+        stats.peak_reserved as f64 / 1e6,
+        if stats.peak_reserved <= budget { "UNDER BUDGET" } else { "OVER BUDGET!" },
+        stats.grants,
+        stats.waits,
+        stats.over_budget_grants
+    );
+    println!(
+        "p99 governed {:.2} ms vs isolated {:.2} ms -> {}",
+        gov_p99 * 1e3,
+        iso_p99 * 1e3,
+        if gov_p99 <= iso_p99 * 1.05 { "OK (no worse at equal offered load)" } else { "REGRESSION" }
+    );
+}

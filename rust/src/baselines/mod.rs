@@ -12,13 +12,15 @@
 //! Parallax is the same machinery with its cost-model partitioning,
 //! Branch-Layer parallel execution and per-branch arenas.
 
+use std::sync::Arc;
+
 use crate::branch::{self, BranchPlan, DEFAULT_BETA};
 use crate::device::SocProfile;
 use crate::graph::Graph;
 use crate::memory::{branch_memories, BranchMemory};
 use crate::models::ModelKind;
 use crate::partition::{partition, CostModel, Partition};
-use crate::sched::{self, LayerSchedule, SchedCfg};
+use crate::sched::{self, LayerSchedule, MemoryGovernor, SchedCfg};
 use crate::sim::{activation_footprint, simulate, FrameworkProfile, Mode, SimResult};
 use crate::util::rng::Rng;
 
@@ -195,6 +197,10 @@ pub struct Pipeline {
     pub weight_bytes: u64,
     /// Precomputed fill-independent activation footprint (§Perf).
     pub activation_bytes: u64,
+    /// Shared device-wide ledger; when set, per-inference budgets are
+    /// capped by the governor so co-resident pipelines plan within one
+    /// global envelope.
+    pub governor: Option<Arc<MemoryGovernor>>,
 }
 
 impl Pipeline {
@@ -224,14 +230,44 @@ impl Pipeline {
             mems,
             cfg,
             activation_bytes,
+            governor: None,
         })
+    }
+
+    /// Attach a shared device-wide [`MemoryGovernor`] (builder style).
+    pub fn with_governor(mut self, governor: Arc<MemoryGovernor>) -> Self {
+        self.governor = Some(governor);
+        self
+    }
+
+    /// Worst-case concurrent §3.3 demand of this pipeline: the max over
+    /// layers of the summed CPU branch peaks — what a serving host
+    /// should lease from the governor while a request is in flight.
+    pub fn peak_branch_demand(&self) -> u64 {
+        self.plan
+            .layers
+            .iter()
+            .map(|layer| {
+                layer
+                    .iter()
+                    .filter(|&&b| !self.plan.branches[b].has_delegate)
+                    .map(|&b| self.mems[b].total() as u64)
+                    .sum::<u64>()
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Schedule for one inference (queries simulated OS free memory).
     pub fn schedule(&self, rng: &mut Rng) -> Vec<LayerSchedule> {
         if self.profile.branch_parallel {
             let free = self.soc.query_free_memory(rng);
-            sched::schedule(&self.plan, &self.mems, self.cfg.budget(free), &self.cfg)
+            let mut budget = self.cfg.budget(free);
+            if let Some(gov) = &self.governor {
+                // one shared envelope: never plan past the device ledger
+                budget = budget.min(gov.budget());
+            }
+            sched::schedule(&self.plan, &self.mems, budget, &self.cfg)
         } else {
             // sequential frameworks: every branch one-at-a-time
             self.plan

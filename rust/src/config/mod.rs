@@ -5,6 +5,10 @@
 //! emit: `key = value` lines under `[section]` headers, with string,
 //! integer, float and boolean values.  Comments (`#`) and blank lines
 //! are ignored.
+//!
+//! Recognised sections: `[run]` (model/device/mode/protocol),
+//! `[scheduler]` (§3.3 knobs) and `[serve]` (dispatcher workers,
+//! micro-batch cap, device-wide governor budget).
 
 use std::collections::HashMap;
 
@@ -68,6 +72,32 @@ impl RawConfig {
     }
 }
 
+/// Serving-dispatcher settings (`[serve]` section + `parallax serve`
+/// flags): worker pool size, micro-batch cap, and the device-wide
+/// memory budget the [`crate::sched::MemoryGovernor`] enforces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeSettings {
+    /// Shared dispatcher worker threads.
+    pub workers: usize,
+    /// Max requests per model served under one admission.
+    pub max_batch: usize,
+    /// Device-wide governor budget, MB.
+    pub budget_mb: usize,
+}
+
+impl Default for ServeSettings {
+    fn default() -> Self {
+        Self { workers: 4, max_batch: 8, budget_mb: 512 }
+    }
+}
+
+impl ServeSettings {
+    /// Governor budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_mb as u64 * 1_000_000
+    }
+}
+
 /// Typed run configuration (CLI flags override file values).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -75,6 +105,7 @@ pub struct RunConfig {
     pub device: SocProfile,
     pub mode: Mode,
     pub sched: SchedCfg,
+    pub serve: ServeSettings,
     pub runs: usize,
     pub warmup: usize,
     pub seed: u64,
@@ -87,6 +118,7 @@ impl Default for RunConfig {
             device: SocProfile::pixel6(),
             mode: Mode::CpuOnly,
             sched: SchedCfg::default(),
+            serve: ServeSettings::default(),
             runs: 20,
             warmup: 5,
             seed: 42,
@@ -113,11 +145,20 @@ impl RunConfig {
         }
         c.sched.max_threads = raw.get_usize("scheduler.max_threads", c.sched.max_threads);
         c.sched.margin = raw.get_f64("scheduler.margin", c.sched.margin);
+        c.serve.workers = raw.get_usize("serve.workers", c.serve.workers);
+        c.serve.max_batch = raw.get_usize("serve.max_batch", c.serve.max_batch);
+        c.serve.budget_mb = raw.get_usize("serve.budget_mb", c.serve.budget_mb);
         c.runs = raw.get_usize("run.runs", c.runs);
         c.warmup = raw.get_usize("run.warmup", c.warmup);
         c.seed = raw.get_usize("run.seed", c.seed as usize) as u64;
         if !(0.0..1.0).contains(&c.sched.margin) {
             return Err(format!("margin {} out of [0,1)", c.sched.margin));
+        }
+        if c.serve.workers == 0 || c.serve.max_batch == 0 {
+            return Err("serve.workers and serve.max_batch must be >= 1".to_string());
+        }
+        if c.serve.budget_mb == 0 {
+            return Err("serve.budget_mb must be >= 1".to_string());
         }
         Ok(c)
     }
@@ -138,6 +179,11 @@ runs = 10
 [scheduler]
 max_threads = 4
 margin = 0.3
+
+[serve]
+workers = 3
+max_batch = 16
+budget_mb = 768
 "#;
 
     #[test]
@@ -151,6 +197,8 @@ margin = 0.3
         assert_eq!(c.mode, Mode::Heterogeneous);
         assert_eq!(c.sched.max_threads, 4);
         assert!((c.sched.margin - 0.3).abs() < 1e-9);
+        assert_eq!(c.serve, ServeSettings { workers: 3, max_batch: 16, budget_mb: 768 });
+        assert_eq!(c.serve.budget_bytes(), 768_000_000);
     }
 
     #[test]
@@ -158,6 +206,10 @@ margin = 0.3
         let raw = RawConfig::parse("[run]\nmodel = \"gpt5\"\n").unwrap();
         assert!(RunConfig::from_raw(&raw).is_err());
         let raw = RawConfig::parse("[scheduler]\nmargin = 1.5\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[serve]\nworkers = 0\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+        let raw = RawConfig::parse("[serve]\nbudget_mb = 0\n").unwrap();
         assert!(RunConfig::from_raw(&raw).is_err());
         assert!(RawConfig::parse("not a toml line").is_err());
     }
@@ -168,5 +220,6 @@ margin = 0.3
         let c = RunConfig::from_raw(&raw).unwrap();
         assert_eq!(c.sched.max_threads, 6);
         assert_eq!(c.runs, 20);
+        assert_eq!(c.serve, ServeSettings::default());
     }
 }

@@ -385,7 +385,8 @@ pub fn ablation_beta() -> String {
             let fw = crate::baselines::parallax();
             let cfg = SchedCfg::default();
             let act = crate::sim::activation_footprint(&g, &p, &plan, &fw);
-            let scheds = crate::sched::schedule(&plan, &mems, 1 << 31, &cfg);
+            let gov = crate::sched::MemoryGovernor::new(1 << 31);
+            let scheds = crate::sched::schedule_governed(&plan, &mems, &gov, &cfg);
             let r = crate::sim::simulate(
                 &g, &p, &plan, &scheds, &mems, &fw, &soc, &cfg,
                 Mode::CpuOnly, 0.8, model.weight_bytes(), act,
@@ -455,7 +456,8 @@ pub fn ablation_cost_model() -> String {
             let fw = crate::baselines::parallax();
             let cfg = SchedCfg::default();
             let act = crate::sim::activation_footprint(&g, &p, &plan, &fw);
-            let scheds = crate::sched::schedule(&plan, &mems, 1 << 31, &cfg);
+            let gov = crate::sched::MemoryGovernor::new(1 << 31);
+            let scheds = crate::sched::schedule_governed(&plan, &mems, &gov, &cfg);
             let r = crate::sim::simulate(
                 &g, &p, &plan, &scheds, &mems, &fw, &soc, &cfg,
                 Mode::Heterogeneous, 0.8, model.weight_bytes(), act,

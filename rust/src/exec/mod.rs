@@ -11,8 +11,14 @@
 //! or memory budget, i.e. branch isolation is sound (§3.2).
 //!
 //! Weights are synthesised deterministically per tensor id (Parallax
-//! never inspects weights; see DESIGN.md §Substitutions).  Dynamic dims
-//! run at their maximum so artifact shapes line up.
+//! never inspects weights; see ARCHITECTURE.md §Substitutions).  Dynamic
+//! dims run at their maximum so artifact shapes line up.
+//!
+//! Multi-model hosts call [`Engine::run_governed`]: every wave leases
+//! its combined branch-peak demand from the process-wide
+//! [`MemoryGovernor`](crate::sched::MemoryGovernor) before spawning
+//! branch threads, so concurrently serving pipelines can never stack
+//! their individually-safe peaks into a device-level memory spike.
 
 pub mod host_kernels;
 
@@ -22,10 +28,10 @@ use std::sync::Mutex;
 
 use crate::branch::{BranchPlan, Unit};
 use crate::graph::{Graph, Node, NodeId, OpKind, TensorId};
-use crate::memory::BumpArena;
+use crate::memory::{BranchMemory, BumpArena};
 use crate::partition::Partition;
 use crate::runtime::{RuntimePool, Tensor};
-use crate::sched::LayerSchedule;
+use crate::sched::{LayerSchedule, MemoryGovernor};
 
 /// A program-hinted fused block discovered from the graph.
 #[derive(Clone, Debug)]
@@ -59,6 +65,9 @@ pub struct Engine<'a> {
     blocks: HashMap<NodeId, ProgramBlock>,
     /// Nodes subsumed by an *active* program block (skipped at run time).
     covered: std::collections::HashSet<NodeId>,
+    /// Per-branch peak demand M_i (§3.3) — what governed runs lease
+    /// from the process-wide ledger before executing a wave.
+    mems: Vec<BranchMemory>,
     /// Deterministic synthesized weights, keyed by source tensor id.
     weights: Mutex<HashMap<TensorId, Tensor>>,
     /// Synthesized program weight args, keyed by (program, arg index).
@@ -127,6 +136,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        let mems = crate::memory::branch_memories(graph, partition, plan);
         Self {
             graph,
             partition,
@@ -134,9 +144,19 @@ impl<'a> Engine<'a> {
             pool,
             blocks,
             covered,
+            mems,
             weights: Mutex::new(HashMap::new()),
             prog_weights: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Combined §3.3 peak demand of a wave's CPU branches (delegate
+    /// branches occupy the accelerator, not host arenas).
+    fn wave_demand(&self, wave: &[usize]) -> u64 {
+        wave.iter()
+            .filter(|&&b| !self.plan.branches[b].has_delegate)
+            .map(|&b| self.mems[b].total() as u64)
+            .sum()
     }
 
     /// Number of discovered PJRT-runnable blocks.
@@ -182,7 +202,27 @@ impl<'a> Engine<'a> {
     }
 
     /// Run one inference over the given per-layer schedules.
+    ///
+    /// Ungoverned convenience wrapper around
+    /// [`Engine::run_governed`] — single-pipeline tools where the
+    /// schedule's own budget is the only constraint.
     pub fn run(&self, schedules: &[LayerSchedule]) -> anyhow::Result<(Values, ExecStats)> {
+        self.run_governed(schedules, None)
+    }
+
+    /// Run one inference, leasing every wave's branch-peak demand from
+    /// the process-wide [`MemoryGovernor`] first.
+    ///
+    /// With a governor, concurrently running engines (multi-model
+    /// serving) block each other exactly when their combined §3.3 peaks
+    /// would exceed the device budget — the cross-model generalisation
+    /// of the per-layer budget rule.  Passing `None` skips admission
+    /// control and behaves like the classic single-model path.
+    pub fn run_governed(
+        &self,
+        schedules: &[LayerSchedule],
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<(Values, ExecStats)> {
         let t0 = std::time::Instant::now();
         let values = Values::default();
         let pjrt_calls = AtomicUsize::new(0);
@@ -196,6 +236,9 @@ impl<'a> Engine<'a> {
                 if wave.is_empty() {
                     continue;
                 }
+                // Admission control: hold the wave's combined peak for
+                // exactly as long as its branches are in flight.
+                let _lease = governor.map(|g| g.acquire(self.wave_demand(wave)));
                 let results: Vec<anyhow::Result<Vec<(TensorId, Tensor)>>> =
                     std::thread::scope(|scope| {
                         let handles: Vec<_> = wave
@@ -225,6 +268,7 @@ impl<'a> Engine<'a> {
             }
             // sequential spill
             for &b in &ls.sequential {
+                let _lease = governor.map(|g| g.acquire(self.wave_demand(&[b])));
                 let client = self.pool.map(|p| p.client());
                 let out = self.run_branch(
                     b, &values, client, &pjrt_calls, &host_ops, &skipped, &peak_arena,
@@ -529,7 +573,7 @@ mod tests {
     use crate::branch::{self, DEFAULT_BETA};
     use crate::memory::branch_memories;
     use crate::partition::{partition, CostModel};
-    use crate::sched::{self, SchedCfg};
+    use crate::sched::{self, MemoryGovernor, SchedCfg};
 
     fn full_setup(g: Graph) -> (Graph, Partition, BranchPlan) {
         let p = partition(
@@ -586,6 +630,38 @@ mod tests {
         let s = schedules(&g, &p, &plan, 4);
         let (_, stats) = engine.run(&s).unwrap();
         assert!(stats.peak_arena_bytes > 0);
+    }
+
+    #[test]
+    fn governed_run_matches_ungoverned() {
+        let (g, p, plan) = full_setup(crate::models::micro::parallel_chains(4, 6));
+        let engine = Engine::new(&g, &p, &plan, None);
+        let s = schedules(&g, &p, &plan, 4);
+        let gov = MemoryGovernor::new(1 << 30);
+        let (v1, _) = engine.run(&s).unwrap();
+        let (v2, _) = engine.run_governed(&s, Some(&gov)).unwrap();
+        assert_eq!(
+            v1.checksum(),
+            v2.checksum(),
+            "admission control must not change results"
+        );
+        assert_eq!(gov.in_use(), 0, "all leases returned");
+        assert!(gov.stats().grants > 0, "waves actually leased memory");
+        assert!(gov.peak_reserved() <= gov.budget());
+    }
+
+    #[test]
+    fn tight_governor_still_completes() {
+        // a budget smaller than any single branch forces degraded
+        // serial admission; the run must still complete and release.
+        let (g, p, plan) = full_setup(crate::models::micro::parallel_chains(4, 6));
+        let engine = Engine::new(&g, &p, &plan, None);
+        let s = schedules(&g, &p, &plan, 4);
+        let gov = MemoryGovernor::new(1);
+        let (v, _) = engine.run_governed(&s, Some(&gov)).unwrap();
+        assert!(v.all_finite());
+        assert_eq!(gov.in_use(), 0);
+        assert!(gov.stats().over_budget_grants > 0);
     }
 
     #[test]

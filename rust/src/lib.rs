@@ -7,17 +7,20 @@
 //! * **L3 (this crate)** — the paper's contribution: non-invasive graph
 //!   analysis ([`partition`], [`branch`]), branch-aware memory
 //!   management ([`memory`]), resource-constrained parallel scheduling
-//!   ([`sched`]), plus the substrates it needs: a graph IR ([`graph`]),
-//!   a model zoo ([`models`]), simulated edge SoCs ([`device`]), a
-//!   discrete-event executor ([`sim`]), baseline frameworks
-//!   ([`baselines`]), a real PJRT execution engine ([`exec`],
-//!   [`runtime`]) and a serving front-end ([`serve`]).
+//!   ([`sched`]) with a process-wide memory governor
+//!   ([`sched::MemoryGovernor`]), plus the substrates it needs: a graph
+//!   IR ([`graph`]), a model zoo ([`models`]), simulated edge SoCs
+//!   ([`device`]), a discrete-event executor ([`sim`]), baseline
+//!   frameworks ([`baselines`]), a real PJRT execution engine
+//!   ([`exec`], [`runtime`]) and a governed multi-model serving
+//!   front-end ([`serve`]).
 //! * **L2** — `python/compile/model.py`: JAX branch programs.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels, AOT-lowered to
 //!   HLO text that this crate loads via PJRT (`make artifacts`).
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `README.md` for the quickstart and the paper-table → bench-target
+//! map, and `ARCHITECTURE.md` for the paper-section → module map with
+//! the request lifecycle.
 
 pub mod baselines;
 pub mod util;

@@ -4,7 +4,7 @@
 //! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
 //! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|all>
 //! parallax inspect --model whisper-tiny        # graph/branch/layer stats
-//! parallax serve --requests 64 --concurrency 8 # serving demo
+//! parallax serve --requests 64 --concurrency 8 # governed serving demo
 //! parallax smoke                               # PJRT round-trip check
 //! ```
 
@@ -14,7 +14,6 @@ use parallax::config::{RawConfig, RunConfig};
 use parallax::device::SocProfile;
 use parallax::models::ModelKind;
 use parallax::partition::{partition, CostModel};
-use parallax::sched::SchedCfg;
 use parallax::sim::Mode;
 use parallax::util::cli::Args;
 use parallax::util::stats::summarize;
@@ -44,6 +43,7 @@ USAGE:
   parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|all>
   parallax inspect --model <slug> [--device <name>]
   parallax serve   [--requests N] [--concurrency N] [--threads N]
+                   [--workers N] [--batch N] [--budget-mb N] [--config file.toml]
   parallax smoke
 
 models:  yolov8n whisper-tiny swinv2-tiny clip-text distilbert
@@ -187,41 +187,64 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    // Simulated-device executors behind the real request router (the
-    // real-engine serving demo is examples/serve_text_encoders.rs).
+    // Simulated-device executors behind the real governed dispatcher
+    // (the real-engine serving demo is examples/serve_text_encoders.rs):
+    // concurrent CLIP-text + DistilBERT + YOLOv8n traffic admitted
+    // against one device-wide memory budget.
+    let mut cfg = run_config(args)?;
     let n = args.get_usize("requests", 64);
     let conc = args.get_usize("concurrency", 8);
-    let threads = args.get_usize("threads", 6);
+    cfg.serve.workers = args.get_usize("workers", cfg.serve.workers);
+    cfg.serve.max_batch = args.get_usize("batch", cfg.serve.max_batch);
+    cfg.serve.budget_mb = args.get_usize("budget-mb", cfg.serve.budget_mb);
     let soc = SocProfile::pixel6();
-    let cfg = SchedCfg { max_threads: threads, ..SchedCfg::default() };
+    let sched_cfg = cfg.sched;
 
-    let mut server = parallax::serve::Server::new();
-    for model in [ModelKind::ClipText, ModelKind::DistilBert] {
-        let pipe = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, cfg)
-            .expect("cpu supported");
-        let mut rng = parallax::util::rng::Rng::new(7);
-        server.register(
+    let governor = std::sync::Arc::new(parallax::sched::MemoryGovernor::new(
+        cfg.serve.budget_bytes(),
+    ));
+    let mut server = parallax::serve::Server::with_config(
+        parallax::serve::ServeCfg { workers: cfg.serve.workers, max_batch: cfg.serve.max_batch },
+        governor.clone(),
+    );
+    let models = [ModelKind::ClipText, ModelKind::DistilBert, ModelKind::Yolov8n];
+    for model in models {
+        let pipe = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, sched_cfg)
+            .expect("cpu supported")
+            .with_governor(governor.clone());
+        let (demand, exec) = parallax::serve::pipeline_executor(pipe, 7);
+        server.register_with_demand(model.slug(), demand, exec);
+        println!(
+            "registered {:<12} branch-peak demand {:.2} MB",
             model.slug(),
-            Box::new(parallax::serve::FnExecutor(move |seed| {
-                let fill = 0.15 + 0.85 * ((seed % 97) as f64 / 97.0);
-                let r = pipe.run(&mut rng, fill);
-                Ok((r.latency_s, r.energy_j))
-            })),
+            demand as f64 / 1e6
         );
     }
-    let report = server.run_load(&["clip-text", "distilbert"], n, conc, 11)?;
+    let names: Vec<&str> = models.iter().map(|m| m.slug()).collect();
+    let report = server.run_load(&names, n, conc, 11)?;
     println!(
         "served {n} requests at concurrency {conc}: {:.1} req/s (wall {:.2}s)",
         report.throughput_rps, report.wall_s
     );
     for (model, s) in &report.latency {
         println!(
-            "  {model:<12} p50 {:.2} ms  p95 {:.2} ms  max {:.2} ms",
+            "  {model:<12} p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
             s.p50 * 1e3,
             s.p95 * 1e3,
+            s.p99 * 1e3,
             s.max * 1e3
         );
     }
+    let stats = governor.stats();
+    println!(
+        "governor: budget {} MB, peak reserved {:.2} MB, {} grants, \
+         {} waits, {} over-budget grants",
+        cfg.serve.budget_mb,
+        stats.peak_reserved as f64 / 1e6,
+        stats.grants,
+        stats.waits,
+        stats.over_budget_grants
+    );
     Ok(())
 }
 

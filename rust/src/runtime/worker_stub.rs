@@ -1,0 +1,153 @@
+//! API-compatible stand-in for the PJRT worker when the crate is built
+//! without the `pjrt` feature (the offline default).
+//!
+//! Construction paths fail with a clear message instead of at link
+//! time, so the rest of the stack — simulator, scheduler, governor,
+//! serving front-end, host-kernel engine — builds and runs unchanged.
+//! `RuntimePool::new` still parses the manifest first, so "artifacts
+//! missing" and "backend missing" stay distinguishable errors.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::{Manifest, Tensor};
+
+const NO_BACKEND: &str =
+    "PJRT backend not compiled in: uncomment the `xla` dependency in Cargo.toml (needs \
+     network access), then build with `--features pjrt`";
+
+/// Handle to a single PJRT worker thread (stub: cannot be spawned).
+pub struct PjrtWorker {
+    submitted: Arc<AtomicUsize>,
+}
+
+/// Cloneable, `Send` client to one worker (stub: every call errors).
+#[derive(Clone)]
+pub struct WorkerClient {
+    submitted: Arc<AtomicUsize>,
+}
+
+impl WorkerClient {
+    /// Execute `program` with `inputs`; always reports the missing
+    /// backend in this build.
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        let _ = (program, inputs);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        anyhow::bail!(NO_BACKEND)
+    }
+}
+
+impl PjrtWorker {
+    /// Spawning always fails in a `pjrt`-less build.
+    pub fn spawn(manifest: Manifest) -> anyhow::Result<Self> {
+        let _ = manifest;
+        anyhow::bail!(NO_BACKEND)
+    }
+
+    /// Execute `program` with `inputs` (stub: errors).
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        self.client().execute(program, inputs)
+    }
+
+    /// Compile a program ahead of time (stub: errors).
+    pub fn warm(&self, program: &str) -> anyhow::Result<()> {
+        let _ = program;
+        anyhow::bail!(NO_BACKEND)
+    }
+
+    /// Requests submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    /// A cloneable `Send` client for cross-thread submission.
+    pub fn client(&self) -> WorkerClient {
+        WorkerClient { submitted: self.submitted.clone() }
+    }
+}
+
+/// Pool of PJRT workers (stub: construction fails after the manifest
+/// parses, mirroring the real pool's error order).
+pub struct RuntimePool {
+    workers: Vec<PjrtWorker>,
+    manifest: Manifest,
+}
+
+/// Cheap handle onto one worker slot of the pool.
+pub struct WorkerHandle<'a> {
+    pub(crate) worker: &'a PjrtWorker,
+}
+
+impl RuntimePool {
+    /// Spawn `n` workers over the artifacts in `dir` — in this build,
+    /// parse the manifest and then report the missing backend.
+    pub fn new(dir: impl AsRef<std::path::Path>, n: usize) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let _ = (n, manifest);
+        anyhow::bail!(NO_BACKEND)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick a worker (stub pools are never constructed, so this is
+    /// unreachable in practice).
+    pub fn worker(&self) -> WorkerHandle<'_> {
+        WorkerHandle { worker: &self.workers[0] }
+    }
+
+    /// Cloneable client (see [`RuntimePool::worker`]).
+    pub fn client(&self) -> WorkerClient {
+        self.workers[0].client()
+    }
+
+    /// Execute on the next worker.
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        self.worker().worker.execute(program, inputs)
+    }
+
+    /// Pre-compile the given programs across all workers.
+    pub fn warm(&self, programs: &[&str]) -> anyhow::Result<()> {
+        for w in &self.workers {
+            for p in programs {
+                w.warm(p)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl WorkerHandle<'_> {
+    pub fn execute(&self, program: &str, inputs: Vec<Tensor>) -> anyhow::Result<Vec<Tensor>> {
+        self.worker.execute(program, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_reports_missing_backend() {
+        let dir = std::env::temp_dir().join("plx_stub_worker_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"[{"name":"m","file":"m.hlo.txt","inputs":[[1]],"outputs":[[1]],"flops":1}]"#,
+        )
+        .unwrap();
+        let err = RuntimePool::new(&dir, 1).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn missing_manifest_still_reported_first() {
+        let err = RuntimePool::new("/nonexistent/plx_stub", 1).unwrap_err().to_string();
+        assert!(!err.contains("pjrt"), "manifest error should win: {err}");
+    }
+}

@@ -1,0 +1,372 @@
+//! Global memory governor: a process-wide budget ledger for branch-peak
+//! reservations (paper §3.3, lifted from per-model to device-wide).
+//!
+//! The per-layer scheduler guarantees that *one* model's concurrent
+//! branches fit a working budget, but a serving host runs many model
+//! pipelines at once — without a shared ledger their individually-safe
+//! schedules can add up to the exact memory spike §3.3 is designed to
+//! prevent.  The governor closes that gap: every executor (the real
+//! engine's waves, the serving dispatcher's admission control, the
+//! simulator's budget derivation) leases its peak demand from one
+//! process-wide [`MemoryGovernor`] and blocks while the device budget
+//! is exhausted.
+//!
+//! Design points:
+//!
+//! * **RAII leases** — [`MemoryGovernor::acquire`] returns a [`Lease`]
+//!   that returns its bytes on drop and wakes waiters; forgetting to
+//!   release is impossible.
+//! * **Backpressure, not failure** — when the ledger is full, `acquire`
+//!   parks on a condvar until capacity frees up. [`MemoryGovernor::try_acquire`]
+//!   is the non-blocking variant for callers with a fallback plan.
+//! * **FIFO admission** — blocking acquirers are served strictly in
+//!   arrival order, so a large reservation can never be starved by a
+//!   stream of smaller ones barging past it.
+//! * **Guaranteed progress** — a request larger than the whole budget
+//!   can never fit, so it is granted *only* while no memory-holding
+//!   lease is live (degraded serial mode, counted in
+//!   [`GovernorStats::over_budget_grants`]). This mirrors the §3.3
+//!   spill rule: a branch that exceeds the budget on its own still runs,
+//!   alone (zero-byte leases may ride along — they hold nothing).
+//! * **Zero-cost zero** — zero-byte leases (delegate-only waves hold no
+//!   CPU memory) are granted immediately and never wait.
+//!
+//! # Examples
+//!
+//! ```
+//! use parallax::sched::MemoryGovernor;
+//!
+//! let gov = MemoryGovernor::new(1_000);
+//! let big = gov.acquire(600);
+//! // not enough left for another 600-byte reservation...
+//! assert!(gov.try_acquire(600).is_none());
+//! // ...until the first lease drops.
+//! drop(big);
+//! assert!(gov.try_acquire(600).is_some());
+//! assert_eq!(gov.peak_reserved(), 600);
+//! ```
+
+use std::sync::{Condvar, Mutex};
+
+use super::SchedCfg;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Ledger {
+    in_use: u64,
+    active_leases: usize,
+    /// Leases actually holding bytes — zero-byte leases (delegate-only
+    /// waves) are excluded so they can never block a degraded-serial
+    /// over-budget admission.
+    nonzero_leases: usize,
+    peak_reserved: u64,
+    grants: u64,
+    over_budget_grants: u64,
+    waits: u64,
+    /// FIFO admission tickets: next to hand out / next to serve.
+    /// Blocking `acquire`s are admitted strictly in arrival order so a
+    /// large reservation can never be starved by a stream of small
+    /// ones barging past it.
+    next_ticket: u64,
+    serving: u64,
+}
+
+/// Snapshot of the governor's counters (observability + tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GovernorStats {
+    /// Bytes currently reserved.
+    pub in_use: u64,
+    /// Leases currently outstanding.
+    pub active_leases: usize,
+    /// High-water mark of `in_use` over the governor's lifetime.
+    pub peak_reserved: u64,
+    /// Total leases granted.
+    pub grants: u64,
+    /// Leases larger than the whole budget, granted in degraded serial
+    /// mode while the ledger was idle.
+    pub over_budget_grants: u64,
+    /// Times an `acquire` had to park and wait for capacity.
+    pub waits: u64,
+}
+
+/// Process-wide memory budget ledger. See the [module docs](self).
+#[derive(Debug)]
+pub struct MemoryGovernor {
+    budget: u64,
+    state: Mutex<Ledger>,
+    freed: Condvar,
+}
+
+impl MemoryGovernor {
+    /// Governor over a fixed device-wide working budget in bytes.
+    pub fn new(budget: u64) -> Self {
+        Self { budget, state: Mutex::new(Ledger::default()), freed: Condvar::new() }
+    }
+
+    /// Governor that admits everything (single-model tools and tests).
+    pub fn unlimited() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    /// Derive the budget from an OS free-memory reading exactly like
+    /// the per-model scheduler does: `free × (1 − margin)` (§3.3).
+    pub fn from_sched(cfg: &SchedCfg, free_mem: u64) -> Self {
+        Self::new(cfg.budget(free_mem))
+    }
+
+    /// The configured device-wide budget in bytes.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// Reserve `bytes`, blocking while the ledger cannot admit them.
+    ///
+    /// Zero-byte reservations are granted immediately. Everything else
+    /// queues on a FIFO ticket: waiters are admitted strictly in
+    /// arrival order, so a large reservation is never starved by
+    /// smaller ones barging past it while it waits. An over-budget
+    /// reservation waits (at its turn) for the ledger to go idle and
+    /// then runs alone (degraded serial mode).
+    pub fn acquire(&self, bytes: u64) -> Lease<'_> {
+        let mut st = self.state.lock().unwrap();
+        if bytes == 0 {
+            Self::grant(&mut st, self.budget, bytes);
+            return Lease { gov: self, bytes };
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        loop {
+            if st.serving == ticket && Self::fits(&st, self.budget, bytes) {
+                st.serving += 1;
+                Self::grant(&mut st, self.budget, bytes);
+                drop(st);
+                // the next ticket holder may already be admissible
+                self.freed.notify_all();
+                return Lease { gov: self, bytes };
+            }
+            st.waits += 1;
+            st = self.freed.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking [`MemoryGovernor::acquire`]: `None` when the
+    /// reservation is not immediately admissible.  To preserve the
+    /// FIFO no-starvation guarantee, `try_acquire` also refuses (rather
+    /// than barging) while blocking acquirers are queued.
+    pub fn try_acquire(&self, bytes: u64) -> Option<Lease<'_>> {
+        let mut st = self.state.lock().unwrap();
+        let no_queue = st.serving == st.next_ticket;
+        if bytes == 0 || (no_queue && Self::fits(&st, self.budget, bytes)) {
+            Self::grant(&mut st, self.budget, bytes);
+            Some(Lease { gov: self, bytes })
+        } else {
+            None
+        }
+    }
+
+    fn fits(st: &Ledger, budget: u64, bytes: u64) -> bool {
+        // over-budget requests wait only on *memory-holding* leases:
+        // zero-byte leases consume nothing, so letting them ride along
+        // cannot stack peaks, while counting them could starve the
+        // degraded-serial path forever under sustained zero-demand load
+        st.in_use.saturating_add(bytes) <= budget
+            || (bytes > budget && st.nonzero_leases == 0)
+    }
+
+    fn grant(st: &mut Ledger, budget: u64, bytes: u64) {
+        st.in_use = st.in_use.saturating_add(bytes);
+        st.active_leases += 1;
+        if bytes > 0 {
+            st.nonzero_leases += 1;
+        }
+        st.grants += 1;
+        if bytes > budget {
+            st.over_budget_grants += 1;
+        }
+        st.peak_reserved = st.peak_reserved.max(st.in_use);
+    }
+
+    /// Bytes currently reserved.
+    pub fn in_use(&self) -> u64 {
+        self.state.lock().unwrap().in_use
+    }
+
+    /// High-water mark of reserved bytes.
+    pub fn peak_reserved(&self) -> u64 {
+        self.state.lock().unwrap().peak_reserved
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> GovernorStats {
+        let st = self.state.lock().unwrap();
+        GovernorStats {
+            in_use: st.in_use,
+            active_leases: st.active_leases,
+            peak_reserved: st.peak_reserved,
+            grants: st.grants,
+            over_budget_grants: st.over_budget_grants,
+            waits: st.waits,
+        }
+    }
+}
+
+/// RAII reservation handle: returns its bytes to the governor and wakes
+/// waiters when dropped.
+#[derive(Debug)]
+pub struct Lease<'g> {
+    gov: &'g MemoryGovernor,
+    bytes: u64,
+}
+
+impl Lease<'_> {
+    /// Size of this reservation.
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gov.state.lock().unwrap();
+        st.in_use = st.in_use.saturating_sub(self.bytes);
+        st.active_leases -= 1;
+        if self.bytes > 0 {
+            st.nonzero_leases -= 1;
+        }
+        drop(st);
+        self.gov.freed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lease_roundtrip_updates_ledger() {
+        let gov = MemoryGovernor::new(100);
+        assert_eq!(gov.in_use(), 0);
+        {
+            let a = gov.acquire(40);
+            let b = gov.acquire(60);
+            assert_eq!(a.bytes() + b.bytes(), 100);
+            assert_eq!(gov.in_use(), 100);
+            assert_eq!(gov.stats().active_leases, 2);
+        }
+        assert_eq!(gov.in_use(), 0);
+        assert_eq!(gov.peak_reserved(), 100);
+        assert_eq!(gov.stats().grants, 2);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_release() {
+        let gov = Arc::new(MemoryGovernor::new(100));
+        let first = gov.acquire(80);
+        let g2 = gov.clone();
+        let waiter = std::thread::spawn(move || {
+            let lease = g2.acquire(50);
+            assert_eq!(lease.bytes(), 50);
+        });
+        // 80 + 50 > 100, so the waiter cannot be admitted before the
+        // first lease drops, no matter how the threads interleave.
+        // Wait (bounded) until it has actually parked once.
+        for _ in 0..2000 {
+            if gov.stats().waits >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(gov.in_use(), 80);
+        drop(first);
+        waiter.join().unwrap();
+        assert_eq!(gov.in_use(), 0);
+        assert!(gov.stats().waits >= 1);
+        assert!(gov.peak_reserved() <= 100);
+    }
+
+    #[test]
+    fn fifo_admission_prevents_barging_starvation() {
+        let gov = Arc::new(MemoryGovernor::new(100));
+        let first = gov.acquire(60);
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+
+        // a big reservation queues first...
+        let (g, o) = (gov.clone(), order.clone());
+        let big = std::thread::spawn(move || {
+            let lease = g.acquire(90);
+            o.lock().unwrap().push("big");
+            drop(lease);
+        });
+        // wait (bounded) until it holds a ticket and has parked
+        for _ in 0..2000 {
+            if gov.stats().waits >= 1 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+
+        // ...then a small one that *would* fit right now (60+30 ≤ 100)
+        // but must not barge past the queued big reservation.
+        let (g, o) = (gov.clone(), order.clone());
+        let small = std::thread::spawn(move || {
+            let lease = g.acquire(30);
+            o.lock().unwrap().push("small");
+            drop(lease);
+        });
+
+        drop(first);
+        big.join().unwrap();
+        small.join().unwrap();
+        // FIFO tickets guarantee service order regardless of timing
+        assert_eq!(*order.lock().unwrap(), ["big", "small"]);
+        assert_eq!(gov.in_use(), 0);
+    }
+
+    #[test]
+    fn oversized_request_degrades_to_serial() {
+        let gov = MemoryGovernor::new(10);
+        let big = gov.acquire(50); // idle ledger: granted, serial mode
+        assert_eq!(gov.stats().over_budget_grants, 1);
+        assert!(gov.try_acquire(1).is_none(), "ledger is saturated");
+        drop(big);
+        assert!(gov.try_acquire(1).is_some());
+    }
+
+    #[test]
+    fn zero_byte_lease_never_waits() {
+        let gov = MemoryGovernor::new(10);
+        let big = gov.acquire(50);
+        let z = gov.try_acquire(0);
+        assert!(z.is_some(), "delegate-only waves must not block");
+        drop(z);
+        drop(big);
+    }
+
+    #[test]
+    fn zero_byte_leases_cannot_starve_oversize_admission() {
+        // sustained zero-demand traffic must not keep an over-budget
+        // (degraded serial) reservation waiting for an idle ledger
+        let gov = MemoryGovernor::new(10);
+        let zero = gov.acquire(0);
+        let big = gov.try_acquire(50);
+        assert!(big.is_some(), "zero-byte lease blocked degraded-serial admission");
+        drop((zero, big));
+        assert_eq!(gov.in_use(), 0);
+    }
+
+    #[test]
+    fn unlimited_admits_everything() {
+        let gov = MemoryGovernor::unlimited();
+        let a = gov.acquire(u64::MAX / 2);
+        let b = gov.acquire(u64::MAX / 2);
+        drop((a, b));
+        assert_eq!(gov.in_use(), 0);
+    }
+
+    #[test]
+    fn from_sched_matches_scheduler_budget() {
+        let cfg = SchedCfg::default();
+        let gov = MemoryGovernor::from_sched(&cfg, 1 << 30);
+        assert_eq!(gov.budget(), cfg.budget(1 << 30));
+    }
+}

@@ -5,6 +5,38 @@
 //! `M_budget = free_mem × (1 − margin)`; run the rest sequentially.
 //! Concurrency is additionally capped by `max_threads` (Fig. 3's knob):
 //! a layer wider than the cap executes in waves.
+//!
+//! Budgets come in two flavours:
+//!
+//! * [`schedule`] takes a raw byte budget — the single-model path.
+//! * [`schedule_governed`] plans against a process-wide
+//!   [`MemoryGovernor`], the shared ledger that multi-model serving
+//!   leases branch-peak reservations from (see [`governor`]).  Both
+//!   paths produce identical plans for the same budget, so single- and
+//!   multi-model execution share one code path.
+//!
+//! # Examples
+//!
+//! ```
+//! use parallax::branch::{self, DEFAULT_BETA};
+//! use parallax::memory::branch_memories;
+//! use parallax::models::micro;
+//! use parallax::partition::{partition, CostModel};
+//! use parallax::sched::{schedule, SchedCfg};
+//!
+//! let g = micro::parallel_chains(4, 5);
+//! let p = partition(&g, &CostModel::default());
+//! let plan = branch::plan(&g, &p, DEFAULT_BETA);
+//! let mems = branch_memories(&g, &p, &plan);
+//! let scheds = schedule(&plan, &mems, 1 << 30, &SchedCfg::default());
+//! // every branch appears exactly once across waves + spill
+//! let n: usize = scheds.iter().map(|s| s.all().count()).sum();
+//! assert_eq!(n, plan.branches.len());
+//! ```
+
+pub mod governor;
+
+pub use governor::{GovernorStats, Lease, MemoryGovernor};
 
 use crate::branch::{Branch, BranchPlan};
 use crate::memory::BranchMemory;
@@ -26,6 +58,12 @@ impl Default for SchedCfg {
 
 impl SchedCfg {
     /// Working budget from an OS free-memory reading.
+    ///
+    /// ```
+    /// use parallax::sched::SchedCfg;
+    /// let cfg = SchedCfg { max_threads: 6, margin: 0.5 };
+    /// assert_eq!(cfg.budget(1000), 500);
+    /// ```
     pub fn budget(&self, free_mem: u64) -> u64 {
         (free_mem as f64 * (1.0 - self.margin)) as u64
     }
@@ -153,6 +191,40 @@ pub fn schedule(
             schedule_layer(&plan.branches, mems, layer, budget, cfg, ok)
         })
         .collect()
+}
+
+/// Full-model schedule against the process-wide memory governor.
+///
+/// Planning uses the governor's device budget, so a pipeline sharing
+/// the device with others never *plans* wider than the global ledger
+/// allows; the runtime leases ([`crate::exec::Engine::run_governed`])
+/// then enforce the budget across concurrently executing pipelines.
+///
+/// ```
+/// use parallax::branch::{self, DEFAULT_BETA};
+/// use parallax::memory::branch_memories;
+/// use parallax::models::micro;
+/// use parallax::partition::{partition, CostModel};
+/// use parallax::sched::{schedule, schedule_governed, MemoryGovernor, SchedCfg};
+///
+/// let g = micro::parallel_chains(4, 5);
+/// let p = partition(&g, &CostModel::default());
+/// let plan = branch::plan(&g, &p, DEFAULT_BETA);
+/// let mems = branch_memories(&g, &p, &plan);
+/// let cfg = SchedCfg::default();
+/// let gov = MemoryGovernor::new(1 << 20);
+/// assert_eq!(
+///     schedule_governed(&plan, &mems, &gov, &cfg),
+///     schedule(&plan, &mems, gov.budget(), &cfg),
+/// );
+/// ```
+pub fn schedule_governed(
+    plan: &BranchPlan,
+    mems: &[BranchMemory],
+    gov: &MemoryGovernor,
+    cfg: &SchedCfg,
+) -> Vec<LayerSchedule> {
+    schedule(plan, mems, gov.budget(), cfg)
 }
 
 #[cfg(test)]

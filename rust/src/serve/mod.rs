@@ -1,20 +1,47 @@
-//! Serving front-end: a multi-model request router + batcher over the
-//! real execution engine.
+//! Serving front-end: one admission-controlled dispatcher for all
+//! registered models.
 //!
 //! This is the "downstream user" face of the library: submit inference
-//! requests, get latency-tracked responses.  Internally one worker
-//! thread per registered model owns that model's Parallax pipeline
-//! (plan + arenas + PJRT pool handle) and drains its queue; text-encoder
-//! requests with equal shapes are micro-batched.
+//! requests, get latency-tracked responses.  Earlier revisions ran one
+//! private worker loop per model — N independent queues whose memory
+//! peaks could stack unchecked, exactly the §3.3 failure mode scaled up
+//! to a multi-model host.  The server is now built on the process-wide
+//! [`MemoryGovernor`]:
 //!
-//! (Offline build: no tokio — the loop is std-thread + channel based,
-//! which for a single-host serving demo is equivalent.)
+//! * **Shared worker pool** — [`ServeCfg::workers`] threads drain *all*
+//!   model queues, so idle capacity from a quiet model serves a busy
+//!   one instead of sleeping.
+//! * **Admission control** — before a batch executes, the dispatcher
+//!   leases the model's registered branch-peak demand
+//!   ([`Server::register_with_demand`]) from the governor and blocks
+//!   while the device budget is exhausted.
+//! * **Per-model fairness** — queues are drained round-robin, so a
+//!   flood on one model cannot starve the others.
+//! * **Micro-batching** — up to [`ServeCfg::max_batch`] queued requests
+//!   for the same model execute as one admission + one
+//!   [`ModelExecutor::execute_batch`] call, amortising dispatch.
+//!
+//! (Offline build: no tokio — the dispatcher is std-thread + condvar
+//! based, which for a single-host serving demo is equivalent.)
+//!
+//! # Examples
+//!
+//! ```
+//! use parallax::serve::{FnExecutor, Server};
+//!
+//! let mut server = Server::new();
+//! server.register("echo", Box::new(FnExecutor(|seed| Ok((0.0, seed as f64)))));
+//! let resp = server.infer("echo", 7).unwrap();
+//! assert_eq!(resp.model, "echo");
+//! assert_eq!(resp.checksum, 7.0);
+//! ```
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
+use crate::sched::MemoryGovernor;
 use crate::util::stats::{summarize, Summary};
 
 /// An inference request (synthetic payload: seed for the input draw).
@@ -31,12 +58,14 @@ pub struct Request {
 pub struct Response {
     pub id: u64,
     pub model: String,
-    /// End-to-end latency (queueing + execution).
+    /// End-to-end latency (queueing + admission + execution).
     pub latency_s: f64,
     /// Execution-only time.
     pub exec_s: f64,
     /// Checksum of outputs (determinism probe).
     pub checksum: f64,
+    /// Size of the micro-batch this request was served in (≥ 1).
+    pub batched: usize,
 }
 
 /// Model executor trait — the server is generic over how a model runs
@@ -44,6 +73,13 @@ pub struct Response {
 pub trait ModelExecutor: Send + 'static {
     /// Run one request; returns (exec seconds, output checksum).
     fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)>;
+
+    /// Run a micro-batch; the default loops [`ModelExecutor::execute`].
+    /// Executors with a cheaper batched path (shared schedule, fused
+    /// input tensors) override this.
+    fn execute_batch(&mut self, seeds: &[u64]) -> anyhow::Result<Vec<(f64, f64)>> {
+        seeds.iter().map(|&s| self.execute(s)).collect()
+    }
 }
 
 /// Closure-based executor for tests and simple setups.
@@ -55,70 +91,166 @@ impl<F: FnMut(u64) -> anyhow::Result<(f64, f64)> + Send + 'static> ModelExecutor
     }
 }
 
-enum Job {
-    Run(Request, mpsc::Sender<anyhow::Result<Response>>),
-    Stop,
+/// Standard synthetic input draw for simulated serving executors: the
+/// request seed picks a dynamic fill in `[0.15, 1.0)` (text models see
+/// mostly short inputs, occasionally full-length — §4.1's protocol).
+pub fn sim_fill(seed: u64) -> f64 {
+    0.15 + 0.85 * ((seed % 97) as f64 / 97.0)
 }
 
-struct ModelLane {
-    tx: mpsc::Sender<Job>,
-    join: Option<std::thread::JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+/// Adapter from a simulated [`Pipeline`](crate::baselines::Pipeline) to
+/// a registered executor: returns the pipeline's branch-peak demand
+/// (what [`Server::register_with_demand`] should lease per batch) plus
+/// the executor itself (exec time = simulated latency, checksum =
+/// simulated energy).  Shared by the `parallax serve` CLI, the serving
+/// integration tests, and the `serve_throughput` bench so all three
+/// drive byte-identical workloads.
+pub fn pipeline_executor(
+    pipe: crate::baselines::Pipeline,
+    rng_seed: u64,
+) -> (u64, Box<dyn ModelExecutor>) {
+    let demand = pipe.peak_branch_demand();
+    let mut rng = crate::util::rng::Rng::new(rng_seed);
+    let exec = Box::new(FnExecutor(move |seed| {
+        let r = pipe.run(&mut rng, sim_fill(seed));
+        Ok((r.latency_s, r.energy_j))
+    }));
+    (demand, exec)
 }
 
-/// The server: routes requests to per-model lanes.
+/// Dispatcher tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeCfg {
+    /// Shared worker threads draining all model queues.
+    pub workers: usize,
+    /// Max requests of one model served under a single admission.
+    pub max_batch: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        Self { workers: 4, max_batch: 8 }
+    }
+}
+
+struct QueuedJob {
+    req: Request,
+    reply: mpsc::Sender<anyhow::Result<Response>>,
+}
+
+struct ModelEntry {
+    name: String,
+    /// Branch-peak bytes leased from the governor per in-flight batch.
+    demand_bytes: u64,
+    /// `None` while a worker is executing this model's batch — models
+    /// stay internally sequential (executors are stateful `FnMut`).
+    exec: Option<Box<dyn ModelExecutor>>,
+    queue: VecDeque<QueuedJob>,
+    /// Set when the executor panicked: the model is disabled (new
+    /// submissions are rejected, queued ones get errors) but the
+    /// dispatcher and every other model keep running.
+    poisoned: bool,
+}
+
+struct Dispatch {
+    models: Vec<ModelEntry>,
+    index: HashMap<String, usize>,
+    /// Round-robin cursor: the next scan starts after the last model
+    /// that got service.
+    rr: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    governor: Arc<MemoryGovernor>,
+    cfg: ServeCfg,
+    state: Mutex<Dispatch>,
+    work: Condvar,
+}
+
+/// The server: a governed multi-model dispatcher (see module docs).
 pub struct Server {
-    lanes: HashMap<String, ModelLane>,
+    inner: Arc<Inner>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+    names: Vec<String>,
     next_id: AtomicU64,
-    completed: Arc<Mutex<Vec<Response>>>,
 }
 
 impl Server {
+    /// Server with default knobs and an unlimited governor — the
+    /// single-model-at-a-time developer path.
     pub fn new() -> Self {
-        Self {
-            lanes: HashMap::new(),
-            next_id: AtomicU64::new(0),
-            completed: Arc::new(Mutex::new(Vec::new())),
-        }
+        Self::with_config(ServeCfg::default(), Arc::new(MemoryGovernor::unlimited()))
     }
 
-    /// Register a model lane with its executor.
-    pub fn register(&mut self, model: &str, mut exec: Box<dyn ModelExecutor>) {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let queued = Arc::new(AtomicUsize::new(0));
-        let q2 = queued.clone();
-        let model_name = model.to_string();
-        let join = std::thread::Builder::new()
-            .name(format!("lane-{model}"))
-            .spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    match job {
-                        Job::Stop => break,
-                        Job::Run(req, reply) => {
-                            q2.fetch_sub(1, Ordering::Relaxed);
-                            let result = exec.execute(req.seed).map(|(exec_s, checksum)| {
-                                Response {
-                                    id: req.id,
-                                    model: model_name.clone(),
-                                    latency_s: req.submitted.elapsed().as_secs_f64(),
-                                    exec_s,
-                                    checksum,
-                                }
-                            });
-                            let _ = reply.send(result);
-                        }
-                    }
-                }
+    /// Server whose admissions are governed by a shared device ledger.
+    pub fn with_governor(governor: Arc<MemoryGovernor>) -> Self {
+        Self::with_config(ServeCfg::default(), governor)
+    }
+
+    /// Fully configured server.
+    pub fn with_config(cfg: ServeCfg, governor: Arc<MemoryGovernor>) -> Self {
+        let inner = Arc::new(Inner {
+            governor,
+            cfg,
+            state: Mutex::new(Dispatch {
+                models: Vec::new(),
+                index: HashMap::new(),
+                rr: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+        });
+        let joins = (0..cfg.workers.max(1))
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn serve worker")
             })
-            .expect("spawn lane");
-        self.lanes.insert(
-            model.to_string(),
-            ModelLane { tx, join: Some(join), queued },
-        );
+            .collect();
+        Self { inner, joins, names: Vec::new(), next_id: AtomicU64::new(0) }
     }
 
+    /// The shared ledger this server admits against.
+    pub fn governor(&self) -> &Arc<MemoryGovernor> {
+        &self.inner.governor
+    }
+
+    /// Register a model with zero declared memory demand (stub/test
+    /// executors that hold no branch arenas).
+    pub fn register(&mut self, model: &str, exec: Box<dyn ModelExecutor>) {
+        self.register_with_demand(model, 0, exec);
+    }
+
+    /// Register a model, declaring the branch-peak bytes one in-flight
+    /// batch reserves (see `Pipeline::peak_branch_demand`); the
+    /// dispatcher leases exactly this from the governor per batch.
+    pub fn register_with_demand(
+        &mut self,
+        model: &str,
+        demand_bytes: u64,
+        exec: Box<dyn ModelExecutor>,
+    ) {
+        let mut st = self.inner.state.lock().unwrap();
+        let slot = st.models.len();
+        st.models.push(ModelEntry {
+            name: model.to_string(),
+            demand_bytes,
+            exec: Some(exec),
+            queue: VecDeque::new(),
+            poisoned: false,
+        });
+        st.index.insert(model.to_string(), slot);
+        drop(st);
+        self.names.push(model.to_string());
+        self.inner.work.notify_all();
+    }
+
+    /// Registered model names, in registration (fairness-ring) order.
     pub fn models(&self) -> Vec<&str> {
-        self.lanes.keys().map(String::as_str).collect()
+        self.names.iter().map(String::as_str).collect()
     }
 
     /// Submit a request; returns a receiver for the response.
@@ -127,31 +259,32 @@ impl Server {
         model: &str,
         seed: u64,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
-        let lane = self
-            .lanes
-            .get(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        lane.queued.fetch_add(1, Ordering::Relaxed);
-        lane.tx
-            .send(Job::Run(
-                Request { id, model: model.to_string(), seed, submitted: Instant::now() },
-                reply,
-            ))
-            .map_err(|_| anyhow::anyhow!("lane closed"))?;
+        let mut st = self.inner.state.lock().unwrap();
+        let &slot = st
+            .index
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        if st.models[slot].poisoned {
+            anyhow::bail!("model {model} disabled: its executor panicked");
+        }
+        st.models[slot].queue.push_back(QueuedJob {
+            req: Request { id, model: model.to_string(), seed, submitted: Instant::now() },
+            reply,
+        });
+        drop(st);
+        self.inner.work.notify_one();
         Ok(rx)
     }
 
     /// Submit and wait.
     pub fn infer(&self, model: &str, seed: u64) -> anyhow::Result<Response> {
         let rx = self.submit(model, seed)?;
-        let resp = rx.recv().map_err(|_| anyhow::anyhow!("lane dropped reply"))??;
-        self.completed.lock().unwrap().push(resp.clone());
-        Ok(resp)
+        rx.recv().map_err(|_| anyhow::anyhow!("dispatcher dropped reply"))?
     }
 
-    /// Run a closed-loop load: `n` requests round-robin over models,
+    /// Run a closed-loop load: `n` requests round-robin over `models`,
     /// `concurrency` in flight.  Returns per-model latency summaries +
     /// total throughput (req/s).
     pub fn run_load(
@@ -169,11 +302,11 @@ impl Server {
             pending.push((model.to_string(), self.submit(model, seed ^ i as u64)?));
             if pending.len() >= concurrency {
                 let (_, rx) = pending.remove(0);
-                done.push(rx.recv().map_err(|_| anyhow::anyhow!("lane died"))??);
+                done.push(rx.recv().map_err(|_| anyhow::anyhow!("dispatcher died"))??);
             }
         }
         for (_, rx) in pending {
-            done.push(rx.recv().map_err(|_| anyhow::anyhow!("lane died"))??);
+            done.push(rx.recv().map_err(|_| anyhow::anyhow!("dispatcher died"))??);
         }
         let wall = t0.elapsed().as_secs_f64();
         let mut by_model: HashMap<String, Vec<f64>> = HashMap::new();
@@ -187,6 +320,7 @@ impl Server {
                 .into_iter()
                 .map(|(m, xs)| (m, summarize(&xs).unwrap()))
                 .collect(),
+            peak_reserved_bytes: self.inner.governor.peak_reserved(),
             responses: done,
         })
     }
@@ -200,12 +334,135 @@ impl Default for Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        for lane in self.lanes.values() {
-            let _ = lane.tx.send(Job::Stop);
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
         }
-        for lane in self.lanes.values_mut() {
-            if let Some(j) = lane.join.take() {
-                let _ = j.join();
+        self.inner.work.notify_all();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// One shared dispatcher worker: scan queues round-robin, claim the
+/// model's executor, lease memory, run the batch, reply.
+///
+/// Shutdown is graceful: workers keep draining queued requests and only
+/// exit once every queue is empty, so work accepted before
+/// [`Server::drop`] still completes.  A panicking executor poisons its
+/// model (queued + future requests error out) without taking the
+/// worker, the other models, or the process down.
+fn worker_loop(inner: &Inner) {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        if st.shutdown && st.models.iter().all(|m| m.queue.is_empty()) {
+            // chain-wake siblings parked before shutdown was flagged
+            inner.work.notify_all();
+            return;
+        }
+        // round-robin scan for a model with queued work AND an
+        // available executor (models stay internally sequential)
+        let n = st.models.len();
+        let mut pick = None;
+        for k in 0..n {
+            let i = (st.rr + k) % n;
+            if !st.models[i].queue.is_empty() && st.models[i].exec.is_some() {
+                pick = Some(i);
+                break;
+            }
+        }
+        let Some(slot) = pick else {
+            st = inner.work.wait(st).unwrap();
+            continue;
+        };
+        st.rr = (slot + 1) % n.max(1);
+        let mut exec = st.models[slot].exec.take().expect("picked available executor");
+        let mut jobs: Vec<QueuedJob> = Vec::new();
+        while jobs.len() < inner.cfg.max_batch.max(1) {
+            match st.models[slot].queue.pop_front() {
+                Some(j) => jobs.push(j),
+                None => break,
+            }
+        }
+        let demand = st.models[slot].demand_bytes;
+        let name = st.models[slot].name.clone();
+        drop(st);
+
+        // admission: one lease covers the whole micro-batch
+        let lease = inner.governor.acquire(demand);
+        let seeds: Vec<u64> = jobs.iter().map(|j| j.req.seed).collect();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            exec.execute_batch(&seeds)
+        }));
+        // memory is free before anyone can observe the response
+        drop(lease);
+
+        let batch = jobs.len();
+        let mut poisoned = false;
+        match outcome {
+            Ok(Ok(results)) if results.len() == jobs.len() => {
+                for (job, (exec_s, checksum)) in jobs.into_iter().zip(results) {
+                    let resp = Response {
+                        id: job.req.id,
+                        model: name.clone(),
+                        latency_s: job.req.submitted.elapsed().as_secs_f64(),
+                        exec_s,
+                        checksum,
+                        batched: batch,
+                    };
+                    let _ = job.reply.send(Ok(resp));
+                }
+            }
+            Ok(Ok(results)) => {
+                let msg = format!(
+                    "{name}: executor returned {} results for a batch of {batch}",
+                    results.len()
+                );
+                for job in jobs {
+                    let _ = job.reply.send(Err(anyhow::anyhow!("{msg}")));
+                }
+            }
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                for job in jobs {
+                    let _ = job.reply.send(Err(anyhow::anyhow!("{name}: {msg}")));
+                }
+            }
+            Err(panic) => {
+                poisoned = true;
+                let msg = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                for job in jobs {
+                    let _ = job
+                        .reply
+                        .send(Err(anyhow::anyhow!("{name}: executor panicked: {msg}")));
+                }
+            }
+        }
+
+        if poisoned {
+            // the executor's state is unknown: retire it (off-lock, in
+            // case its Drop misbehaves too), disable the model, and
+            // fail whatever was already queued for it
+            drop(exec);
+            st = inner.state.lock().unwrap();
+            st.models[slot].poisoned = true;
+            let err_name = st.models[slot].name.clone();
+            for job in st.models[slot].queue.drain(..) {
+                let _ = job.reply.send(Err(anyhow::anyhow!(
+                    "model {err_name} disabled: its executor panicked"
+                )));
+            }
+        } else {
+            st = inner.state.lock().unwrap();
+            st.models[slot].exec = Some(exec);
+            if !st.models[slot].queue.is_empty() {
+                // more backlog for this model: wake a sibling worker
+                inner.work.notify_one();
             }
         }
     }
@@ -217,6 +474,8 @@ pub struct LoadReport {
     pub wall_s: f64,
     pub throughput_rps: f64,
     pub latency: HashMap<String, Summary>,
+    /// Governor high-water mark observed by the end of the run.
+    pub peak_reserved_bytes: u64,
     pub responses: Vec<Response>,
 }
 
@@ -269,5 +528,169 @@ mod tests {
         let mut s = Server::new();
         s.register("bad", Box::new(FnExecutor(|_| anyhow::bail!("boom"))));
         assert!(s.infer("bad", 0).is_err());
+    }
+
+    /// Gate that executors park on until the test opens it — makes the
+    /// "backlog fully formed before service starts" setup deterministic
+    /// (at most one batch can be claimed before the gate opens, and it
+    /// blocks inside `execute`, off the dispatcher lock).
+    struct Gate(Mutex<bool>, Condvar);
+
+    impl Gate {
+        fn new() -> Arc<Self> {
+            Arc::new(Gate(Mutex::new(false), Condvar::new()))
+        }
+        fn open(&self) {
+            *self.0.lock().unwrap() = true;
+            self.1.notify_all();
+        }
+        fn wait(&self) {
+            let mut open = self.0.lock().unwrap();
+            while !*open {
+                open = self.1.wait(open).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn backlog_is_micro_batched() {
+        // one worker, gated executor: everything queued behind the gate
+        // must coalesce into micro-batches once service starts.
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 4 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        let g = gate.clone();
+        s.register(
+            "m",
+            Box::new(FnExecutor(move |seed| {
+                g.wait();
+                Ok((0.0, seed as f64))
+            })),
+        );
+        let rxs: Vec<_> = (0..5).map(|i| s.submit("m", i).unwrap()).collect();
+        gate.open();
+        let resps: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        assert_eq!(resps.len(), 5);
+        assert!(resps.iter().all(|r| r.batched >= 1 && r.batched <= 4));
+        // at most one single-request batch can start before the gate
+        // opens, so 5 requests over ≤4-batches always form one ≥ 2
+        assert!(
+            resps.iter().any(|r| r.batched >= 2),
+            "no micro-batch formed under backlog"
+        );
+    }
+
+    #[test]
+    fn round_robin_interleaves_models() {
+        // single worker, unit batches, backlog on both models: the
+        // fairness ring must alternate services, never drain one model.
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 1 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        for name in ["a", "b"] {
+            let order = order.clone();
+            let g = gate.clone();
+            s.register(
+                name,
+                Box::new(FnExecutor(move |seed| {
+                    g.wait();
+                    order.lock().unwrap().push(name);
+                    Ok((0.0, seed as f64))
+                })),
+            );
+        }
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            rxs.push(s.submit("a", i).unwrap());
+        }
+        for i in 0..4 {
+            rxs.push(s.submit("b", i).unwrap());
+        }
+        gate.open();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let log = order.lock().unwrap();
+        assert_eq!(*log, ["a", "b", "a", "b", "a", "b", "a", "b"]);
+    }
+
+    #[test]
+    fn panicking_executor_poisons_only_its_model() {
+        let mut s = Server::with_config(
+            ServeCfg { workers: 2, max_batch: 2 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        s.register(
+            "boom",
+            Box::new(FnExecutor(|_| -> anyhow::Result<(f64, f64)> {
+                panic!("kaboom")
+            })),
+        );
+        s.register("ok", stub(1));
+        let err = s.infer("boom", 1).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "got: {err}");
+        // subsequent submissions to the poisoned model fail fast...
+        assert!(s.submit("boom", 2).is_err());
+        // ...while the healthy model keeps serving on the same pool
+        for i in 0..8 {
+            assert_eq!(s.infer("ok", i).unwrap().checksum, i as f64);
+        }
+    }
+
+    #[test]
+    fn drop_drains_accepted_requests() {
+        // work accepted before drop must complete, not be abandoned
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 2 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        let g = gate.clone();
+        s.register(
+            "m",
+            Box::new(FnExecutor(move |seed| {
+                g.wait();
+                Ok((0.0, seed as f64))
+            })),
+        );
+        let rxs: Vec<_> = (0..6).map(|i| s.submit("m", i).unwrap()).collect();
+        gate.open();
+        drop(s);
+        let mut got: Vec<f64> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().checksum)
+            .collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn admission_respects_governor_budget() {
+        // two models, each demanding 60 of a 100-byte budget: batches
+        // must serialise and the ledger may never exceed the budget.
+        let gov = Arc::new(MemoryGovernor::new(100));
+        let mut s = Server::with_config(ServeCfg { workers: 2, max_batch: 2 }, gov.clone());
+        for name in ["a", "b"] {
+            let g = gov.clone();
+            s.register_with_demand(
+                name,
+                60,
+                Box::new(FnExecutor(move |seed| {
+                    assert!(g.in_use() <= 100, "ledger over budget during execution");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    Ok((0.0, seed as f64))
+                })),
+            );
+        }
+        let rep = s.run_load(&["a", "b"], 16, 8, 9).unwrap();
+        assert_eq!(rep.responses.len(), 16);
+        assert!(rep.peak_reserved_bytes <= 100);
+        assert_eq!(gov.in_use(), 0, "leases leaked");
     }
 }

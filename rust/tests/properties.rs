@@ -12,7 +12,7 @@ use parallax::branch::{self, DEFAULT_BETA};
 use parallax::memory::{self, branch_memories, BumpArena};
 use parallax::models::micro;
 use parallax::partition::{partition, CostModel};
-use parallax::sched::{self, SchedCfg};
+use parallax::sched::{self, Lease, MemoryGovernor, SchedCfg};
 use parallax::util::prop;
 use parallax::util::rng::Rng;
 
@@ -138,8 +138,14 @@ fn prop_scheduler_budget_and_exactly_once() {
         let scheds = sched::schedule(&plan, &mems, budget, &cfg);
         let mut seen = vec![false; plan.branches.len()];
         for (li, s) in scheds.iter().enumerate() {
+            // delegate branches ride the accelerator lane of wave 0, so
+            // they extend the CPU width cap rather than consuming it
+            let delegates = plan.layers[li]
+                .iter()
+                .filter(|&&b| plan.branches[b].has_delegate)
+                .count();
             for wave in &s.waves {
-                assert!(wave.len() <= cfg.max_threads + 1); // + delegate lane
+                assert!(wave.len() <= cfg.max_threads + delegates);
                 let sum: u64 = wave
                     .iter()
                     .filter(|&&b| !plan.branches[b].has_delegate)
@@ -183,6 +189,102 @@ fn prop_peak_estimator_matches_bruteforce() {
             brute = brute.max(live);
         }
         assert_eq!(memory::peak_bytes(&lts), brute);
+    });
+}
+
+#[test]
+fn prop_spill_waves_union_sequential_is_permutation() {
+    // §3.3 spill path: under a deliberately tight random budget the
+    // parallel set shrinks and branches spill to the sequential tail —
+    // waves ∪ sequential must still be a permutation of all branch ids,
+    // and no wave may exceed max_threads (+ accelerator lane) or budget.
+    prop::check("spill permutation", 200, |rng| {
+        let g = random_graph(rng);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let per_branch_max =
+            mems.iter().map(memory::BranchMemory::total).max().unwrap_or(0) as u64;
+        // from "nothing fits" to "everything fits", biased tight
+        let budget = rng.range_u64(0, per_branch_max.saturating_mul(2) + 1);
+        let cfg = SchedCfg { max_threads: rng.range(1, 5), margin: 0.4 };
+        let scheds = sched::schedule(&plan, &mems, budget, &cfg);
+        for (li, s) in scheds.iter().enumerate() {
+            let delegates = plan.layers[li]
+                .iter()
+                .filter(|&&b| plan.branches[b].has_delegate)
+                .count();
+            for wave in &s.waves {
+                assert!(wave.len() <= cfg.max_threads + delegates, "wave too wide");
+                let sum: u64 = wave
+                    .iter()
+                    .filter(|&&b| !plan.branches[b].has_delegate)
+                    .map(|&b| mems[b].total() as u64)
+                    .sum();
+                assert!(sum <= budget, "wave over budget");
+            }
+        }
+        let mut ids: Vec<usize> = scheds.iter().flat_map(|s| s.all()).collect();
+        ids.sort_unstable();
+        let expect: Vec<usize> = (0..plan.branches.len()).collect();
+        assert_eq!(ids, expect, "waves ∪ sequential is not a permutation");
+    });
+}
+
+#[test]
+fn prop_schedule_governed_matches_raw_budget() {
+    // single- and multi-model paths share one planner: scheduling
+    // against a governor must equal scheduling against its raw budget.
+    prop::check("governed schedule parity", 100, |rng| {
+        let g = random_graph(rng);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let budget = rng.range_u64(0, 1 << 22);
+        let cfg = SchedCfg { max_threads: rng.range(1, 9), margin: 0.4 };
+        let gov = MemoryGovernor::new(budget);
+        assert_eq!(
+            sched::schedule_governed(&plan, &mems, &gov, &cfg),
+            sched::schedule(&plan, &mems, budget, &cfg),
+        );
+    });
+}
+
+#[test]
+fn prop_governor_ledger_never_overcommits() {
+    // random acquire/release traffic: the ledger exceeds the budget
+    // only in degraded serial mode (exactly one oversized lease).
+    prop::check("governor ledger", 150, |rng| {
+        let budget = rng.range_u64(1, 1 << 20);
+        let gov = MemoryGovernor::new(budget);
+        let mut held: Vec<Lease<'_>> = Vec::new();
+        for _ in 0..rng.range(1, 50) {
+            if !held.is_empty() && rng.chance(0.4) {
+                let i = rng.range(0, held.len());
+                held.swap_remove(i);
+            } else {
+                let want = rng.range_u64(0, budget.saturating_mul(2) + 1);
+                if let Some(lease) = gov.try_acquire(want) {
+                    held.push(lease);
+                }
+            }
+            let st = gov.stats();
+            // the ledger exceeds the budget only while exactly one
+            // oversized lease runs in degraded serial mode (zero-byte
+            // leases — delegate-only waves — may ride along)
+            let nonzero = held.iter().filter(|l| l.bytes() > 0).count();
+            assert!(
+                st.in_use <= budget || (nonzero == 1 && st.over_budget_grants > 0),
+                "overcommitted: in_use {} budget {budget} leases {}",
+                st.in_use,
+                st.active_leases
+            );
+            let held_sum: u64 = held.iter().map(Lease::bytes).sum();
+            assert_eq!(st.in_use, held_sum, "ledger out of sync with live leases");
+            assert_eq!(st.active_leases, held.len());
+        }
+        drop(held);
+        assert_eq!(gov.in_use(), 0, "bytes leaked after all leases dropped");
     });
 }
 

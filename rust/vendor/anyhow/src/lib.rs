@@ -1,0 +1,203 @@
+//! Offline drop-in subset of the `anyhow` error-handling crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored shim provides exactly the slice of `anyhow`'s API that the
+//! `parallax` crate uses, with the same names and semantics:
+//!
+//! * [`Error`] — an opaque, `Send + Sync + 'static` error value with a
+//!   human-readable message and an optional source chain.
+//! * [`Result<T>`](Result) — alias for `std::result::Result<T, Error>`.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — message-formatting macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`.
+//!
+//! Like the real crate, the blanket `From` impl lets `?` convert any
+//! `std::error::Error + Send + Sync + 'static` into [`Error`]; this
+//! compiles because [`Error`] deliberately does *not* implement
+//! `std::error::Error` itself.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional boxed source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error value, preserving it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Self { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prefix the message with additional context (newest first, like
+    /// `anyhow`'s context chain rendering).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The underlying source error, if one was captured.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` or to `None`.
+pub trait Context<T, E> {
+    /// Wrap the error with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.source().is_some());
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(e.to_string(), "x = 7");
+        let n = 3;
+        let e = anyhow!("inline {n}");
+        assert_eq!(e.to_string(), "inline 3");
+
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {}", true);
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "wanted true");
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let e = std::fs::read_to_string("/definitely/not/a/file")
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert!(e.to_string().starts_with("step 2: "));
+    }
+}
