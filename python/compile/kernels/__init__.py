@@ -3,7 +3,7 @@
 Every kernel is checked against the pure-jnp oracle in :mod:`.ref` by
 ``python/tests``.  All kernels run with ``interpret=True`` (CPU PJRT
 cannot execute Mosaic custom-calls); the BlockSpec structure is still
-the real TPU schedule and is what DESIGN.md §Perf cost-models.
+the real TPU schedule and is what EXPERIMENTS.md §Perf cost-models.
 """
 
 from . import attention, conv, elementwise, matmul, norm, ref  # noqa: F401

@@ -12,7 +12,7 @@ k==0 step zero-initialises the accumulator.  Block shapes default to
 problem size so small shapes still work.  ``interpret=True`` is mandatory
 on the CPU PJRT plugin (real-TPU lowering emits Mosaic custom-calls the
 CPU client cannot run); the BlockSpec structure is what we cost-model in
-DESIGN.md §Perf.
+EXPERIMENTS.md §Perf.
 """
 
 import functools

@@ -1,4 +1,4 @@
-//! Ablation benches for the design choices DESIGN.md calls out:
+//! Ablation benches for the design choices ARCHITECTURE.md calls out:
 //! β balance threshold (§3.1), memory margin (§3.3), delegate
 //! cost-model threshold (§3.1 / Appendix B).
 

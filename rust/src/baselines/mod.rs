@@ -244,14 +244,22 @@ impl Pipeline {
     /// layers of the summed CPU branch peaks — what a serving host
     /// should lease from the governor while a request is in flight.
     pub fn peak_branch_demand(&self) -> u64 {
-        self.plan
-            .layers
+        Self::peak_layer_demand(&self.plan, &self.mems)
+    }
+
+    /// The §3.3 layer-peak aggregation over an arbitrary memory table:
+    /// max over layers of the summed CPU branch peaks.  Shared by
+    /// [`Pipeline::peak_branch_demand`] (worst-case M_i) and the §3.4
+    /// serving adapter, which evaluates it with resolved-shape
+    /// memories per fill bucket.
+    pub fn peak_layer_demand(plan: &BranchPlan, mems: &[BranchMemory]) -> u64 {
+        plan.layers
             .iter()
             .map(|layer| {
                 layer
                     .iter()
-                    .filter(|&&b| !self.plan.branches[b].has_delegate)
-                    .map(|&b| self.mems[b].total() as u64)
+                    .filter(|&&b| !plan.branches[b].has_delegate)
+                    .map(|&b| mems[b].total() as u64)
                     .sum::<u64>()
             })
             .max()

@@ -1,0 +1,982 @@
+//! Runtime subgraph control (paper §3.4): heterogeneous inference of
+//! *dynamic* models with runtime-resolved shapes and control flow.
+//!
+//! The static pipeline plans every `Dim::Dynamic { max }` at its upper
+//! bound and treats control-flow operators purely as Split-Merge
+//! barriers — correct, but it reserves worst-case memory and re-plans
+//! nothing between decode steps.  This module closes that gap:
+//!
+//! 1. **Segmentation** — [`ctrl_segments`] cuts the DAG at dynamic
+//!    operators (`If`/`While`/`BeamSearchStep`/`NonMaxSuppression`/
+//!    `EmbeddingLookup`) into statically-schedulable segments that
+//!    execute in order; every barrier owns a singleton segment.
+//! 2. **Resolution** — [`resolve_barrier`] turns actual tensor values
+//!    into concrete extents for the dynamic dims a barrier controls
+//!    (iteration counts, NMS output counts, taken `If` arms), recorded
+//!    in a [`ShapeEnv`] and propagated into every downstream segment.
+//! 3. **Resolved planning** — [`resolved_branch_memories`] re-runs the
+//!    §3.3 branch-peak estimator at the resolved sizes (clamped by the
+//!    max-shape plan, which is always a valid fallback), so governor
+//!    leases shrink from worst-case to actual.
+//! 4. **Plan caching** — per-segment schedules are cached keyed by
+//!    (segment, resolved-shape bucket), so an autoregressive decode
+//!    loop pays partitioned planning once per power-of-two length
+//!    bucket instead of once per step.
+//! 5. **Dead-branch pruning** — a resolved `If` predicate marks the
+//!    untaken arm dead ([`dead_nodes`]); its branches are skipped and
+//!    their arena reservations never leased.
+//!
+//! [`SegmentedEngine`] drives all five against the real
+//! [`Engine`](crate::exec::Engine), leasing each segment's resolved
+//! demand from the process-wide
+//! [`MemoryGovernor`](crate::sched::MemoryGovernor).
+//!
+//! # Examples
+//!
+//! ```
+//! use parallax::branch::{self, DEFAULT_BETA};
+//! use parallax::ctrl::{self, ShapeEnv};
+//! use parallax::graph::Dim;
+//! use parallax::models::ModelKind;
+//! use parallax::partition::{partition, CostModel};
+//!
+//! // Resolve the Whisper decoder's dynamic length to 9 of max 64 tokens.
+//! let mut env = ShapeEnv::unresolved();
+//! env.bind(64, 9);
+//! assert_eq!(env.dim(Dim::Dynamic { max: 64 }), 9);
+//! assert_eq!(env.dim(Dim::Static(384)), 384);
+//!
+//! // Control-flow barriers split the DAG into ordered segments, and
+//! // resolved shapes shrink the §3.3 branch demands.
+//! let g = ModelKind::WhisperTiny.build();
+//! let p = partition(&g, &CostModel::default());
+//! let plan = branch::plan(&g, &p, DEFAULT_BETA);
+//! let seg = ctrl::segment_plan(&g, &p, &plan);
+//! assert!(seg.segments.iter().any(|s| s.barrier.is_some()));
+//! let max = parallax::memory::branch_memories(&g, &p, &plan);
+//! let resolved = ctrl::resolved_branch_memories(&g, &p, &plan, &env, &max);
+//! assert!(resolved.iter().zip(&max).all(|(r, m)| r.total() <= m.total()));
+//! ```
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::branch::BranchPlan;
+use crate::exec::{Engine, ExecStats, Values};
+use crate::graph::{Dim, Graph, NodeId, OpClass, OpKind, TensorId, TensorInfo};
+use crate::memory::{self, BranchMemory};
+use crate::partition::Partition;
+use crate::runtime::Tensor;
+use crate::sched::{self, MemoryGovernor, SchedCfg};
+
+// ---------------------------------------------------------------- ShapeEnv
+
+/// Runtime bindings for dynamic dimensions.
+///
+/// The zoo encodes a symbolic dynamic dim by its bound: every tensor
+/// sharing `Dim::Dynamic { max: 64 }` shares the same runtime extent
+/// (the decode length), so the bound doubles as the symbol.  A
+/// `ShapeEnv` maps symbols to resolved extents; unbound symbols stay at
+/// their max, which reproduces the static worst-case plan exactly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShapeEnv {
+    bindings: BTreeMap<usize, usize>,
+}
+
+impl ShapeEnv {
+    /// No bindings: every dynamic dim at its max (the static plan).
+    pub fn unresolved() -> Self {
+        Self::default()
+    }
+
+    /// Bind every dynamic symbol in the graph from a fill factor in
+    /// (0, 1] — the simulator's input-draw protocol expressed as an
+    /// environment.
+    pub fn from_fill(g: &Graph, fill: f64) -> Self {
+        let mut env = Self::default();
+        for t in g.tensors() {
+            for &d in &t.shape {
+                if let Dim::Dynamic { max } = d {
+                    env.bind_if_absent(max, d.resolve(fill));
+                }
+            }
+        }
+        env
+    }
+
+    /// Bind `symbol` (a dynamic dim's max) to a concrete extent,
+    /// clamped into `1..=symbol`.
+    pub fn bind(&mut self, symbol: usize, extent: usize) {
+        self.bindings.insert(symbol, extent.clamp(1, symbol.max(1)));
+    }
+
+    /// [`ShapeEnv::bind`] unless the symbol is already bound — callers
+    /// (a decode loop driving the length) win over barrier resolvers.
+    pub fn bind_if_absent(&mut self, symbol: usize, extent: usize) {
+        if !self.bindings.contains_key(&symbol) {
+            self.bind(symbol, extent);
+        }
+    }
+
+    /// The resolved extent of a symbol, if bound.
+    pub fn binding(&self, symbol: usize) -> Option<usize> {
+        self.bindings.get(&symbol).copied()
+    }
+
+    /// All bindings as (symbol, extent) pairs, ascending by symbol.
+    pub fn bindings(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.bindings.iter().map(|(&s, &e)| (s, e))
+    }
+
+    /// True when no symbol is bound (pure max-shape planning).
+    pub fn is_unresolved(&self) -> bool {
+        self.bindings.is_empty()
+    }
+
+    /// Concrete extent of one dimension under this environment.
+    pub fn dim(&self, d: Dim) -> usize {
+        match d {
+            Dim::Static(n) => n,
+            Dim::Dynamic { max } => self.binding(max).unwrap_or(max).min(max),
+        }
+    }
+
+    /// Concrete shape of a tensor under this environment.
+    pub fn shape(&self, info: &TensorInfo) -> Vec<usize> {
+        info.shape.iter().map(|&d| self.dim(d)).collect()
+    }
+
+    /// Concrete byte size of a tensor under this environment.
+    pub fn byte_size(&self, info: &TensorInfo) -> usize {
+        self.shape(info).iter().product::<usize>() * info.dtype.byte_width()
+    }
+
+    /// Round every extent up to the next power of two (capped at the
+    /// symbol) — the plan-cache bucket.  Memory sized at the bucket's
+    /// upper bound stays valid for every exact extent in the bucket, so
+    /// decode steps 33..=64 share one cached plan.
+    pub fn bucketed(&self) -> ShapeEnv {
+        let mut env = ShapeEnv::default();
+        for (&sym, &ext) in &self.bindings {
+            env.bind(sym, ext.next_power_of_two().min(sym));
+        }
+        env
+    }
+}
+
+// ------------------------------------------------------------ segmentation
+
+/// Is this op a subgraph-control barrier?  Every `OpClass::Dynamic`
+/// operator qualifies: control flow (`If`/`While`/`BeamSearchStep`)
+/// plus dynamic-output producers (`NonMaxSuppression`,
+/// `EmbeddingLookup`) whose results gate downstream shapes.
+pub fn is_ctrl_barrier(kind: &OpKind) -> bool {
+    matches!(kind.class(), OpClass::Dynamic)
+}
+
+/// One node-level segment: a statically-schedulable body, or a barrier
+/// by itself.
+#[derive(Clone, Debug)]
+pub struct CtrlSegment {
+    /// Member nodes in topological order.
+    pub nodes: Vec<NodeId>,
+    /// Set when this segment is a singleton barrier.
+    pub barrier: Option<NodeId>,
+}
+
+/// Cut the DAG at control barriers into ordered segments.
+///
+/// A node's level counts the barriers on its deepest incoming path
+/// (the same construction the partitioner uses for delegate regions);
+/// non-barrier nodes of one level share a segment, and every barrier
+/// gets its own, ordered after its level's body.  Returns the segments
+/// in execution order plus each node's segment index.  For every edge
+/// `u -> v`: `seg(u) <= seg(v)`, strictly when `u` is a barrier.
+pub fn ctrl_segments(g: &Graph) -> (Vec<CtrlSegment>, Vec<usize>) {
+    let order = g.topo_order().expect("ctrl segmentation requires a DAG");
+    let n = g.num_nodes();
+    let mut lvl = vec![0u32; n];
+    for &v in &order {
+        let mut l = 0;
+        for p in g.preds(v) {
+            let step = u32::from(is_ctrl_barrier(&g.node(p).kind));
+            l = l.max(lvl[p.0 as usize] + step);
+        }
+        lvl[v.0 as usize] = l;
+    }
+    // sort key: (2*lvl + barrier-bit) in the high half; barriers
+    // tie-break by topo position so each owns a distinct segment.
+    let mut keyed: Vec<(u64, NodeId)> = Vec::with_capacity(n);
+    for (pos, &v) in order.iter().enumerate() {
+        let b = is_ctrl_barrier(&g.node(v).kind);
+        let base = 2 * lvl[v.0 as usize] as u64 + u64::from(b);
+        let key = (base << 32) | if b { pos as u64 + 1 } else { 0 };
+        keyed.push((key, v));
+    }
+    keyed.sort_by_key(|&(k, _)| k); // stable: bodies keep topo order
+    let mut segments: Vec<CtrlSegment> = Vec::new();
+    let mut seg_of_node = vec![0usize; n];
+    let mut last_key = u64::MAX;
+    for (key, v) in keyed {
+        if key != last_key {
+            let barrier = is_ctrl_barrier(&g.node(v).kind).then_some(v);
+            segments.push(CtrlSegment { nodes: Vec::new(), barrier });
+            last_key = key;
+        }
+        seg_of_node[v.0 as usize] = segments.len() - 1;
+        segments.last_mut().unwrap().nodes.push(v);
+    }
+    (segments, seg_of_node)
+}
+
+/// One segment of the branch-level execution plan.
+#[derive(Clone, Debug)]
+pub struct SegmentExec {
+    /// The barrier resolved before this segment runs, if any.
+    pub barrier: Option<NodeId>,
+    /// `(original layer index, branch ids)` — the Branch-Layer plan's
+    /// layers restricted to this segment, in layer order.
+    pub layers: Vec<(usize, Vec<usize>)>,
+    /// All branch ids of this segment (layer order).
+    pub branches: Vec<usize>,
+}
+
+/// A [`BranchPlan`] projected onto control segments.
+#[derive(Clone, Debug)]
+pub struct SegmentedPlan {
+    /// Segments in execution order.
+    pub segments: Vec<SegmentExec>,
+    /// Segment index of every branch.
+    pub seg_of_branch: Vec<usize>,
+}
+
+impl SegmentedPlan {
+    /// Index of the first barrier segment (where the dynamic suffix of
+    /// the model starts), if the graph has one.
+    pub fn first_barrier(&self) -> Option<usize> {
+        self.segments.iter().position(|s| s.barrier.is_some())
+    }
+}
+
+/// Assign every branch of a Branch-Layer plan to a control segment.
+///
+/// A branch lands in the latest segment any of its nodes belongs to; a
+/// dependency fix-up pass (over the plan's topological layers) then
+/// raises consumers past their producers, so executing segments in
+/// order can never run a branch before its inputs exist — whatever the
+/// node-level labels say about delegate regions.
+pub fn segment_plan(g: &Graph, p: &Partition, plan: &BranchPlan) -> SegmentedPlan {
+    let (segs, seg_of_node) = ctrl_segments(g);
+    let nb = plan.branches.len();
+    let mut seg_of_branch = vec![0usize; nb];
+    for (b, seg) in seg_of_branch.iter_mut().enumerate() {
+        *seg = plan
+            .branch_nodes(g, p, b)
+            .iter()
+            .map(|id| seg_of_node[id.0 as usize])
+            .max()
+            .unwrap_or(0);
+    }
+    // branch-level predecessor sets from the unit graph
+    let ug = &plan.unit_graph;
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); nb];
+    for (u, succs) in ug.succs.iter().enumerate() {
+        let bu = plan.branch_of_unit[u];
+        for &v in succs {
+            let bv = plan.branch_of_unit[v];
+            if bu != bv && !preds[bv].contains(&bu) {
+                preds[bv].push(bu);
+            }
+        }
+    }
+    // layers are topological over branches: one pass suffices
+    for layer in &plan.layers {
+        for &b in layer {
+            for &a in &preds[b] {
+                if seg_of_branch[a] > seg_of_branch[b] {
+                    seg_of_branch[b] = seg_of_branch[a];
+                }
+            }
+        }
+    }
+    let mut segments: Vec<SegmentExec> = segs
+        .iter()
+        .map(|s| SegmentExec { barrier: s.barrier, layers: Vec::new(), branches: Vec::new() })
+        .collect();
+    for (li, layer) in plan.layers.iter().enumerate() {
+        for (s, seg) in segments.iter_mut().enumerate() {
+            let members: Vec<usize> =
+                layer.iter().copied().filter(|&b| seg_of_branch[b] == s).collect();
+            if !members.is_empty() {
+                seg.branches.extend(members.iter().copied());
+                seg.layers.push((li, members));
+            }
+        }
+    }
+    SegmentedPlan { segments, seg_of_branch }
+}
+
+// ------------------------------------------------------ resolved memories
+
+/// §3.3 branch-peak estimate of one branch at resolved shapes.
+///
+/// The result is clamped by the max-shape estimate: the static plan's
+/// offsets are always a valid fallback, so a resolved plan never needs
+/// more memory than the worst case — the invariant the property tests
+/// pin down.
+pub fn resolved_branch_memory(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    b: usize,
+    env: &ShapeEnv,
+    max: &BranchMemory,
+) -> BranchMemory {
+    if env.is_unresolved() {
+        return *max;
+    }
+    let nodes = plan.branch_nodes(g, p, b);
+    let mut lts = memory::analyze(g, &nodes);
+    for lt in &mut lts {
+        lt.bytes = env.byte_size(g.tensor_info(lt.tensor));
+    }
+    let (internal, boundary): (Vec<_>, Vec<_>) = lts.into_iter().partition(|lt| !lt.escapes);
+    let arena = memory::plan_branch(&internal).arena_bytes;
+    let boundary_sum: usize = boundary.iter().map(|lt| lt.bytes).sum();
+    BranchMemory {
+        arena_bytes: arena.min(max.arena_bytes),
+        boundary_out_bytes: boundary_sum.min(max.boundary_out_bytes),
+    }
+}
+
+/// [`resolved_branch_memory`] for every branch of a plan.
+pub fn resolved_branch_memories(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    env: &ShapeEnv,
+    max: &[BranchMemory],
+) -> Vec<BranchMemory> {
+    (0..plan.branches.len())
+        .map(|b| resolved_branch_memory(g, p, plan, b, env, &max[b]))
+        .collect()
+}
+
+// ------------------------------------------------------------- resolution
+
+/// What resolving one barrier against actual values yields.
+#[derive(Clone, Debug, Default)]
+pub struct BarrierOutcome {
+    /// `(symbol, extent)` bindings for the dynamic dims this barrier
+    /// controls (its outputs' `Dim::Dynamic` bounds).
+    pub bindings: Vec<(usize, usize)>,
+    /// Output tensors of an `If` whose arm was not taken — seeds for
+    /// [`dead_nodes`].
+    pub dead: Vec<TensorId>,
+}
+
+fn value_hash(t: &Tensor) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &x in t.data() {
+        h ^= x.to_bits() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Resolve a barrier node from its actual input values.
+///
+/// * `While`/`BeamSearchStep`/`NonMaxSuppression`/`EmbeddingLookup`:
+///   every dynamic dim of the outputs is bound to a value-derived
+///   extent in `1..=max` (deterministic in the input bits, so results
+///   stay bit-identical across thread counts and schedules).
+/// * `If`: the first input's leading element picks the arm; with two
+///   or more outputs the untaken arm's token is reported dead.
+pub fn resolve_barrier(
+    g: &Graph,
+    id: NodeId,
+    read: impl Fn(TensorId) -> Tensor,
+) -> BarrierOutcome {
+    let node = g.node(id);
+    let mut out = BarrierOutcome::default();
+    let h = node.inputs.first().map(|&t| value_hash(&read(t))).unwrap_or(0x5EED);
+    for &o in &node.outputs {
+        for &d in &g.tensor_info(o).shape {
+            if let Dim::Dynamic { max } = d {
+                if !out.bindings.iter().any(|&(s, _)| s == max) {
+                    let extent = 1 + (h % max.max(1) as u64) as usize;
+                    out.bindings.push((max, extent));
+                }
+            }
+        }
+    }
+    if matches!(node.kind, OpKind::If) && node.outputs.len() >= 2 {
+        let taken = node
+            .inputs
+            .first()
+            .map(|&t| read(t).data().first().copied().unwrap_or(0.0) >= 0.0)
+            .unwrap_or(true);
+        // taken -> arm 0 live, output[1] dead (and vice versa)
+        out.dead.push(node.outputs[usize::from(taken)]);
+    }
+    out
+}
+
+/// Nodes reachable *exclusively* from `seeds` (an untaken `If` arm):
+/// a node is dead iff at least one input is dead and every produced
+/// input is dead too (weights and other sources don't keep an arm
+/// alive; a merge fed by the live arm does).
+///
+/// `If` semantics make the untaken arm's values *don't-care*: a merge
+/// that still lists the dead arm as an input reads the engine's
+/// deterministic synthesized stand-in (the same fallback used for any
+/// dropped value), so pruned runs are bit-reproducible — but they are
+/// intentionally *not* value-identical to a static run that executes
+/// both arms, exactly as a real `If` never materialises the branch it
+/// didn't take.
+pub fn dead_nodes(g: &Graph, seeds: &[TensorId]) -> HashSet<NodeId> {
+    let mut dead_t: HashSet<TensorId> = seeds.iter().copied().collect();
+    let mut dead_n: HashSet<NodeId> = HashSet::new();
+    for v in g.topo_order().expect("DAG") {
+        let node = g.node(v);
+        if node.inputs.is_empty() {
+            continue;
+        }
+        let touches = node.inputs.iter().any(|t| dead_t.contains(t));
+        if !touches {
+            continue;
+        }
+        let exclusive = node
+            .inputs
+            .iter()
+            .all(|&t| dead_t.contains(&t) || g.producer(t).is_none());
+        if exclusive {
+            dead_n.insert(v);
+            dead_t.extend(node.outputs.iter().copied());
+        }
+    }
+    dead_n
+}
+
+// -------------------------------------------------------- segmented engine
+
+/// A cached per-segment plan: schedules plus the lease they hold.
+struct Entry {
+    schedules: Vec<sched::LayerSchedule>,
+    demand: u64,
+}
+
+fn build_entry(
+    plan: &BranchPlan,
+    mems: &[BranchMemory],
+    seg: &SegmentExec,
+    dead: &[usize],
+    budget: u64,
+    cfg: &SchedCfg,
+) -> Entry {
+    let mut schedules = Vec::with_capacity(seg.layers.len());
+    for (li, members) in &seg.layers {
+        let live: Vec<usize> =
+            members.iter().copied().filter(|b| !dead.contains(b)).collect();
+        if live.is_empty() {
+            continue;
+        }
+        schedules.push(sched::schedule_layer(
+            &plan.branches,
+            mems,
+            &live,
+            budget,
+            cfg,
+            plan.layer_parallel[*li],
+        ));
+    }
+    // Segment residency demand: every CPU branch's escaping outputs
+    // stay resident for downstream segments, plus the widest wave's
+    // transient arena peak — §3.3 applied at segment granularity.
+    // Resolved shapes shrink both terms, so decode-step leases track
+    // the actual sequence length instead of the worst case.
+    let mut boundary = 0u64;
+    let mut peak_arena = 0u64;
+    for ls in &schedules {
+        for wave in &ls.waves {
+            let mut arena = 0u64;
+            for &b in wave {
+                if plan.branches[b].has_delegate {
+                    continue;
+                }
+                arena += mems[b].arena_bytes as u64;
+                boundary += mems[b].boundary_out_bytes as u64;
+            }
+            peak_arena = peak_arena.max(arena);
+        }
+        for &b in &ls.sequential {
+            if plan.branches[b].has_delegate {
+                continue;
+            }
+            peak_arena = peak_arena.max(mems[b].arena_bytes as u64);
+            boundary += mems[b].boundary_out_bytes as u64;
+        }
+    }
+    Entry { schedules, demand: boundary + peak_arena }
+}
+
+fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
+    acc.pjrt_calls += s.pjrt_calls;
+    acc.host_ops += s.host_ops;
+    acc.skipped_fused += s.skipped_fused;
+    acc.peak_arena_bytes = acc.peak_arena_bytes.max(s.peak_arena_bytes);
+    acc.wall_s += s.wall_s;
+}
+
+/// Plan-cache key: (segment id, bucketed bindings, dead branch ids).
+/// Structural — two distinct (bucket, dead-set) states can never
+/// collide into reusing the wrong cached plan.
+type PlanKey = (usize, Vec<(usize, usize)>, Vec<usize>);
+
+/// Statistics of one segmented run.
+#[derive(Clone, Debug, Default)]
+pub struct CtrlStats {
+    /// Segments that executed at least one branch.
+    pub segments_run: usize,
+    /// Plan-cache hits / misses during this run.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Branches skipped because their `If` arm was not taken.
+    pub pruned_branches: usize,
+    /// Peak per-segment lease the max-shape plan would have held.
+    pub max_plan_demand: u64,
+    /// Peak per-segment lease this run actually held.
+    pub resolved_demand: u64,
+    /// Final symbol bindings, `(symbol, extent)` ascending.
+    pub bindings: Vec<(usize, usize)>,
+    /// Aggregated engine statistics over all segments.
+    pub exec: ExecStats,
+}
+
+/// Segment-by-segment executor over a real [`Engine`]: resolves
+/// barriers from live values, re-plans (cached) at resolved shapes,
+/// prunes dead arms, and leases each segment's resolved demand from
+/// the governor.  See the [module docs](self).
+pub struct SegmentedEngine<'a> {
+    engine: &'a Engine<'a>,
+    seg_plan: SegmentedPlan,
+    max_mems: Vec<BranchMemory>,
+    /// Per-segment plans at worst-case shapes (the static fallback).
+    max_entries: Vec<Arc<Entry>>,
+    budget: u64,
+    cfg: SchedCfg,
+    cache: Mutex<HashMap<PlanKey, Arc<Entry>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl<'a> SegmentedEngine<'a> {
+    /// Build the segmented view of an engine's plan.  `budget` is the
+    /// per-wave scheduling budget (typically the governor's).
+    pub fn new(engine: &'a Engine<'a>, cfg: SchedCfg, budget: u64) -> Self {
+        let (g, p, plan) = (engine.graph, engine.partition, engine.plan);
+        let seg_plan = segment_plan(g, p, plan);
+        let max_mems = memory::branch_memories(g, p, plan);
+        let max_entries = seg_plan
+            .segments
+            .iter()
+            .map(|seg| Arc::new(build_entry(plan, &max_mems, seg, &[], budget, &cfg)))
+            .collect();
+        Self {
+            engine,
+            seg_plan,
+            max_mems,
+            max_entries,
+            budget,
+            cfg,
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    /// The segmented plan (segments in execution order).
+    pub fn seg_plan(&self) -> &SegmentedPlan {
+        &self.seg_plan
+    }
+
+    /// Number of segments.
+    pub fn num_segments(&self) -> usize {
+        self.seg_plan.segments.len()
+    }
+
+    /// First barrier segment — where the model's dynamic suffix starts.
+    pub fn first_barrier_segment(&self) -> Option<usize> {
+        self.seg_plan.first_barrier()
+    }
+
+    /// Lifetime plan-cache counters: `(hits, misses)`.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Peak per-segment lease of the worst-case (max-shape) plan.
+    pub fn max_plan_peak_demand(&self) -> u64 {
+        self.max_entries.iter().map(|e| e.demand).max().unwrap_or(0)
+    }
+
+    /// Run the whole model with runtime resolution.  `bindings` are
+    /// caller-supplied `(symbol, extent)` pairs (e.g. the decode loop's
+    /// current length) that take precedence over barrier resolvers.
+    pub fn run(
+        &self,
+        bindings: &[(usize, usize)],
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<(Values, CtrlStats)> {
+        let values = Values::default();
+        let stats =
+            self.run_range(0..self.num_segments(), &values, bindings, governor)?;
+        Ok((values, stats))
+    }
+
+    /// Run the whole model at max shapes, no resolution — the static
+    /// baseline the benches compare against.
+    pub fn run_static(
+        &self,
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<(Values, CtrlStats)> {
+        let values = Values::default();
+        let stats = self.run_range_static(0..self.num_segments(), &values, governor)?;
+        Ok((values, stats))
+    }
+
+    /// Run a segment range with resolution against a shared value
+    /// store — the autoregressive pattern: run the prefix once, then
+    /// re-run the decoder range per step with a fresh length binding.
+    pub fn run_range(
+        &self,
+        range: Range<usize>,
+        values: &Values,
+        bindings: &[(usize, usize)],
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<CtrlStats> {
+        let mut env = ShapeEnv::unresolved();
+        for &(sym, ext) in bindings {
+            env.bind(sym, ext);
+        }
+        let mut stats = CtrlStats::default();
+        self.exec_range(range, values, &mut env, true, governor, &mut stats)?;
+        stats.bindings = env.bindings().collect();
+        Ok(stats)
+    }
+
+    /// [`SegmentedEngine::run_range`] at max shapes, no resolution.
+    pub fn run_range_static(
+        &self,
+        range: Range<usize>,
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<CtrlStats> {
+        let mut env = ShapeEnv::unresolved();
+        let mut stats = CtrlStats::default();
+        self.exec_range(range, values, &mut env, false, governor, &mut stats)?;
+        Ok(stats)
+    }
+
+    fn exec_range(
+        &self,
+        range: Range<usize>,
+        values: &Values,
+        env: &mut ShapeEnv,
+        resolve: bool,
+        governor: Option<&MemoryGovernor>,
+        stats: &mut CtrlStats,
+    ) -> anyhow::Result<()> {
+        let (g, p, plan) = (self.engine.graph, self.engine.partition, self.engine.plan);
+        let mut dead_branches: Vec<usize> = Vec::new();
+        for sid in range {
+            let seg = &self.seg_plan.segments[sid];
+            if resolve {
+                if let Some(bar) = seg.barrier {
+                    let node = g.node(bar);
+                    // Resolve only when this barrier can still contribute
+                    // — an If arm decision, or an output dynamic symbol
+                    // not already bound.  A decode loop that drives the
+                    // length keeps its warm steps value-hash-free.
+                    let needs = matches!(node.kind, OpKind::If)
+                        || node.outputs.iter().any(|&o| {
+                            g.tensor_info(o).shape.iter().any(|&d| match d {
+                                Dim::Dynamic { max } => env.binding(max).is_none(),
+                                Dim::Static(_) => false,
+                            })
+                        });
+                    // ...and only from values that were actually computed:
+                    // a producer-fed input absent from the store means its
+                    // branch was deferred past this barrier — plan at max
+                    // instead of resolving from a synthesized stand-in.
+                    let ready = node
+                        .inputs
+                        .iter()
+                        .all(|&t| g.producer(t).is_none() || values.contains(t));
+                    if needs && ready {
+                        let outcome =
+                            resolve_barrier(g, bar, |t| self.engine.read_value(values, t));
+                        for (sym, ext) in outcome.bindings {
+                            env.bind_if_absent(sym, ext);
+                        }
+                        if !outcome.dead.is_empty() {
+                            let dn = dead_nodes(g, &outcome.dead);
+                            for b in 0..plan.branches.len() {
+                                if dead_branches.contains(&b) {
+                                    continue;
+                                }
+                                let nodes = plan.branch_nodes(g, p, b);
+                                if !nodes.is_empty()
+                                    && nodes.iter().all(|id| dn.contains(id))
+                                {
+                                    dead_branches.push(b);
+                                }
+                            }
+                            dead_branches.sort_unstable();
+                        }
+                    }
+                }
+            }
+            stats.max_plan_demand = stats.max_plan_demand.max(self.max_entries[sid].demand);
+            let seg_dead: Vec<usize> = seg
+                .branches
+                .iter()
+                .copied()
+                .filter(|b| dead_branches.contains(b))
+                .collect();
+            stats.pruned_branches += seg_dead.len();
+            let entry = if resolve && !(env.is_unresolved() && seg_dead.is_empty()) {
+                self.entry_for(sid, env, &seg_dead, stats)
+            } else {
+                self.max_entries[sid].clone()
+            };
+            if entry.schedules.is_empty() {
+                continue;
+            }
+            stats.resolved_demand = stats.resolved_demand.max(entry.demand);
+            // Admission sized from resolved shapes: the max-vs-actual
+            // slack is never taken from the process-wide ledger, so
+            // co-resident models admit more concurrent waves.
+            let _lease = governor.map(|gov| gov.acquire(entry.demand));
+            let s = self.engine.run_waves(&entry.schedules, values, None, env)?;
+            merge_stats(&mut stats.exec, s);
+            stats.segments_run += 1;
+        }
+        Ok(())
+    }
+
+    fn entry_for(
+        &self,
+        sid: usize,
+        env: &ShapeEnv,
+        dead: &[usize],
+        stats: &mut CtrlStats,
+    ) -> Arc<Entry> {
+        // memory is sized at the bucket's upper bound, so every exact
+        // env in the bucket stays within the cached reservation
+        let bucketed = env.bucketed();
+        let key: PlanKey = (sid, bucketed.bindings().collect(), dead.to_vec());
+        // one lock across lookup + plan: concurrent first-steps on the
+        // same bucket must not double-plan, or the documented
+        // ≤ ⌈log₂ t_max⌉+1 misses-per-segment bound breaks.  Planning
+        // under the lock is fine — it only happens on misses, which the
+        // bound keeps rare.
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&key) {
+            stats.cache_hits += 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return e.clone();
+        }
+        stats.cache_misses += 1;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let (g, p, plan) = (self.engine.graph, self.engine.partition, self.engine.plan);
+        let seg = &self.seg_plan.segments[sid];
+        let mut mems = self.max_mems.clone();
+        for &b in &seg.branches {
+            mems[b] = resolved_branch_memory(g, p, plan, b, &bucketed, &self.max_mems[b]);
+        }
+        let entry = Arc::new(build_entry(plan, &mems, seg, dead, self.budget, &self.cfg));
+        cache.insert(key, entry.clone());
+        entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::branch::{self, DEFAULT_BETA};
+    use crate::models::{micro, whisper_tiny, ModelKind};
+    use crate::partition::{partition, CostModel};
+
+    fn cpu_only(g: &Graph) -> Partition {
+        partition(
+            g,
+            &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+        )
+    }
+
+    #[test]
+    fn shape_env_binds_and_clamps() {
+        let mut env = ShapeEnv::unresolved();
+        assert!(env.is_unresolved());
+        env.bind(64, 200);
+        assert_eq!(env.binding(64), Some(64), "extent clamps to the symbol");
+        env.bind(64, 0);
+        assert_eq!(env.binding(64), Some(1), "extent clamps up to 1");
+        env.bind(64, 9);
+        env.bind_if_absent(64, 50);
+        assert_eq!(env.dim(Dim::Dynamic { max: 64 }), 9, "first binding wins");
+        assert_eq!(env.dim(Dim::Dynamic { max: 32 }), 32, "unbound stays at max");
+        assert_eq!(env.dim(Dim::Static(7)), 7);
+    }
+
+    #[test]
+    fn shape_env_buckets() {
+        let mut a = ShapeEnv::unresolved();
+        a.bind(64, 9);
+        let mut b = ShapeEnv::unresolved();
+        b.bind(64, 13);
+        // 9 and 13 share the 16-bucket
+        assert_eq!(a.bucketed(), b.bucketed());
+        assert_eq!(a.bucketed().binding(64), Some(16));
+        let mut c = ShapeEnv::unresolved();
+        c.bind(64, 60);
+        assert_eq!(c.bucketed().binding(64), Some(64), "bucket caps at the symbol");
+    }
+
+    #[test]
+    fn from_fill_binds_every_symbol() {
+        let g = ModelKind::WhisperTiny.build();
+        let env = ShapeEnv::from_fill(&g, 0.5);
+        assert_eq!(env.binding(whisper_tiny::MAX_DEC_T), Some(32));
+        assert_eq!(env.binding(5), Some(3), "beam width symbol bound too");
+    }
+
+    #[test]
+    fn segments_respect_edge_order() {
+        for g in [ModelKind::WhisperTiny.build(), ModelKind::Yolov8n.build(), micro::gated(4)] {
+            let (segs, seg_of) = ctrl_segments(&g);
+            assert!(!segs.is_empty());
+            for node in g.nodes() {
+                let su = seg_of[node.id.0 as usize];
+                for v in g.succs(node.id) {
+                    let sv = seg_of[v.0 as usize];
+                    assert!(su <= sv, "{}: segment order violated", g.name);
+                    if is_ctrl_barrier(&node.kind) {
+                        assert!(su < sv, "{}: barrier not a cut", g.name);
+                    }
+                }
+            }
+            // every barrier is alone in its segment
+            for s in &segs {
+                if s.barrier.is_some() {
+                    assert_eq!(s.nodes.len(), 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn whisper_has_control_segments() {
+        let g = ModelKind::WhisperTiny.build();
+        let (segs, _) = ctrl_segments(&g);
+        let barriers = segs.iter().filter(|s| s.barrier.is_some()).count();
+        // While + EmbeddingLookup + BeamSearchStep
+        assert_eq!(barriers, 3, "{:?}", segs.iter().map(|s| s.barrier).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn segment_plan_respects_branch_dependencies() {
+        for g in [ModelKind::WhisperTiny.build(), ModelKind::Yolov8n.build(), micro::gated(3)] {
+            let p = partition(&g, &CostModel::default());
+            let plan = branch::plan(&g, &p, DEFAULT_BETA);
+            let sp = segment_plan(&g, &p, &plan);
+            // every branch in exactly one segment
+            let mut count = vec![0usize; plan.branches.len()];
+            for seg in &sp.segments {
+                for &b in &seg.branches {
+                    count[b] += 1;
+                }
+            }
+            assert!(count.iter().all(|&c| c == 1), "{}: {:?}", g.name, count);
+            // cross-branch unit edges never point backwards in segments
+            for (u, succs) in plan.unit_graph.succs.iter().enumerate() {
+                let bu = plan.branch_of_unit[u];
+                for &v in succs {
+                    let bv = plan.branch_of_unit[v];
+                    if bu != bv {
+                        assert!(
+                            sp.seg_of_branch[bu] <= sp.seg_of_branch[bv],
+                            "{}: branch dependency crosses segments backwards",
+                            g.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resolved_memories_clamped_by_max() {
+        let g = ModelKind::WhisperTiny.build();
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let max = memory::branch_memories(&g, &p, &plan);
+        let env = ShapeEnv::from_fill(&g, 0.25);
+        let rmems = resolved_branch_memories(&g, &p, &plan, &env, &max);
+        for (r, m) in rmems.iter().zip(&max) {
+            assert!(r.arena_bytes <= m.arena_bytes);
+            assert!(r.boundary_out_bytes <= m.boundary_out_bytes);
+        }
+        assert!(
+            rmems.iter().zip(&max).any(|(r, m)| r.total() < m.total()),
+            "decoder branches must shrink at fill 0.25"
+        );
+        // full fill binds every symbol to its max: the resolved
+        // estimator must reproduce the worst-case plan exactly
+        // (EXPERIMENTS.md §Dynamic's "at fill 1.0 the ratio is 1.0×")
+        let full = ShapeEnv::from_fill(&g, 1.0);
+        let rfull = resolved_branch_memories(&g, &p, &plan, &full, &max);
+        for (b, (r, m)) in rfull.iter().zip(&max).enumerate() {
+            assert_eq!(r.arena_bytes, m.arena_bytes, "branch {b} arena at fill 1.0");
+            assert_eq!(
+                r.boundary_out_bytes, m.boundary_out_bytes,
+                "branch {b} boundary at fill 1.0"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_nodes_cover_untaken_arm_only() {
+        let g = micro::gated(3);
+        let gate = g.nodes().iter().find(|n| matches!(n.kind, OpKind::If)).unwrap();
+        let dead = dead_nodes(&g, &[gate.outputs[1]]);
+        assert_eq!(dead.len(), 3, "exactly the untaken arm chain");
+        for id in &dead {
+            assert!(g.node(*id).name.starts_with("arm_b"), "{}", g.node(*id).name);
+        }
+        // the merge consumes the live arm too -> alive
+        let select = g.nodes().iter().find(|n| n.name == "select").unwrap();
+        assert!(!dead.contains(&select.id));
+    }
+
+    #[test]
+    fn resolve_barrier_binds_dynamic_outputs() {
+        let g = ModelKind::WhisperTiny.build();
+        let beam = g
+            .nodes()
+            .iter()
+            .find(|n| matches!(n.kind, OpKind::While))
+            .unwrap();
+        let out = resolve_barrier(&g, beam.id, |t| {
+            Tensor::randn(g.tensor_info(t).shape.iter().map(|d| d.max()).collect(), 7)
+        });
+        assert_eq!(out.bindings.len(), 1);
+        let (sym, ext) = out.bindings[0];
+        assert_eq!(sym, whisper_tiny::MAX_DEC_T);
+        assert!((1..=sym).contains(&ext));
+        assert!(out.dead.is_empty());
+    }
+}

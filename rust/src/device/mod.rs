@@ -1,7 +1,7 @@
 //! Simulated edge SoC device models.
 //!
 //! The paper's testbed (Google Pixel 6 / Huawei P30 Pro / Redmi K50) is
-//! replaced by parameterised SoC profiles (DESIGN.md §Substitutions):
+//! replaced by parameterised SoC profiles (ARCHITECTURE.md §Substitutions):
 //! per-core CPU throughput, accelerator throughput + dispatch latency,
 //! memory bandwidth, RAM, and a power-state energy model.  Values are
 //! anchored to the paper's §3.1 representative numbers and public SoC

@@ -12,7 +12,10 @@
 //!
 //! Weights are synthesised deterministically per tensor id (Parallax
 //! never inspects weights; see ARCHITECTURE.md §Substitutions).  Dynamic
-//! dims run at their maximum so artifact shapes line up.
+//! dims run at their maximum by default so artifact shapes line up; the
+//! subgraph-control path ([`crate::ctrl`], §3.4) threads a
+//! [`ShapeEnv`] through [`Engine::run_waves`] to execute at
+//! runtime-resolved extents instead.
 //!
 //! Multi-model hosts call [`Engine::run_governed`]: every wave leases
 //! its combined branch-peak demand from the process-wide
@@ -27,6 +30,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::branch::{BranchPlan, Unit};
+use crate::ctrl::ShapeEnv;
 use crate::graph::{Graph, Node, NodeId, OpKind, TensorId};
 use crate::memory::{BranchMemory, BumpArena};
 use crate::partition::Partition;
@@ -164,9 +168,17 @@ impl<'a> Engine<'a> {
         self.blocks.len()
     }
 
-    /// Resolve a tensor's concrete shape (dynamic dims at max).
-    fn shape_of(&self, t: TensorId) -> Vec<usize> {
-        self.graph.tensor_info(t).shape.iter().map(|d| d.max()).collect()
+    /// Resolve a tensor's concrete shape under a [`ShapeEnv`]
+    /// (unresolved env = every dynamic dim at max).
+    fn shape_of(&self, t: TensorId, env: &ShapeEnv) -> Vec<usize> {
+        env.shape(self.graph.tensor_info(t))
+    }
+
+    /// A tensor's current value: the store if present, else the
+    /// deterministic synthesised source — what barrier resolvers
+    /// ([`crate::ctrl::resolve_barrier`]) read.
+    pub fn read_value(&self, values: &Values, t: TensorId) -> Tensor {
+        values.get(t).unwrap_or_else(|| self.source_value(t))
     }
 
     /// Deterministic weight/input for a source tensor (no producer).
@@ -223,8 +235,27 @@ impl<'a> Engine<'a> {
         schedules: &[LayerSchedule],
         governor: Option<&MemoryGovernor>,
     ) -> anyhow::Result<(Values, ExecStats)> {
-        let t0 = std::time::Instant::now();
         let values = Values::default();
+        let stats = self.run_waves(schedules, &values, governor, &ShapeEnv::unresolved())?;
+        Ok((values, stats))
+    }
+
+    /// Lowest-level entry: run schedules against a shared value store.
+    ///
+    /// * `values` may already hold earlier segments' results (the §3.4
+    ///   segment-by-segment path); this run's outputs merge into it.
+    /// * `env` resolves dynamic dims; [`ShapeEnv::unresolved`] executes
+    ///   every dynamic dim at its max (the classic static path).  The
+    ///   subgraph-control path leases each segment's *resolved* demand
+    ///   itself and passes `governor: None` here.
+    pub fn run_waves(
+        &self,
+        schedules: &[LayerSchedule],
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+    ) -> anyhow::Result<ExecStats> {
+        let t0 = std::time::Instant::now();
         let pjrt_calls = AtomicUsize::new(0);
         let host_ops = AtomicUsize::new(0);
         let skipped = AtomicUsize::new(0);
@@ -245,7 +276,6 @@ impl<'a> Engine<'a> {
                             .iter()
                             .map(|&b| {
                                 let client = self.pool.map(|p| p.client());
-                                let values = &values;
                                 let pjrt_calls = &pjrt_calls;
                                 let host_ops = &host_ops;
                                 let skipped = &skipped;
@@ -253,7 +283,7 @@ impl<'a> Engine<'a> {
                                 scope.spawn(move || {
                                     self.run_branch(
                                         b, values, client, pjrt_calls, host_ops, skipped,
-                                        peak_arena,
+                                        peak_arena, env,
                                     )
                                 })
                             })
@@ -271,7 +301,7 @@ impl<'a> Engine<'a> {
                 let _lease = governor.map(|g| g.acquire(self.wave_demand(&[b])));
                 let client = self.pool.map(|p| p.client());
                 let out = self.run_branch(
-                    b, &values, client, &pjrt_calls, &host_ops, &skipped, &peak_arena,
+                    b, values, client, &pjrt_calls, &host_ops, &skipped, &peak_arena, env,
                 )?;
                 for (t, v) in out {
                     values.insert(t, v);
@@ -279,16 +309,13 @@ impl<'a> Engine<'a> {
             }
         }
 
-        Ok((
-            values,
-            ExecStats {
-                pjrt_calls: pjrt_calls.into_inner(),
-                host_ops: host_ops.into_inner(),
-                skipped_fused: skipped.into_inner(),
-                peak_arena_bytes: peak_arena.into_inner(),
-                wall_s: t0.elapsed().as_secs_f64(),
-            },
-        ))
+        Ok(ExecStats {
+            pjrt_calls: pjrt_calls.into_inner(),
+            host_ops: host_ops.into_inner(),
+            skipped_fused: skipped.into_inner(),
+            peak_arena_bytes: peak_arena.into_inner(),
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
     }
 
     /// Execute one branch; returns produced (tensor, value) pairs.
@@ -302,6 +329,7 @@ impl<'a> Engine<'a> {
         host_ops: &AtomicUsize,
         skipped: &AtomicUsize,
         peak_arena: &AtomicUsize,
+        env: &ShapeEnv,
     ) -> anyhow::Result<Vec<(TensorId, Tensor)>> {
         let mut local: Vec<(TensorId, Tensor)> = Vec::new();
         let mut arena = BumpArena::new();
@@ -355,11 +383,11 @@ impl<'a> Engine<'a> {
                     }
                     let outs = client.execute(&block.program, args)?;
                     pjrt_calls.fetch_add(1, Ordering::Relaxed);
-                    let out_shape = self.shape_of(block.out);
+                    let out_shape = self.shape_of(block.out, env);
                     vec![(block.out, fit(&outs[0], &out_shape))]
                 } else {
                     host_ops.fetch_add(1, Ordering::Relaxed);
-                    self.run_host_node(node, |t| read(t, &local))
+                    self.run_host_node(node, |t| read(t, &local), env)
                 };
                 for (t, v) in produced {
                     // arena accounting (the values themselves are Vec-backed;
@@ -388,15 +416,17 @@ impl<'a> Engine<'a> {
         Ok(local)
     }
 
-    /// Host-kernel execution of one node.
+    /// Host-kernel execution of one node (output shapes resolved
+    /// through `env`).
     fn run_host_node(
         &self,
         node: &Node,
         read: impl Fn(TensorId) -> Tensor,
+        env: &ShapeEnv,
     ) -> Vec<(TensorId, Tensor)> {
         use host_kernels as hk;
         let out_t = |i: usize| node.outputs[i];
-        let out_shape = |i: usize| self.shape_of(node.outputs[i]);
+        let out_shape = |i: usize| self.shape_of(node.outputs[i], env);
         let one = |v: Tensor| vec![(node.outputs[0], v)];
 
         let val = match &node.kind {
@@ -462,7 +492,7 @@ impl<'a> Engine<'a> {
         if node.outputs.len() > 1 {
             let src = read(node.inputs[0]);
             out = (0..node.outputs.len())
-                .map(|i| (out_t(i), fit(&src, &self.shape_of(out_t(i)))))
+                .map(|i| (out_t(i), fit(&src, &self.shape_of(out_t(i), env))))
                 .collect();
         }
         out
@@ -484,6 +514,12 @@ impl Values {
 
     pub fn get(&self, t: TensorId) -> Option<Tensor> {
         self.map.lock().unwrap().get(&t).cloned()
+    }
+
+    /// Is a value stored for this tensor?  (No clone — the §3.4
+    /// resolver uses this to tell computed values from absent ones.)
+    pub fn contains(&self, t: TensorId) -> bool {
+        self.map.lock().unwrap().contains_key(&t)
     }
 
     pub fn len(&self) -> usize {

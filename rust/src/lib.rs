@@ -8,7 +8,8 @@
 //!   analysis ([`partition`], [`branch`]), branch-aware memory
 //!   management ([`memory`]), resource-constrained parallel scheduling
 //!   ([`sched`]) with a process-wide memory governor
-//!   ([`sched::MemoryGovernor`]), plus the substrates it needs: a graph
+//!   ([`sched::MemoryGovernor`]), runtime subgraph control for dynamic
+//!   models ([`ctrl`], §3.4), plus the substrates it needs: a graph
 //!   IR ([`graph`]), a model zoo ([`models`]), simulated edge SoCs
 //!   ([`device`]), a discrete-event executor ([`sim`]), baseline
 //!   frameworks ([`baselines`]), a real PJRT execution engine
@@ -26,6 +27,7 @@ pub mod baselines;
 pub mod util;
 pub mod branch;
 pub mod config;
+pub mod ctrl;
 pub mod device;
 pub mod eval;
 pub mod exec;

@@ -212,13 +212,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let pipe = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, sched_cfg)
             .expect("cpu supported")
             .with_governor(governor.clone());
-        let (demand, exec) = parallax::serve::pipeline_executor(pipe, 7);
-        server.register_with_demand(model.slug(), demand, exec);
-        println!(
-            "registered {:<12} branch-peak demand {:.2} MB",
-            model.slug(),
-            demand as f64 / 1e6
-        );
+        if model == ModelKind::Yolov8n {
+            // dynamic NMS tail: lease the per-request resolved demand (§3.4)
+            let (demand_fn, exec) = parallax::serve::resolved_pipeline_executor(pipe, 7);
+            server.register_with_demand_fn(model.slug(), demand_fn, exec);
+            println!(
+                "registered {:<12} per-request resolved demand (dynamic NMS tail)",
+                model.slug()
+            );
+        } else {
+            let (demand, exec) = parallax::serve::pipeline_executor(pipe, 7);
+            server.register_with_demand(model.slug(), demand, exec);
+            println!(
+                "registered {:<12} branch-peak demand {:.2} MB",
+                model.slug(),
+                demand as f64 / 1e6
+            );
+        }
     }
     let names: Vec<&str> = models.iter().map(|m| m.slug()).collect();
     let report = server.run_load(&names, n, conc, 11)?;

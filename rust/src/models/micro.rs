@@ -108,6 +108,39 @@ pub fn mixed() -> Graph {
     g
 }
 
+/// If-gated arms: a predicate-driven `If` barrier emits two arm tokens,
+/// each feeding a chain of `arm_len` ops, merged by a `Maximum` select.
+/// At runtime only one arm is live — the §3.4 subgraph-control path
+/// resolves the predicate, prunes the untaken arm's branches and never
+/// leases their arena reservations.  The untaken arm's input to the
+/// select is don't-care (`If` semantics): a pruned run reads the
+/// engine's deterministic stand-in there, so results are reproducible
+/// but not equal to a run that executes both arms.
+pub fn gated(arm_len: usize) -> Graph {
+    let mut g = Graph::new("gated");
+    let pred = g.tensor(&[4], "pred");
+    let a0 = g.tensor(&[64], "arm_a.t0");
+    let b0 = g.tensor(&[64], "arm_b.t0");
+    g.add_node("gate", OpKind::If, vec![pred], vec![a0, b0]);
+    let mut ta = a0;
+    for j in 0..arm_len {
+        let o = g.tensor(&[64], &format!("arm_a.t{}", j + 1));
+        g.add_node(format!("arm_a.{j}"), OpKind::Relu, vec![ta], vec![o]);
+        ta = o;
+    }
+    let mut tb = b0;
+    for j in 0..arm_len {
+        let o = g.tensor(&[64], &format!("arm_b.t{}", j + 1));
+        g.add_node(format!("arm_b.{j}"), OpKind::Silu, vec![tb], vec![o]);
+        tb = o;
+    }
+    let m = g.tensor(&[64], "selected");
+    g.add_node("select", OpKind::Maximum, vec![ta, tb], vec![m]);
+    let out = g.tensor(&[64], "out");
+    g.add_node("output", OpKind::Output, vec![m], vec![out]);
+    g
+}
+
 /// Random layered DAG for property tests: `layers` layers of up to
 /// `width` elementwise nodes, each consuming 1-2 tensors from earlier
 /// layers.  Always acyclic by construction.
@@ -176,6 +209,14 @@ mod tests {
             assert!(g.validate().is_empty(), "seed {seed}: {:?}", g.validate());
             assert!(g.topo_order().is_some(), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn gated_validates_with_control_flow() {
+        let g = gated(3);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.num_nodes(), 1 + 3 + 3 + 2);
+        assert!(g.nodes().iter().any(|n| n.kind.is_control_flow()));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! Parallax is weight-agnostic — every analysis consumes only DAG
 //! topology, op metadata, shapes and FLOPs — so a topology-faithful
 //! synthetic graph exercises the full pipeline exactly as the real
-//! model would (see DESIGN.md §Substitutions).  Node counts are
+//! model would (see ARCHITECTURE.md §Substitutions).  Node counts are
 //! calibrated against Table 7's "Pre" column.
 
 pub mod blocks;

@@ -3,7 +3,7 @@
 //! Encoder: mel-spectrogram front-end + 2 conv stems + 4 transformer
 //! blocks at T=192 (pooled frame slice; the full 1500-frame encoder is
 //! downscaled so the zoo's shape universe matches the AOT artifact set —
-//! see DESIGN.md §Substitutions).  Decoder: 4 blocks of self-attention
+//! see ARCHITECTURE.md §Substitutions).  Decoder: 4 blocks of self-attention
 //! (dynamic length, KV-cached) + cross-attention + FFN, driven by a
 //! beam-search While loop — the paper's canonical dynamic-control-flow
 //! fallback.

@@ -222,6 +222,29 @@ impl Lease<'_> {
     pub fn bytes(&self) -> u64 {
         self.bytes
     }
+
+    /// Shrink a live reservation to `bytes`, returning the slack to the
+    /// ledger and waking waiters.  Growing is not allowed — a no-op.
+    ///
+    /// For admission paths that must reserve *before* resolution lands
+    /// (e.g. a dispatcher admitting a request at its worst case, then
+    /// downsizing once the shapes resolve).  The in-tree §3.4 engine
+    /// doesn't need it — barriers resolve before their segment's lease
+    /// is sized, so [`MemoryGovernor::acquire`] takes the resolved
+    /// figure directly and the slack never leaves the ledger.
+    pub fn shrink_to(&mut self, bytes: u64) {
+        if bytes >= self.bytes {
+            return;
+        }
+        let mut st = self.gov.state.lock().unwrap();
+        st.in_use = st.in_use.saturating_sub(self.bytes - bytes);
+        if self.bytes > 0 && bytes == 0 {
+            st.nonzero_leases -= 1;
+        }
+        drop(st);
+        self.bytes = bytes;
+        self.gov.freed.notify_all();
+    }
 }
 
 impl Drop for Lease<'_> {
@@ -351,6 +374,29 @@ mod tests {
         let big = gov.try_acquire(50);
         assert!(big.is_some(), "zero-byte lease blocked degraded-serial admission");
         drop((zero, big));
+        assert_eq!(gov.in_use(), 0);
+    }
+
+    #[test]
+    fn shrink_returns_slack_and_unblocks() {
+        let gov = MemoryGovernor::new(100);
+        let mut big = gov.acquire(90);
+        assert!(gov.try_acquire(40).is_none());
+        big.shrink_to(50);
+        assert_eq!(gov.in_use(), 50);
+        assert_eq!(big.bytes(), 50);
+        let small = gov.try_acquire(40).expect("slack returned to the ledger");
+        drop((big, small));
+        assert_eq!(gov.in_use(), 0, "shrunk lease releases its new size");
+        // growing is a no-op
+        let mut l = gov.acquire(10);
+        l.shrink_to(20);
+        assert_eq!(l.bytes(), 10);
+        // shrink to zero clears the nonzero count: an over-budget
+        // degraded-serial admission becomes possible again
+        l.shrink_to(0);
+        assert!(gov.try_acquire(500).is_some());
+        drop(l);
         assert_eq!(gov.in_use(), 0);
     }
 

@@ -118,6 +118,50 @@ pub fn pipeline_executor(
     (demand, exec)
 }
 
+/// Fill buckets the resolved-demand table is precomputed for.
+const DEMAND_BUCKETS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+
+/// [`pipeline_executor`] for *dynamic* models (§3.4): instead of one
+/// worst-case demand, the per-batch lease follows the request's
+/// resolved shapes.  Demands are precomputed per fill bucket from
+/// [`crate::ctrl::resolved_branch_memories`], so a mostly-short-input
+/// stream leases far less than the max-shape plan and the governor
+/// admits more concurrent batches.  Register the returned function via
+/// [`Server::register_with_demand_fn`].
+pub fn resolved_pipeline_executor(
+    pipe: crate::baselines::Pipeline,
+    rng_seed: u64,
+) -> (Box<dyn Fn(u64) -> u64 + Send + Sync>, Box<dyn ModelExecutor>) {
+    let table: Vec<u64> = DEMAND_BUCKETS
+        .iter()
+        .map(|&fill| {
+            let env = crate::ctrl::ShapeEnv::from_fill(&pipe.graph, fill);
+            let mems = crate::ctrl::resolved_branch_memories(
+                &pipe.graph,
+                &pipe.partition,
+                &pipe.plan,
+                &env,
+                &pipe.mems,
+            );
+            crate::baselines::Pipeline::peak_layer_demand(&pipe.plan, &mems)
+        })
+        .collect();
+    let demand_fn = Box::new(move |seed: u64| {
+        let fill = sim_fill(seed);
+        let idx = DEMAND_BUCKETS
+            .iter()
+            .position(|&b| fill <= b)
+            .unwrap_or(DEMAND_BUCKETS.len() - 1);
+        table[idx]
+    });
+    let mut rng = crate::util::rng::Rng::new(rng_seed);
+    let exec = Box::new(FnExecutor(move |seed| {
+        let r = pipe.run(&mut rng, sim_fill(seed));
+        Ok((r.latency_s, r.energy_j))
+    }));
+    (demand_fn, exec)
+}
+
 /// Dispatcher tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeCfg {
@@ -138,10 +182,22 @@ struct QueuedJob {
     reply: mpsc::Sender<anyhow::Result<Response>>,
 }
 
+/// How a model's per-batch lease is sized.
+enum Demand {
+    /// One worst-case figure (static models).
+    Fixed(u64),
+    /// Computed per request seed (dynamic models: the lease follows the
+    /// resolved shapes); a batch leases the max over its member seeds.
+    PerSeed(Box<dyn Fn(u64) -> u64 + Send + Sync>),
+}
+
 struct ModelEntry {
     name: String,
     /// Branch-peak bytes leased from the governor per in-flight batch.
-    demand_bytes: u64,
+    /// Shared so workers can evaluate per-seed demand functions *off*
+    /// the dispatcher lock (a slow or re-entrant demand fn must never
+    /// stall queue routing).
+    demand: Arc<Demand>,
     /// `None` while a worker is executing this model's batch — models
     /// stay internally sequential (executors are stateful `FnMut`).
     exec: Option<Box<dyn ModelExecutor>>,
@@ -233,11 +289,29 @@ impl Server {
         demand_bytes: u64,
         exec: Box<dyn ModelExecutor>,
     ) {
+        self.register_entry(model, Demand::Fixed(demand_bytes), exec);
+    }
+
+    /// Register a *dynamic* model (§3.4): the per-batch lease is
+    /// computed from the request seeds at dispatch time (a batch leases
+    /// the max demand over its members), so short inputs reserve their
+    /// resolved footprint rather than the worst case.  Pair with
+    /// [`resolved_pipeline_executor`].
+    pub fn register_with_demand_fn(
+        &mut self,
+        model: &str,
+        demand: Box<dyn Fn(u64) -> u64 + Send + Sync>,
+        exec: Box<dyn ModelExecutor>,
+    ) {
+        self.register_entry(model, Demand::PerSeed(demand), exec);
+    }
+
+    fn register_entry(&mut self, model: &str, demand: Demand, exec: Box<dyn ModelExecutor>) {
         let mut st = self.inner.state.lock().unwrap();
         let slot = st.models.len();
         st.models.push(ModelEntry {
             name: model.to_string(),
-            demand_bytes,
+            demand: Arc::new(demand),
             exec: Some(exec),
             queue: VecDeque::new(),
             poisoned: false,
@@ -385,9 +459,16 @@ fn worker_loop(inner: &Inner) {
                 None => break,
             }
         }
-        let demand = st.models[slot].demand_bytes;
+        let demand_src = st.models[slot].demand.clone();
         let name = st.models[slot].name.clone();
         drop(st);
+
+        // size the lease off the dispatcher lock: a user-supplied demand
+        // fn may be arbitrarily slow without stalling queue routing
+        let demand = match &*demand_src {
+            Demand::Fixed(b) => *b,
+            Demand::PerSeed(f) => jobs.iter().map(|j| f(j.req.seed)).max().unwrap_or(0),
+        };
 
         // admission: one lease covers the whole micro-batch
         let lease = inner.governor.acquire(demand);
@@ -668,6 +749,54 @@ mod tests {
             .collect();
         got.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn per_seed_demand_leases_resolved_bytes() {
+        // demand fn: even seeds are "short inputs" (10 B), odd are
+        // full-length (60 B).  With unit batches the ledger must see
+        // exactly the per-request figure, never the worst case.
+        let gov = Arc::new(MemoryGovernor::new(1_000));
+        let mut s = Server::with_config(ServeCfg { workers: 1, max_batch: 1 }, gov.clone());
+        let g = gov.clone();
+        s.register_with_demand_fn(
+            "dyn",
+            Box::new(|seed| if seed % 2 == 0 { 10 } else { 60 }),
+            Box::new(FnExecutor(move |seed| {
+                let expect = if seed % 2 == 0 { 10 } else { 60 };
+                assert_eq!(g.in_use(), expect, "lease must match the resolved demand");
+                Ok((0.0, seed as f64))
+            })),
+        );
+        for seed in 0..6 {
+            s.infer("dyn", seed).unwrap();
+        }
+        assert_eq!(gov.in_use(), 0);
+        assert_eq!(gov.peak_reserved(), 60, "worst case only when a long input arrives");
+    }
+
+    #[test]
+    fn resolved_demands_monotone_in_fill() {
+        // the §3.4 adapter: a dynamic model's resolved demand at short
+        // fills must stay below the worst-case figure register_with_demand
+        // would lease.
+        let soc = crate::device::SocProfile::pixel6();
+        let pipe = crate::baselines::Pipeline::build(
+            crate::baselines::Framework::Parallax,
+            crate::models::ModelKind::WhisperTiny,
+            &soc,
+            crate::sim::Mode::CpuOnly,
+            crate::sched::SchedCfg::default(),
+        )
+        .unwrap();
+        let worst = pipe.peak_branch_demand();
+        let (demand_fn, _exec) = resolved_pipeline_executor(pipe, 7);
+        // sim_fill(0) ≈ 0.15 (shortest bucket), sim_fill covers [0.15, 1)
+        let short = demand_fn(0);
+        assert!(short <= worst, "short {short} > worst {worst}");
+        for seed in 0..97 {
+            assert!(demand_fn(seed) <= worst);
+        }
     }
 
     #[test]

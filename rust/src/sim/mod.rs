@@ -2,7 +2,7 @@
 //!
 //! Charges analytic time/energy for a scheduled Branch-Layer plan on a
 //! [`SocProfile`] — the substitution for the paper's on-phone
-//! measurements (DESIGN.md).  One simulation = one inference with a
+//! measurements (ARCHITECTURE.md §Substitutions).  One simulation = one inference with a
 //! concrete dynamic-shape draw; Table 3's min/max come from sweeping
 //! the draw across the paper's 30-input protocol.
 //!
@@ -251,6 +251,39 @@ fn branch_time_delegate(
     t
 }
 
+/// Peak §3.3 lease a governed execution of `schedules` holds: the max
+/// over parallel waves of the CPU branches' summed M_i (a sequential
+/// spill branch holds its own M_i alone; delegate branches occupy the
+/// accelerator, not host arenas).
+///
+/// Table benches use this to report dynamic-model numbers: evaluate it
+/// once with the max-shape memories and once with
+/// [`crate::ctrl::resolved_branch_memories`] to get the worst-case vs
+/// resolved-shape reservation of the same plan (§3.4).
+pub fn schedule_peak_demand(
+    plan: &BranchPlan,
+    schedules: &[LayerSchedule],
+    mems: &[BranchMemory],
+) -> u64 {
+    let mut peak = 0u64;
+    for ls in schedules {
+        for wave in &ls.waves {
+            let sum: u64 = wave
+                .iter()
+                .filter(|&&b| !plan.branches[b].has_delegate)
+                .map(|&b| mems[b].total() as u64)
+                .sum();
+            peak = peak.max(sum);
+        }
+        for &b in &ls.sequential {
+            if !plan.branches[b].has_delegate {
+                peak = peak.max(mems[b].total() as u64);
+            }
+        }
+    }
+    peak
+}
+
 /// Fill-independent activation footprint for a framework's planner —
 /// compute once per pipeline, pass into [`simulate`].
 pub fn activation_footprint(
@@ -491,6 +524,27 @@ mod tests {
         let r = simulate(&g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act);
         let sum: f64 = r.per_layer.iter().map(|l| l.latency_s).sum();
         assert!((sum + plx.graph_overhead_s - r.latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_peak_demand_matches_widest_wave() {
+        let g = micro::parallel_chains(4, 5);
+        let p = partition(
+            &g,
+            &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+        );
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg::default();
+        let scheds = sched::schedule(&plan, &mems, u64::MAX, &cfg);
+        let peak = schedule_peak_demand(&plan, &scheds, &mems);
+        assert!(peak > 0);
+        // all-sequential never exceeds the widest parallel wave
+        let seq: Vec<LayerSchedule> = scheds
+            .iter()
+            .map(|s| LayerSchedule { waves: vec![], sequential: s.all().collect() })
+            .collect();
+        assert!(schedule_peak_demand(&plan, &seq, &mems) <= peak);
     }
 
     #[test]

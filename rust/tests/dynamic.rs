@@ -1,0 +1,222 @@
+//! Integration tests for runtime subgraph control (§3.4): segmented
+//! execution with runtime-resolved shapes, plan caching, dead-arm
+//! pruning, and resolved-shape governor leases.
+//!
+//! The autoregressive loop tests run on a whisper-shaped mini decoder
+//! (While + EmbeddingLookup + dynamic transformer blocks) so `cargo
+//! test` stays fast; Whisper-Tiny itself is exercised on its decode
+//! range (the encoder prefix is synthesized, as the engine does for any
+//! absent value).  The full Whisper-Tiny decode loop lives in
+//! `examples/whisper_decode.rs` and `benches/dynamic_subgraph.rs`.
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::ctrl::SegmentedEngine;
+use parallax::exec::{Engine, Values};
+use parallax::graph::{DType, Dim, Graph, OpKind};
+use parallax::models::blocks::{attention_block, ffn_block, TransformerCfg};
+use parallax::models::{micro, whisper_tiny, ModelKind};
+use parallax::partition::{partition, CostModel, Partition};
+use parallax::sched::{MemoryGovernor, SchedCfg};
+
+fn cpu_only(g: &Graph) -> Partition {
+    partition(
+        g,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    )
+}
+
+const MINI_T: usize = 16;
+
+/// Whisper-shaped mini decoder: While barrier feeding an embedding
+/// lookup and two dynamic transformer blocks, with a logits head.
+fn mini_decoder() -> Graph {
+    let d = 32;
+    let mut g = Graph::new("mini_decoder");
+    let t_dyn = Dim::Dynamic { max: MINI_T };
+    let state = g.add_tensor(vec![t_dyn], DType::I32, "state");
+    let tokens = g.add_tensor(vec![t_dyn], DType::I32, "tokens");
+    g.add_node("loop", OpKind::While, vec![state], vec![tokens]);
+    let table = g.tensor(&[100, d], "embed.table");
+    let emb = g.add_tensor(vec![t_dyn, Dim::Static(d)], DType::F32, "embedded");
+    g.add_node("embed", OpKind::EmbeddingLookup, vec![tokens, table], vec![emb]);
+    let cfg = TransformerCfg {
+        t: MINI_T,
+        d,
+        heads: 4,
+        ffn_mult: 2,
+        seq_dynamic: true,
+        per_head: false,
+    };
+    let mut x = emb;
+    for i in 0..2 {
+        x = attention_block(&mut g, x, cfg, &format!("blk{i}"), None);
+        x = ffn_block(&mut g, x, cfg, &format!("blk{i}"), None);
+    }
+    let last = g.tensor(&[1, d], "last");
+    g.add_node("last_slice", OpKind::Slice, vec![x], vec![last]);
+    let unemb = g.tensor(&[d, 100], "unembed.w");
+    let logits = g.tensor(&[1, 100], "logits");
+    g.add_node("unembed", OpKind::MatMul, vec![last, unemb], vec![logits]);
+    let out = g.tensor(&[1, 100], "out");
+    g.add_node("output", OpKind::Output, vec![logits], vec![out]);
+    assert!(g.validate().is_empty(), "{:?}", g.validate());
+    g
+}
+
+#[test]
+fn decode_loop_bit_identical_across_thread_counts_and_schedules() {
+    let g = mini_decoder();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+
+    // serial, parallel, and budget-starved (all-sequential spill)
+    let configs = [
+        (SchedCfg { max_threads: 1, margin: 0.4 }, 1u64 << 34),
+        (SchedCfg { max_threads: 6, margin: 0.4 }, 1u64 << 34),
+        (SchedCfg { max_threads: 6, margin: 0.4 }, 0u64),
+    ];
+    let mut all_checksums: Vec<Vec<f64>> = Vec::new();
+    for (cfg, budget) in configs {
+        let se = SegmentedEngine::new(&engine, cfg, budget);
+        let mut checksums = Vec::new();
+        for t in 1..=MINI_T {
+            let (values, stats) = se.run(&[(MINI_T, t)], None).unwrap();
+            assert!(stats.segments_run > 0);
+            assert!(values.all_finite());
+            assert_eq!(
+                stats.bindings.iter().find(|&&(s, _)| s == MINI_T),
+                Some(&(MINI_T, t)),
+                "caller binding must drive the decode length"
+            );
+            checksums.push(values.checksum());
+        }
+        all_checksums.push(checksums);
+    }
+    assert_eq!(
+        all_checksums[0], all_checksums[1],
+        "thread count must not change decode results"
+    );
+    assert_eq!(
+        all_checksums[0], all_checksums[2],
+        "serial spill must not change decode results"
+    );
+}
+
+#[test]
+fn plan_cache_shares_power_of_two_buckets() {
+    let g = mini_decoder();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let se = SegmentedEngine::new(&engine, SchedCfg::default(), 1 << 34);
+
+    let (_, first) = se.run(&[(MINI_T, 9)], None).unwrap();
+    assert!(first.cache_misses > 0, "cold run must plan");
+    // 13 shares the 16-bucket with 9: pure cache hits, same plans
+    let (_, second) = se.run(&[(MINI_T, 13)], None).unwrap();
+    assert_eq!(second.cache_misses, 0, "bucketed decode step must reuse plans");
+    assert!(second.cache_hits > 0);
+    assert_eq!(second.resolved_demand, first.resolved_demand);
+    // a different bucket re-plans
+    let (_, third) = se.run(&[(MINI_T, 2)], None).unwrap();
+    assert!(third.cache_misses > 0, "new bucket must plan again");
+    let (hits, misses) = se.cache_stats();
+    assert_eq!(hits, first.cache_hits + second.cache_hits + third.cache_hits);
+    assert_eq!(misses, first.cache_misses + second.cache_misses + third.cache_misses);
+}
+
+#[test]
+fn whisper_decode_range_resolved_leases_strictly_below_max() {
+    let g = ModelKind::WhisperTiny.build();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let se = SegmentedEngine::new(&engine, SchedCfg::default(), 1 << 34);
+    let bar = se.first_barrier_segment().expect("whisper has control flow");
+    let n = se.num_segments();
+
+    // decode range only (encoder values synthesized deterministically):
+    // max-shape plan vs runtime-resolved 4-token step
+    let gov_max = MemoryGovernor::new(u64::MAX);
+    let gov_res = MemoryGovernor::new(u64::MAX);
+    let values_max = Values::default();
+    let st = se.run_range_static(bar..n, &values_max, Some(&gov_max)).unwrap();
+    assert!(st.segments_run > 0);
+
+    let values_res = Values::default();
+    let r4 = se
+        .run_range(bar..n, &values_res, &[(whisper_tiny::MAX_DEC_T, 4)], Some(&gov_res))
+        .unwrap();
+    assert_eq!(
+        r4.bindings.iter().find(|&&(s, _)| s == whisper_tiny::MAX_DEC_T),
+        Some(&(whisper_tiny::MAX_DEC_T, 4))
+    );
+    assert!(r4.resolved_demand > 0);
+    assert!(
+        r4.resolved_demand < r4.max_plan_demand,
+        "resolved decode demand {} must be strictly below the max-shape plan {}",
+        r4.resolved_demand,
+        r4.max_plan_demand
+    );
+    assert!(
+        gov_res.peak_reserved() < gov_max.peak_reserved(),
+        "resolved decode leases {} must stay strictly below the max-shape peak {}",
+        gov_res.peak_reserved(),
+        gov_max.peak_reserved()
+    );
+    assert!(gov_max.peak_reserved() <= se.max_plan_peak_demand());
+    assert_eq!(gov_res.in_use(), 0, "all decode leases returned");
+
+    // the same resolved step is schedule-invariant (serial engine)
+    let se1 = SegmentedEngine::new(&engine, SchedCfg { max_threads: 1, margin: 0.4 }, 1 << 34);
+    let values_ser = Values::default();
+    se1.run_range(bar..n, &values_ser, &[(whisper_tiny::MAX_DEC_T, 4)], None).unwrap();
+    assert_eq!(
+        values_res.checksum(),
+        values_ser.checksum(),
+        "decode step must be bit-identical across thread counts"
+    );
+    assert!(values_res.all_finite());
+}
+
+#[test]
+fn gated_if_prunes_dead_arm_and_stays_deterministic() {
+    let g = micro::gated(5);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+
+    let gov = MemoryGovernor::new(1 << 30);
+    let se = SegmentedEngine::new(&engine, SchedCfg::default(), 1 << 30);
+    let (values, stats) = se.run(&[], Some(&gov)).unwrap();
+    assert!(values.all_finite());
+    assert!(stats.pruned_branches >= 1, "untaken If arm must be pruned");
+    assert!(stats.resolved_demand <= stats.max_plan_demand);
+    assert_eq!(gov.in_use(), 0);
+
+    // pruning decision is value-driven and deterministic: thread count
+    // must not change the outcome or the results
+    let se1 = SegmentedEngine::new(&engine, SchedCfg { max_threads: 1, margin: 0.4 }, 1 << 30);
+    let (values1, stats1) = se1.run(&[], None).unwrap();
+    assert_eq!(stats1.pruned_branches, stats.pruned_branches);
+    assert_eq!(values.checksum(), values1.checksum());
+}
+
+#[test]
+fn static_run_matches_classic_engine() {
+    // run_static over all segments must equal the classic whole-graph
+    // engine path: same branches, same max shapes, same values.
+    let g = mini_decoder();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let se = SegmentedEngine::new(&engine, SchedCfg::default(), 1 << 34);
+    let (seg_values, _) = se.run_static(None).unwrap();
+
+    let mems = parallax::memory::branch_memories(&g, &p, &plan);
+    let schedules =
+        parallax::sched::schedule(&plan, &mems, 1 << 34, &SchedCfg::default());
+    let (classic_values, _) = engine.run(&schedules).unwrap();
+    assert_eq!(seg_values.checksum(), classic_values.checksum());
+}

@@ -10,7 +10,7 @@
 
 use parallax::branch::{self, DEFAULT_BETA};
 use parallax::memory::{self, branch_memories, BumpArena};
-use parallax::models::micro;
+use parallax::models::{micro, ModelKind};
 use parallax::partition::{partition, CostModel};
 use parallax::sched::{self, Lease, MemoryGovernor, SchedCfg};
 use parallax::util::prop;
@@ -285,6 +285,37 @@ fn prop_governor_ledger_never_overcommits() {
         }
         drop(held);
         assert_eq!(gov.in_use(), 0, "bytes leaked after all leases dropped");
+    });
+}
+
+#[test]
+fn prop_resolved_memories_never_exceed_max() {
+    // §3.4 invariant: resolved-shape branch memories are bounded by the
+    // max-shape plan for arbitrary fill ratios (the static offsets are
+    // always a valid fallback), and short fills genuinely shrink the
+    // dynamic branches.
+    prop::check("resolved <= max", 25, |rng| {
+        let kinds = [ModelKind::WhisperTiny, ModelKind::Yolov8n];
+        let g = kinds[rng.range(0, kinds.len())].build();
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let max = branch_memories(&g, &p, &plan);
+        let fill = 0.05 + 0.95 * rng.f64();
+        let env = parallax::ctrl::ShapeEnv::from_fill(&g, fill);
+        let rmems = parallax::ctrl::resolved_branch_memories(&g, &p, &plan, &env, &max);
+        for (b, (r, m)) in rmems.iter().zip(&max).enumerate() {
+            assert!(r.arena_bytes <= m.arena_bytes, "branch {b}: arena over max");
+            assert!(
+                r.boundary_out_bytes <= m.boundary_out_bytes,
+                "branch {b}: boundary over max"
+            );
+        }
+        if fill <= 0.5 {
+            assert!(
+                rmems.iter().zip(&max).any(|(r, m)| r.total() < m.total()),
+                "no dynamic branch shrank at fill {fill}"
+            );
+        }
     });
 }
 

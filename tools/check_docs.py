@@ -1,0 +1,97 @@
+#!/usr/bin/env python3
+"""Docs-integrity check: no dangling cross-references.
+
+Verifies, over the whole repo:
+  1. relative markdown links `[text](path)` in *.md point at existing
+     files (anchors and external URLs are skipped);
+  2. `<NAME>.md` mentions in Rust doc comments and *.md prose refer to
+     markdown files that exist at the repo root;
+  3. `<NAME>.md §Section` references resolve to a real heading of that
+     file (substring match against `#`-headings).
+
+Exit code 0 = clean; 1 = dangling references (each printed).
+Run from the repo root: `python3 tools/check_docs.py`.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
+MD_FILE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
+MD_SECTION = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\s+§([A-Za-z0-9_-]+)")
+
+
+def repo_files(exts):
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [
+            d for d in dirnames if d not in {".git", "target", "node_modules"}
+        ]
+        for f in filenames:
+            if any(f.endswith(e) for e in exts):
+                yield os.path.join(dirpath, f)
+
+
+def headings(md_path):
+    heads = []
+    with open(md_path, encoding="utf-8") as fh:
+        in_code = False
+        for line in fh:
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if not in_code and line.startswith("#"):
+                heads.append(line.lstrip("#").strip())
+    return heads
+
+
+def main():
+    problems = []
+
+    # 1. relative markdown links
+    for md in repo_files([".md"]):
+        text = open(md, encoding="utf-8").read()
+        for target in MD_LINK.findall(text):
+            target = target.split("#")[0].strip()
+            if not target or "://" in target or target.startswith("mailto:"):
+                continue
+            resolved = os.path.normpath(os.path.join(os.path.dirname(md), target))
+            if not os.path.exists(resolved):
+                problems.append(
+                    f"{os.path.relpath(md, ROOT)}: broken link -> {target}"
+                )
+
+    # 2 + 3. <NAME>.md (§Section) mentions in sources and docs
+    known_md = {
+        os.path.basename(p): p for p in repo_files([".md"])
+    }
+    for src in list(repo_files([".rs", ".py", ".md", ".toml", ".yml"])):
+        rel = os.path.relpath(src, ROOT)
+        if rel.startswith("tools" + os.sep):
+            continue  # this checker's own docs
+        text = open(src, encoding="utf-8", errors="replace").read()
+        for name in set(MD_FILE.findall(text)):
+            if name not in known_md:
+                problems.append(f"{rel}: references missing file {name}")
+        for name, section in set(MD_SECTION.findall(text)):
+            if name not in known_md:
+                continue  # already reported above
+            heads = headings(known_md[name])
+            if not any(section.lower() in h.lower() for h in heads):
+                problems.append(
+                    f"{rel}: {name} §{section} has no matching heading"
+                )
+
+    if problems:
+        print("docs-integrity check FAILED:")
+        for p in sorted(problems):
+            print(f"  {p}")
+        return 1
+    print("docs-integrity check OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
