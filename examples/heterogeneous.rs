@@ -1,0 +1,115 @@
+//! Heterogeneous placement & co-execution walkthrough: the whole
+//! placement pipeline on one fallback-heavy model, annotated step by
+//! step.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous
+//! ```
+//!
+//! 1. Partition with the device-derived cost model
+//!    (`CostModel::from_profile` — Appendix B thresholds from the
+//!    `SocProfile`).
+//! 2. Extract branches/layers (§3.1) and assign each branch a
+//!    `Placement` by modelled latency (`place::assign`).
+//! 3. Execute: delegated branches on the async delegate lane
+//!    overlapping the CPU fallback waves (`Engine::run_placed`), with
+//!    the governor lease covering the delegate-I/O staging.
+//! 4. Cross-check against the CPU-only-forced run: bit-identical
+//!    outputs, strictly fewer CPU-wave branch executions.
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::exec::Engine;
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel};
+use parallax::place::{self, PlacePolicy, Placement, PlacementPlan};
+use parallax::sched::{self, MemoryGovernor, SchedCfg};
+
+fn main() -> anyhow::Result<()> {
+    let soc = SocProfile::pixel6();
+    println!(
+        "device: {} (acc {:.1} TFLOP/s @ {:.0}% util, dispatch {:.2} ms)\n",
+        soc.display_name(),
+        soc.acc_flops / 1e12,
+        soc.acc_utilization * 100.0,
+        soc.acc_dispatch_s * 1e3,
+    );
+
+    // -- 1. model + device-derived partition ---------------------------
+    let g = micro::fallback_heavy(6, 24, 448, 4);
+    let cm = CostModel::from_profile(&soc);
+    println!(
+        "cost model from profile: N>=3, F>={:.1} MFLOP, B/F<={:.4} B/FLOP",
+        cm.min_flops as f64 / 1e6,
+        cm.max_bytes_per_flop
+    );
+    let p = partition(&g, &cm);
+    println!(
+        "partition: {} delegate region(s), {} CPU fallback node(s), {} pruned\n",
+        p.regions.len(),
+        p.cpu_nodes(),
+        p.pruned.len()
+    );
+
+    // -- 2. branches, layers, placement --------------------------------
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+    for b in 0..plan.branches.len() {
+        let tag = match placed.assignment[b] {
+            Placement::Delegate => "DELEGATE",
+            Placement::CpuPool => "cpu",
+        };
+        println!(
+            "branch {b:>2}: {:>8}  modelled cpu {:>8.3} ms  delegate {:>8}  \
+             staging {:>6.1} KB",
+            tag,
+            placed.cpu_latency_s[b] * 1e3,
+            if placed.delegate_latency_s[b].is_finite() {
+                format!("{:.3} ms", placed.delegate_latency_s[b] * 1e3)
+            } else {
+                "-".to_string()
+            },
+            placed.staging_bytes[b] as f64 / 1e3,
+        );
+    }
+
+    // -- 3. co-execute under a governor --------------------------------
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let schedules = sched::schedule(&plan, &mems, 1 << 31, &cfg);
+    let gov = MemoryGovernor::new(u64::MAX);
+    let t = std::time::Instant::now();
+    let (v_coex, st_coex) = engine.run_placed(&schedules, &placed, Some(&gov))?;
+    let coex_ms = t.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "\nco-execution: {:.0} ms wall, {} CPU-wave branches + {} delegate job(s), \
+         modelled acc busy {:.2} ms, peak lease {:.1} KB",
+        coex_ms,
+        st_coex.cpu_branch_runs,
+        st_coex.delegate_jobs,
+        st_coex.acc_modelled_s * 1e3,
+        gov.peak_reserved() as f64 / 1e3,
+    );
+
+    // -- 4. CPU-only-forced cross-check --------------------------------
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let t = std::time::Instant::now();
+    let (v_cpu, st_cpu) = engine.run_placed(&schedules, &forced, None)?;
+    let cpu_ms = t.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cpu-only forced: {:.0} ms wall, {} CPU-wave branches",
+        cpu_ms, st_cpu.cpu_branch_runs
+    );
+    anyhow::ensure!(
+        v_cpu.checksum() == v_coex.checksum(),
+        "placement must never change results"
+    );
+    println!(
+        "outputs bit-identical; co-execution saved {:.0} ms ({:.2}x)",
+        cpu_ms - coex_ms,
+        cpu_ms / coex_ms.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+//! Bench target for heterogeneous placement & delegate co-execution:
+//! CPU-only-forced vs co-executing wall-clock on the real engine (see
+//! EXPERIMENTS.md §Heterogeneous for the reproduce protocol and the
+//! simulated-delegate deviation note).
+//!
+//! `cargo bench --bench heterogeneous` prints
+//! 1. the placement-decision table (`parallax eval hetero` — pure
+//!    modelling, per model × device), and
+//! 2. a real-engine run of the fallback-heavy profile: the matmul
+//!    trunk offloaded to the async delegate lane while the GELU
+//!    fallback chains run in CPU waves, vs the same schedules with
+//!    placement forced to CPU — same outputs, fewer CPU-wave branch
+//!    executions, lower wall-clock.
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::exec::Engine;
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel};
+use parallax::place::{self, PlacePolicy, PlacementPlan};
+use parallax::sched::{self, MemoryGovernor, SchedCfg};
+
+const CHAINS: usize = 8;
+const CHAIN_LEN: usize = 48;
+const DIM: usize = 448;
+const TRUNK_LEN: usize = 4;
+const REPS: usize = 3;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    println!("heterogeneous: placement & delegate co-execution (real engine)\n");
+
+    // ---- placement decisions across the zoo (modelled, no execution)
+    println!("{}", parallax::eval::hetero());
+
+    // ---- real engine: fallback-heavy profile, Pixel 6 placement
+    let soc = SocProfile::pixel6();
+    let g = micro::fallback_heavy(CHAINS, CHAIN_LEN, DIM, TRUNK_LEN);
+    let cm = CostModel::from_profile(&soc);
+    let p = partition(&g, &cm);
+    assert!(!p.regions.is_empty(), "trunk must survive the device cost model");
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    // narrow CPU budget (2 threads) so the chains span several waves —
+    // the window the delegate lane hides the trunk behind
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let schedules = sched::schedule(&plan, &mems, 1 << 31, &cfg);
+
+    let auto = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    println!(
+        "== fallback-heavy({CHAINS} chains x {CHAIN_LEN} GELUs, trunk {TRUNK_LEN} x \
+         {DIM}^3 matmuls) on {} ==",
+        soc.display_name()
+    );
+    println!(
+        "placement: {} delegated branch(es), {:.1} KB staging, modelled delegate \
+         {:.2} ms vs CPU {:.1} ms",
+        auto.num_delegated(),
+        auto.total_staging_bytes() as f64 / 1e3,
+        auto.delegated().map(|b| auto.delegate_latency_s[b]).sum::<f64>() * 1e3,
+        auto.delegated().map(|b| auto.cpu_latency_s[b]).sum::<f64>() * 1e3,
+    );
+    assert!(auto.num_delegated() >= 1, "pixel6 must offload the trunk");
+
+    let time = |placement: &PlacementPlan| -> (f64, f64, usize) {
+        // 1 warm-up + REPS timed runs, mean wall + checksum + cpu runs
+        let (v, _) = engine.run_placed(&schedules, placement, None).expect("warm-up");
+        let checksum = v.checksum();
+        let mut wall = 0.0;
+        let mut cpu_runs = 0;
+        for _ in 0..REPS {
+            let t = std::time::Instant::now();
+            let (_, st) = engine.run_placed(&schedules, placement, None).expect("run");
+            wall += t.elapsed().as_secs_f64();
+            cpu_runs = st.cpu_branch_runs;
+        }
+        (wall / REPS as f64, checksum, cpu_runs)
+    };
+    let (cpu_s, cpu_sum, cpu_runs) = time(&forced);
+    let (coex_s, coex_sum, coex_runs) = time(&auto);
+    assert_eq!(cpu_sum, coex_sum, "co-execution changed results");
+    println!(
+        "cpu-only forced: {:.0} ms mean over {REPS} runs ({cpu_runs} CPU-wave branches)",
+        cpu_s * 1e3
+    );
+    println!(
+        "co-execution:    {:.0} ms mean over {REPS} runs ({coex_runs} CPU-wave branches \
+         + {} delegate jobs)",
+        coex_s * 1e3,
+        auto.num_delegated()
+    );
+    println!(
+        "verdict: {:.2}x -> {}",
+        cpu_s / coex_s.max(1e-12),
+        if coex_s < cpu_s {
+            "co-execution beats CPU-only (outputs bit-identical)"
+        } else {
+            "NOT faster (regression!)"
+        }
+    );
+
+    // ---- governed co-execution: staging is part of the lease
+    let gov = MemoryGovernor::new(u64::MAX);
+    let (_, st) = engine.run_placed(&schedules, &auto, Some(&gov)).expect("governed");
+    println!(
+        "governed: peak reserved {:.1} KB (incl. {:.1} KB delegate staging), \
+         modelled acc busy {:.2} ms",
+        gov.peak_reserved() as f64 / 1e3,
+        auto.total_staging_bytes() as f64 / 1e3,
+        st.acc_modelled_s * 1e3
+    );
+
+    println!("\n[heterogeneous] completed in {:.2}s", t0.elapsed().as_secs_f64());
+}

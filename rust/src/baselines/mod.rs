@@ -266,6 +266,33 @@ impl Pipeline {
             .unwrap_or(0)
     }
 
+    /// [`Pipeline::peak_layer_demand`] under a heterogeneous placement
+    /// (`crate::place`): delegated branches contribute their
+    /// host-visible delegate-I/O staging instead of a host arena, and
+    /// `has_delegate` branches the placement kept on the CPU count at
+    /// their full M_i.  What a serving host should lease per in-flight
+    /// batch when the model was registered with a placement.
+    pub fn peak_placed_demand(&self, placement: &crate::place::PlacementPlan) -> u64 {
+        self.plan
+            .layers
+            .iter()
+            .map(|layer| {
+                let staging: u64 = layer
+                    .iter()
+                    .filter(|&&b| placement.is_delegated(b))
+                    .map(|&b| placement.staging_bytes[b])
+                    .sum();
+                let cpu: u64 = layer
+                    .iter()
+                    .filter(|&&b| !placement.is_delegated(b))
+                    .map(|&b| self.mems[b].total() as u64)
+                    .sum();
+                staging + cpu
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Schedule for one inference (queries simulated OS free memory).
     pub fn schedule(&self, rng: &mut Rng) -> Vec<LayerSchedule> {
         if self.profile.branch_parallel {

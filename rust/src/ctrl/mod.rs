@@ -68,6 +68,7 @@ use crate::exec::{Engine, ExecStats, Values};
 use crate::graph::{Dim, Graph, NodeId, OpClass, OpKind, TensorId, TensorInfo};
 use crate::memory::{self, BranchMemory};
 use crate::partition::Partition;
+use crate::place::PlacementPlan;
 use crate::runtime::Tensor;
 use crate::sched::{self, MemoryGovernor, SchedCfg};
 
@@ -475,7 +476,17 @@ fn build_entry(
     dead: &[usize],
     budget: u64,
     cfg: &SchedCfg,
+    placement: Option<&PlacementPlan>,
 ) -> Entry {
+    // Which branches skip host arena/boundary accounting: with a
+    // placement, exactly the delegate-placed ones (their staging is
+    // priced below; a `has_delegate` branch forced onto the CPU holds
+    // a real host arena) — without one, the classic `has_delegate`
+    // convention.
+    let off_host = |b: usize| match placement {
+        Some(pl) => pl.is_delegated(b),
+        None => plan.branches[b].has_delegate,
+    };
     let mut schedules = Vec::with_capacity(seg.layers.len());
     for (li, members) in &seg.layers {
         let live: Vec<usize> =
@@ -493,33 +504,48 @@ fn build_entry(
         ));
     }
     // Segment residency demand: every CPU branch's escaping outputs
-    // stay resident for downstream segments, plus the widest wave's
-    // transient arena peak — §3.3 applied at segment granularity.
-    // Resolved shapes shrink both terms, so decode-step leases track
-    // the actual sequence length instead of the worst case.
+    // stay resident for downstream segments, plus the peak *transient*
+    // footprint of any one layer — §3.3 applied at segment
+    // granularity.  Resolved shapes shrink both terms, so decode-step
+    // leases track the actual sequence length instead of the worst
+    // case.  Under a placement, a layer's transient adds its delegated
+    // branches' host-visible delegate-I/O staging (live only while
+    // that layer's delegate lane is in flight — mirroring the per-layer
+    // lease `Engine::run_placed` takes) on top of its widest wave's
+    // arena peak.
     let mut boundary = 0u64;
-    let mut peak_arena = 0u64;
+    let mut peak_transient = 0u64;
     for ls in &schedules {
+        let mut staging = 0u64;
+        if let Some(pl) = placement {
+            for b in ls.all() {
+                if pl.is_delegated(b) {
+                    staging += pl.staging_bytes[b];
+                }
+            }
+        }
+        let mut layer_arena = 0u64;
         for wave in &ls.waves {
             let mut arena = 0u64;
             for &b in wave {
-                if plan.branches[b].has_delegate {
+                if off_host(b) {
                     continue;
                 }
                 arena += mems[b].arena_bytes as u64;
                 boundary += mems[b].boundary_out_bytes as u64;
             }
-            peak_arena = peak_arena.max(arena);
+            layer_arena = layer_arena.max(arena);
         }
         for &b in &ls.sequential {
-            if plan.branches[b].has_delegate {
+            if off_host(b) {
                 continue;
             }
-            peak_arena = peak_arena.max(mems[b].arena_bytes as u64);
+            layer_arena = layer_arena.max(mems[b].arena_bytes as u64);
             boundary += mems[b].boundary_out_bytes as u64;
         }
+        peak_transient = peak_transient.max(staging + layer_arena);
     }
-    Entry { schedules, demand: boundary + peak_arena }
+    Entry { schedules, demand: boundary + peak_transient }
 }
 
 fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
@@ -527,6 +553,9 @@ fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
     acc.host_ops += s.host_ops;
     acc.skipped_fused += s.skipped_fused;
     acc.peak_arena_bytes = acc.peak_arena_bytes.max(s.peak_arena_bytes);
+    acc.cpu_branch_runs += s.cpu_branch_runs;
+    acc.delegate_jobs += s.delegate_jobs;
+    acc.acc_modelled_s += s.acc_modelled_s;
     acc.wall_s += s.wall_s;
 }
 
@@ -567,6 +596,9 @@ pub struct SegmentedEngine<'a> {
     max_entries: Vec<Arc<Entry>>,
     budget: u64,
     cfg: SchedCfg,
+    /// Heterogeneous placement: delegated branches run on the engine's
+    /// delegate lane, their staging priced into segment demands.
+    placement: Option<PlacementPlan>,
     cache: Mutex<HashMap<PlanKey, Arc<Entry>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
@@ -576,13 +608,41 @@ impl<'a> SegmentedEngine<'a> {
     /// Build the segmented view of an engine's plan.  `budget` is the
     /// per-wave scheduling budget (typically the governor's).
     pub fn new(engine: &'a Engine<'a>, cfg: SchedCfg, budget: u64) -> Self {
+        Self::build(engine, cfg, budget, None)
+    }
+
+    /// [`SegmentedEngine::new`] with a heterogeneous placement
+    /// (`crate::place`): delegate-placed branches execute on the async
+    /// [`DelegateWorker`](crate::exec::DelegateWorker) lane, and every
+    /// segment's residency lease covers their host-visible staging
+    /// buffers.  Because placement never delegates a branch carrying
+    /// `OpClass::Dynamic` work, resolved dynamic segments stay on the
+    /// CPU while their static neighbours may be offloaded — the §3.4
+    /// and heterogeneous paths compose instead of conflicting.
+    pub fn with_placement(
+        engine: &'a Engine<'a>,
+        cfg: SchedCfg,
+        budget: u64,
+        placement: PlacementPlan,
+    ) -> Self {
+        Self::build(engine, cfg, budget, Some(placement))
+    }
+
+    fn build(
+        engine: &'a Engine<'a>,
+        cfg: SchedCfg,
+        budget: u64,
+        placement: Option<PlacementPlan>,
+    ) -> Self {
         let (g, p, plan) = (engine.graph, engine.partition, engine.plan);
         let seg_plan = segment_plan(g, p, plan);
         let max_mems = memory::branch_memories(g, p, plan);
         let max_entries = seg_plan
             .segments
             .iter()
-            .map(|seg| Arc::new(build_entry(plan, &max_mems, seg, &[], budget, &cfg)))
+            .map(|seg| {
+                Arc::new(build_entry(plan, &max_mems, seg, &[], budget, &cfg, placement.as_ref()))
+            })
             .collect();
         Self {
             engine,
@@ -591,6 +651,7 @@ impl<'a> SegmentedEngine<'a> {
             max_entries,
             budget,
             cfg,
+            placement,
             cache: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -760,7 +821,13 @@ impl<'a> SegmentedEngine<'a> {
             // slack is never taken from the process-wide ledger, so
             // co-resident models admit more concurrent waves.
             let _lease = governor.map(|gov| gov.acquire(entry.demand));
-            let s = self.engine.run_waves(&entry.schedules, values, None, env)?;
+            let s = self.engine.run_waves_placed(
+                &entry.schedules,
+                values,
+                None,
+                env,
+                self.placement.as_ref(),
+            )?;
             merge_stats(&mut stats.exec, s);
             stats.segments_run += 1;
         }
@@ -797,7 +864,15 @@ impl<'a> SegmentedEngine<'a> {
         for &b in &seg.branches {
             mems[b] = resolved_branch_memory(g, p, plan, b, &bucketed, &self.max_mems[b]);
         }
-        let entry = Arc::new(build_entry(plan, &mems, seg, dead, self.budget, &self.cfg));
+        let entry = Arc::new(build_entry(
+            plan,
+            &mems,
+            seg,
+            dead,
+            self.budget,
+            &self.cfg,
+            self.placement.as_ref(),
+        ));
         cache.insert(key, entry.clone());
         entry
     }

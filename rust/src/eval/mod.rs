@@ -310,6 +310,69 @@ pub fn table7() -> String {
     out
 }
 
+/// Heterogeneous placement decisions (repo-specific, `crate::place`):
+/// per model × device, how many branches the placement model assigns
+/// to the accelerator delegate, the host-visible staging they lease,
+/// and the modelled delegate-vs-CPU latency of the delegated set.
+/// Pure modelling — no execution — so the table is cheap and exact;
+/// `benches/heterogeneous.rs` measures the real-engine wall-clock
+/// effect (EXPERIMENTS.md §Heterogeneous).
+///
+/// Regions come from the paper's relaxed [`CostModel::default`] (one
+/// partition per model, shared by every device column); what varies
+/// per device is the *placement* of those regions.  The heterogeneous
+/// bench's own run section instead derives the cut from the device
+/// (`CostModel::from_profile`), which is stricter — its region set can
+/// be smaller than this table's.
+pub fn hetero() -> String {
+    use crate::place::{self, PlacePolicy};
+    let mut out = String::from(
+        "Heterogeneous placement: delegated branches / staging KB / \
+         modelled delegate vs CPU ms (delegated set)\n",
+    );
+    out += &format!("{:<18}", "Model");
+    for make in SocProfile::ALL {
+        out += &format!(" {:>24}", make().display_name());
+    }
+    out.push('\n');
+    let micro_fb = crate::models::micro::fallback_heavy(6, 24, 448, 4);
+    let mut rows: Vec<(String, crate::graph::Graph)> = vec![("fallback-heavy".into(), micro_fb)];
+    for model in ModelKind::ALL {
+        rows.push((model.display_name().to_string(), model.build()));
+    }
+    for (name, g) in rows {
+        let mut row = format!("{:<18}", name);
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        for make in SocProfile::ALL {
+            let soc = make();
+            let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+            if placed.num_delegated() == 0 {
+                row += &format!(" {:>24}", "0 (all CPU)");
+                continue;
+            }
+            let (mut acc_ms, mut cpu_ms) = (0.0, 0.0);
+            for b in placed.delegated() {
+                acc_ms += placed.delegate_latency_s[b] * 1e3;
+                cpu_ms += placed.cpu_latency_s[b] * 1e3;
+            }
+            row += &format!(
+                " {:>24}",
+                format!(
+                    "{}/{:.0}KB/{:.2}v{:.1}",
+                    placed.num_delegated(),
+                    placed.total_staging_bytes() as f64 / 1e3,
+                    acc_ms,
+                    cpu_ms
+                )
+            );
+        }
+        out += &row;
+        out.push('\n');
+    }
+    out
+}
+
 /// Dispatch by name (CLI + tests).
 pub fn run(which: &str) -> Option<String> {
     Some(match which {
@@ -320,6 +383,7 @@ pub fn run(which: &str) -> Option<String> {
         "table7" => table7(),
         "fig2" => fig2(),
         "fig3" => fig3(),
+        "hetero" => hetero(),
         "ablation-beta" => ablation_beta(),
         "ablation-margin" => ablation_margin(),
         "ablation-cost-model" => ablation_cost_model(),
@@ -327,8 +391,8 @@ pub fn run(which: &str) -> Option<String> {
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 10] = [
-    "table3", "table4", "table5", "table6", "table7", "fig2", "fig3",
+pub const ALL_EXPERIMENTS: [&str; 11] = [
+    "table3", "table4", "table5", "table6", "table7", "fig2", "fig3", "hetero",
     "ablation-beta", "ablation-margin", "ablation-cost-model",
 ];
 
@@ -354,6 +418,16 @@ mod tests {
     #[test]
     fn dispatch_rejects_unknown() {
         assert!(run("table9").is_none());
+    }
+
+    #[test]
+    fn hetero_runs_and_delegates_somewhere() {
+        let t = hetero();
+        assert!(t.contains("fallback-heavy"));
+        assert!(t.contains("Whisper"));
+        // at least one (model, device) cell must delegate (the cell
+        // format prints "<n>/<staging>KB/<acc>v<cpu>" when it does)
+        assert!(t.contains("KB/"), "{t}");
     }
 }
 

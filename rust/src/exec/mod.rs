@@ -22,6 +22,16 @@
 //! [`MemoryGovernor`](crate::sched::MemoryGovernor) before spawning
 //! branch threads, so concurrently serving pipelines can never stack
 //! their individually-safe peaks into a device-level memory spike.
+//!
+//! Heterogeneous hosts call [`Engine::run_placed`] with a
+//! [`PlacementPlan`](crate::place::PlacementPlan): branches the §3.1
+//! placement model assigns to the accelerator execute on an async
+//! [`DelegateWorker`] lane — a dedicated thread per layer that
+//! overlaps wall-clock with the CPU fallback waves, charges the
+//! modelled delegate time from the device profile, and drives the
+//! PJRT pool for program-hinted blocks when the `pjrt` feature is on.
+//! Forcing the placement to CPU-only reproduces the classic
+//! [`Engine::run`] path bit for bit.
 
 pub mod host_kernels;
 
@@ -34,7 +44,8 @@ use crate::ctrl::ShapeEnv;
 use crate::graph::{Graph, Node, NodeId, OpKind, TensorId};
 use crate::memory::{BranchMemory, BumpArena};
 use crate::partition::Partition;
-use crate::runtime::{RuntimePool, Tensor};
+use crate::place::PlacementPlan;
+use crate::runtime::{RuntimePool, Tensor, WorkerClient};
 use crate::sched::{LayerSchedule, MemoryGovernor};
 
 /// A program-hinted fused block discovered from the graph.
@@ -57,7 +68,27 @@ pub struct ExecStats {
     pub skipped_fused: usize,
     /// Peak of the summed per-branch arena live bytes.
     pub peak_arena_bytes: usize,
+    /// Branch executions on the CPU wave/spill path (a delegated run
+    /// has strictly fewer than its CPU-only twin).
+    pub cpu_branch_runs: usize,
+    /// Branch executions on the async [`DelegateWorker`] lane.
+    pub delegate_jobs: usize,
+    /// Modelled accelerator-busy seconds of the delegate lane (the
+    /// `SocProfile` timing recorded by the placement plan) — the
+    /// simulated-delegate substitute for NNAPI wall time, see
+    /// EXPERIMENTS.md §Heterogeneous.
+    pub acc_modelled_s: f64,
     pub wall_s: f64,
+}
+
+/// Shared per-run counters threaded through branch executions.
+#[derive(Default)]
+struct Counters {
+    pjrt_calls: AtomicUsize,
+    host_ops: AtomicUsize,
+    skipped: AtomicUsize,
+    peak_arena: AtomicUsize,
+    cpu_branch_runs: AtomicUsize,
 }
 
 /// The engine: graph + plan + (optional) PJRT pool.
@@ -163,6 +194,18 @@ impl<'a> Engine<'a> {
             .sum()
     }
 
+    /// [`Engine::wave_demand`] under a placement: every branch the
+    /// placement keeps on the CPU counts at its full M_i — including
+    /// `has_delegate` branches whose offload was rejected, whose host
+    /// arena is real (the classic convention zero-counts those because
+    /// the classic path has no way to reject an offload).
+    fn wave_demand_placed(&self, wave: &[usize], pl: &PlacementPlan) -> u64 {
+        wave.iter()
+            .filter(|&&b| !pl.is_delegated(b))
+            .map(|&b| self.mems[b].total() as u64)
+            .sum()
+    }
+
     /// Number of discovered PJRT-runnable blocks.
     pub fn num_blocks(&self) -> usize {
         self.blocks.len()
@@ -240,6 +283,39 @@ impl<'a> Engine<'a> {
         Ok((values, stats))
     }
 
+    /// Run one inference with a heterogeneous [`PlacementPlan`]
+    /// (`crate::place`): delegated branches execute on the async
+    /// [`DelegateWorker`] lane, overlapping wall-clock with this
+    /// layer's CPU fallback waves; CPU-placed branches take the classic
+    /// wave path.  Each co-executing layer holds a single governor
+    /// lease covering its CPU-wave peak *plus* the delegated branches'
+    /// host-visible staging buffers
+    /// ([`placed_layer_demand`](crate::sched::placed_layer_demand)).
+    ///
+    /// A placement with no delegated branches (e.g.
+    /// [`PlacePolicy::ForceCpu`](crate::place::PlacePolicy)) executes
+    /// exactly like [`Engine::run_governed`], so CPU-forced placed
+    /// runs are bit-identical to the classic engine.  (Lease *sizes*
+    /// stay placement-aware even then: a rejected-offload branch
+    /// executing on the CPU leases its real arena, which the classic
+    /// `has_delegate` convention zero-counts.)
+    pub fn run_placed(
+        &self,
+        schedules: &[LayerSchedule],
+        placement: &PlacementPlan,
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<(Values, ExecStats)> {
+        let values = Values::default();
+        let stats = self.run_waves_placed(
+            schedules,
+            &values,
+            governor,
+            &ShapeEnv::unresolved(),
+            Some(placement),
+        )?;
+        Ok((values, stats))
+    }
+
     /// Lowest-level entry: run schedules against a shared value store.
     ///
     /// * `values` may already hold earlier segments' results (the §3.4
@@ -255,80 +331,168 @@ impl<'a> Engine<'a> {
         governor: Option<&MemoryGovernor>,
         env: &ShapeEnv,
     ) -> anyhow::Result<ExecStats> {
+        self.run_waves_placed(schedules, values, governor, env, None)
+    }
+
+    /// [`Engine::run_waves`] with an optional heterogeneous placement
+    /// — the shared executor core behind the classic, governed, placed
+    /// and segmented (§3.4) paths.  `placement: None` (or a placement
+    /// that delegates nothing) runs every branch on CPU waves exactly
+    /// like the classic engine.
+    pub fn run_waves_placed(
+        &self,
+        schedules: &[LayerSchedule],
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+        placement: Option<&PlacementPlan>,
+    ) -> anyhow::Result<ExecStats> {
         let t0 = std::time::Instant::now();
-        let pjrt_calls = AtomicUsize::new(0);
-        let host_ops = AtomicUsize::new(0);
-        let skipped = AtomicUsize::new(0);
-        let peak_arena = AtomicUsize::new(0);
-
+        let c = Counters::default();
+        let mut delegate_jobs = 0usize;
+        let mut acc_modelled = 0.0f64;
         for ls in schedules {
-            // parallel waves: scoped threads, one per branch
-            for wave in &ls.waves {
-                if wave.is_empty() {
-                    continue;
-                }
-                // Admission control: hold the wave's combined peak for
-                // exactly as long as its branches are in flight.
-                let _lease = governor.map(|g| g.acquire(self.wave_demand(wave)));
-                let results: Vec<anyhow::Result<Vec<(TensorId, Tensor)>>> =
-                    std::thread::scope(|scope| {
-                        let handles: Vec<_> = wave
-                            .iter()
-                            .map(|&b| {
-                                let client = self.pool.map(|p| p.client());
-                                let pjrt_calls = &pjrt_calls;
-                                let host_ops = &host_ops;
-                                let skipped = &skipped;
-                                let peak_arena = &peak_arena;
-                                scope.spawn(move || {
-                                    self.run_branch(
-                                        b, values, client, pjrt_calls, host_ops, skipped,
-                                        peak_arena, env,
-                                    )
-                                })
-                            })
-                            .collect();
-                        handles.into_iter().map(|h| h.join().unwrap()).collect()
-                    });
-                for r in results {
-                    for (t, v) in r? {
-                        values.insert(t, v);
-                    }
-                }
-            }
-            // sequential spill
-            for &b in &ls.sequential {
-                let _lease = governor.map(|g| g.acquire(self.wave_demand(&[b])));
-                let client = self.pool.map(|p| p.client());
-                let out = self.run_branch(
-                    b, values, client, &pjrt_calls, &host_ops, &skipped, &peak_arena, env,
-                )?;
-                for (t, v) in out {
-                    values.insert(t, v);
-                }
-            }
+            let (jobs, modelled) = self.run_layer(ls, values, governor, env, placement, &c)?;
+            delegate_jobs += jobs;
+            acc_modelled += modelled;
         }
-
         Ok(ExecStats {
-            pjrt_calls: pjrt_calls.into_inner(),
-            host_ops: host_ops.into_inner(),
-            skipped_fused: skipped.into_inner(),
-            peak_arena_bytes: peak_arena.into_inner(),
+            pjrt_calls: c.pjrt_calls.into_inner(),
+            host_ops: c.host_ops.into_inner(),
+            skipped_fused: c.skipped.into_inner(),
+            peak_arena_bytes: c.peak_arena.into_inner(),
+            cpu_branch_runs: c.cpu_branch_runs.into_inner(),
+            delegate_jobs,
+            acc_modelled_s: acc_modelled,
             wall_s: t0.elapsed().as_secs_f64(),
         })
     }
 
+    /// Execute one layer; returns `(delegate jobs, modelled acc seconds)`.
+    fn run_layer(
+        &self,
+        ls: &LayerSchedule,
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+        placement: Option<&PlacementPlan>,
+        c: &Counters,
+    ) -> anyhow::Result<(usize, f64)> {
+        let delegated: Vec<usize> = match placement {
+            Some(pl) => ls.all().filter(|&b| pl.is_delegated(b)).collect(),
+            None => Vec::new(),
+        };
+        if delegated.is_empty() {
+            // Classic path (also the CPU-forced placed path): per-wave
+            // admission, holding each wave's combined peak for exactly
+            // as long as its branches are in flight.  With a placement,
+            // demand is placement-aware: a `has_delegate` branch whose
+            // offload was rejected executes with a real host arena and
+            // must lease it.
+            let demand = |wave: &[usize]| match placement {
+                Some(pl) => self.wave_demand_placed(wave, pl),
+                None => self.wave_demand(wave),
+            };
+            for wave in &ls.waves {
+                if wave.is_empty() {
+                    continue;
+                }
+                let _lease = governor.map(|g| g.acquire(demand(wave)));
+                self.run_wave(wave, values, env, c)?;
+            }
+            for &b in &ls.sequential {
+                let _lease = governor.map(|g| g.acquire(demand(&[b])));
+                self.run_sequential(b, values, env, c)?;
+            }
+            return Ok((0, 0.0));
+        }
+        // Co-executing layer: one lease covers the CPU-wave peak plus
+        // the delegated branches' host-visible staging buffers, held
+        // while the delegate lane is in flight so offloading can never
+        // smuggle memory past the §3.3 budget.
+        let pl = placement.expect("delegated branches imply a placement");
+        let demand = crate::sched::placed_layer_demand(&self.mems, pl, ls);
+        let _lease = governor.map(|g| g.acquire(demand));
+        let client = self.pool.map(|p| p.client());
+        std::thread::scope(|scope| -> anyhow::Result<(usize, f64)> {
+            let worker =
+                DelegateWorker::spawn(scope, self, pl, &delegated, values, env, client, c);
+            for wave in &ls.waves {
+                let cpu: Vec<usize> =
+                    wave.iter().copied().filter(|b| !delegated.contains(b)).collect();
+                if cpu.is_empty() {
+                    continue;
+                }
+                self.run_wave(&cpu, values, env, c)?;
+            }
+            for &b in &ls.sequential {
+                if delegated.contains(&b) {
+                    continue;
+                }
+                self.run_sequential(b, values, env, c)?;
+            }
+            // Layer barrier: delegate outputs merge before any
+            // dependent branch (always in a later layer) can start.
+            let outcome = worker.join()?;
+            for (t, v) in outcome.outputs {
+                values.insert(t, v);
+            }
+            Ok((outcome.jobs, outcome.modelled_s))
+        })
+    }
+
+    /// Run one parallel wave of CPU branches on scoped threads and
+    /// merge their outputs.
+    fn run_wave(
+        &self,
+        wave: &[usize],
+        values: &Values,
+        env: &ShapeEnv,
+        c: &Counters,
+    ) -> anyhow::Result<()> {
+        let results: Vec<anyhow::Result<Vec<(TensorId, Tensor)>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = wave
+                .iter()
+                .map(|&b| {
+                    let client = self.pool.map(|p| p.client());
+                    scope.spawn(move || self.run_branch(b, values, client, c, env))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        c.cpu_branch_runs.fetch_add(wave.len(), Ordering::Relaxed);
+        for r in results {
+            for (t, v) in r? {
+                values.insert(t, v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one sequential-spill CPU branch and merge its outputs.
+    fn run_sequential(
+        &self,
+        b: usize,
+        values: &Values,
+        env: &ShapeEnv,
+        c: &Counters,
+    ) -> anyhow::Result<()> {
+        let client = self.pool.map(|p| p.client());
+        let out = self.run_branch(b, values, client, c, env)?;
+        c.cpu_branch_runs.fetch_add(1, Ordering::Relaxed);
+        for (t, v) in out {
+            values.insert(t, v);
+        }
+        Ok(())
+    }
+
     /// Execute one branch; returns produced (tensor, value) pairs.
-    #[allow(clippy::too_many_arguments)]
     fn run_branch(
         &self,
         b: usize,
         values: &Values,
-        client: Option<crate::runtime::WorkerClient>,
-        pjrt_calls: &AtomicUsize,
-        host_ops: &AtomicUsize,
-        skipped: &AtomicUsize,
-        peak_arena: &AtomicUsize,
+        client: Option<WorkerClient>,
+        c: &Counters,
         env: &ShapeEnv,
     ) -> anyhow::Result<Vec<(TensorId, Tensor)>> {
         let mut local: Vec<(TensorId, Tensor)> = Vec::new();
@@ -358,7 +522,7 @@ impl<'a> Engine<'a> {
             for id in node_ids {
                 let node = self.graph.node(id);
                 if self.covered.contains(&id) {
-                    skipped.fetch_add(1, Ordering::Relaxed);
+                    c.skipped.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
                 let produced: Vec<(TensorId, Tensor)> = if let Some(block) =
@@ -382,11 +546,11 @@ impl<'a> Engine<'a> {
                         args.push(self.program_arg(&block.program, i, shp.clone()));
                     }
                     let outs = client.execute(&block.program, args)?;
-                    pjrt_calls.fetch_add(1, Ordering::Relaxed);
+                    c.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                     let out_shape = self.shape_of(block.out, env);
                     vec![(block.out, fit(&outs[0], &out_shape))]
                 } else {
-                    host_ops.fetch_add(1, Ordering::Relaxed);
+                    c.host_ops.fetch_add(1, Ordering::Relaxed);
                     self.run_host_node(node, |t| read(t, &local), env)
                 };
                 for (t, v) in produced {
@@ -412,7 +576,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        peak_arena.fetch_max(arena.peak_live(), Ordering::Relaxed);
+        c.peak_arena.fetch_max(arena.peak_live(), Ordering::Relaxed);
         Ok(local)
     }
 
@@ -496,6 +660,72 @@ impl<'a> Engine<'a> {
                 .collect();
         }
         out
+    }
+}
+
+/// What one delegate-lane run produced.
+struct DelegateOutcome {
+    /// Output values of every delegated branch, merged by the caller
+    /// at the layer barrier.
+    outputs: Vec<(TensorId, Tensor)>,
+    /// Number of branches executed on the lane.
+    jobs: usize,
+    /// Modelled accelerator-busy seconds (placement-plan figures).
+    modelled_s: f64,
+}
+
+/// The async accelerator lane: a dedicated thread that executes a
+/// layer's delegated branches *serially* (one accelerator queue, as a
+/// real NNAPI delegate presents) while the CPU fallback waves run
+/// concurrently on the main path — the paper's co-execution claim made
+/// real in the engine.
+///
+/// The lane computes branch outputs with the same deterministic host
+/// kernels (or the PJRT pool for program-hinted blocks when the `pjrt`
+/// feature is on), so delegated results are bit-identical to CPU
+/// execution; what the *delegate* contributes is modelled timing
+/// ([`SocProfile`](crate::device::SocProfile) dispatch + compute +
+/// transfer, recorded on the
+/// [`PlacementPlan`](crate::place::PlacementPlan)) plus real
+/// wall-clock overlap.  Instances are created internally by
+/// [`Engine::run_placed`] for each co-executing layer and joined at
+/// the layer barrier.
+pub struct DelegateWorker<'scope> {
+    handle: std::thread::ScopedJoinHandle<'scope, anyhow::Result<DelegateOutcome>>,
+}
+
+impl<'scope> DelegateWorker<'scope> {
+    /// Spawn the lane for one layer's delegated branches.  `branches`
+    /// must only contain delegate-placed branch ids; outputs are
+    /// returned from [`DelegateWorker::join`], not merged into
+    /// `values`, so the caller controls the layer barrier.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn<'env>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        engine: &'env Engine<'env>,
+        placement: &'env PlacementPlan,
+        branches: &'env [usize],
+        values: &'env Values,
+        env: &'env ShapeEnv,
+        client: Option<WorkerClient>,
+        counters: &'env Counters,
+    ) -> Self {
+        let handle = scope.spawn(move || {
+            let mut outputs = Vec::new();
+            let mut modelled = 0.0f64;
+            for &b in branches {
+                outputs.extend(engine.run_branch(b, values, client.clone(), counters, env)?);
+                modelled += placement.delegate_latency_s[b];
+            }
+            Ok(DelegateOutcome { outputs, jobs: branches.len(), modelled_s: modelled })
+        });
+        Self { handle }
+    }
+
+    /// Wait for the lane to drain and take its outcome (consumes the
+    /// worker — one join per layer).
+    fn join(self) -> anyhow::Result<DelegateOutcome> {
+        self.handle.join().expect("delegate worker panicked")
     }
 }
 
@@ -713,4 +943,61 @@ mod tests {
         assert!(v.all_finite());
     }
 
+    #[test]
+    fn cpu_forced_placed_run_is_bit_identical_to_classic() {
+        let g = crate::models::micro::fallback_heavy(4, 3, 32, 3);
+        let p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX });
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let engine = Engine::new(&g, &p, &plan, None);
+        let s = schedules(&g, &p, &plan, 2);
+        let placement = crate::place::PlacementPlan::cpu_only(plan.branches.len());
+        let (v1, st1) = engine.run(&s).unwrap();
+        let (v2, st2) = engine.run_placed(&s, &placement, None).unwrap();
+        assert_eq!(
+            v1.checksum(),
+            v2.checksum(),
+            "CPU-forced placement must be bit-identical to Engine::run"
+        );
+        assert_eq!(st2.delegate_jobs, 0);
+        assert_eq!(st2.acc_modelled_s, 0.0);
+        assert_eq!(st1.host_ops, st2.host_ops);
+        assert_eq!(st1.cpu_branch_runs, st2.cpu_branch_runs);
+    }
+
+    #[test]
+    fn delegated_run_matches_outputs_with_fewer_cpu_branches() {
+        // heavy enough that the Pixel 6 placement model offloads the
+        // trunk; outputs must stay bit-identical while strictly fewer
+        // branches execute on the CPU wave path.
+        let g = crate::models::micro::fallback_heavy(4, 3, 128, 6);
+        let soc = crate::device::SocProfile::pixel6();
+        let p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX });
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let engine = Engine::new(&g, &p, &plan, None);
+        let s = schedules(&g, &p, &plan, 4);
+        let auto = crate::place::assign(&g, &p, &plan, &soc, crate::place::PlacePolicy::Auto);
+        assert!(auto.num_delegated() >= 1, "trunk should delegate on pixel6");
+        let forced = crate::place::PlacementPlan::cpu_only(plan.branches.len());
+        let (v_cpu, st_cpu) = engine.run_placed(&s, &forced, None).unwrap();
+        let (v_del, st_del) = engine.run_placed(&s, &auto, None).unwrap();
+        assert_eq!(
+            v_cpu.checksum(),
+            v_del.checksum(),
+            "delegate lane must not change results"
+        );
+        assert_eq!(st_del.delegate_jobs, auto.num_delegated());
+        assert!(st_del.acc_modelled_s > 0.0);
+        assert!(
+            st_del.cpu_branch_runs < st_cpu.cpu_branch_runs,
+            "delegated run must execute strictly fewer CPU-wave branches \
+             ({} !< {})",
+            st_del.cpu_branch_runs,
+            st_cpu.cpu_branch_runs
+        );
+        assert_eq!(
+            st_del.cpu_branch_runs + st_del.delegate_jobs,
+            st_cpu.cpu_branch_runs,
+            "every branch still executes exactly once"
+        );
+    }
 }

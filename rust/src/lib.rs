@@ -9,7 +9,9 @@
 //!   management ([`memory`]), resource-constrained parallel scheduling
 //!   ([`sched`]) with a process-wide memory governor
 //!   ([`sched::MemoryGovernor`]), runtime subgraph control for dynamic
-//!   models ([`ctrl`], §3.4), plus the substrates it needs: a graph
+//!   models ([`ctrl`], §3.4), heterogeneous device placement with
+//!   async delegate co-execution ([`place`],
+//!   [`exec::DelegateWorker`]), plus the substrates it needs: a graph
 //!   IR ([`graph`]), a model zoo ([`models`]), simulated edge SoCs
 //!   ([`device`]), a discrete-event executor ([`sim`]), baseline
 //!   frameworks ([`baselines`]), a real PJRT execution engine
@@ -36,6 +38,7 @@ pub mod graph;
 pub mod memory;
 pub mod models;
 pub mod partition;
+pub mod place;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

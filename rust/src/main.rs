@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
-//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|all>
+//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|all>
 //! parallax inspect --model whisper-tiny        # graph/branch/layer stats
 //! parallax serve --requests 64 --concurrency 8 # governed serving demo
 //! parallax smoke                               # PJRT round-trip check
@@ -40,7 +40,7 @@ USAGE:
   parallax run     --model <slug> --device <name> [--mode cpu|het]
                    [--threads N] [--margin F] [--runs N] [--framework NAME]
                    [--config file.toml]
-  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|all>
+  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|all>
   parallax inspect --model <slug> [--device <name>]
   parallax serve   [--requests N] [--concurrency N] [--threads N]
                    [--workers N] [--batch N] [--budget-mb N] [--config file.toml]
@@ -209,11 +209,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     let models = [ModelKind::ClipText, ModelKind::DistilBert, ModelKind::Yolov8n];
     for model in models {
-        let pipe = Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, sched_cfg)
-            .expect("cpu supported")
-            .with_governor(governor.clone());
         if model == ModelKind::Yolov8n {
             // dynamic NMS tail: lease the per-request resolved demand (§3.4)
+            let pipe =
+                Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, sched_cfg)
+                    .expect("cpu supported")
+                    .with_governor(governor.clone());
             let (demand_fn, exec) = parallax::serve::resolved_pipeline_executor(pipe, 7);
             server.register_with_demand_fn(model.slug(), demand_fn, exec);
             println!(
@@ -221,12 +222,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 model.slug()
             );
         } else {
-            let (demand, exec) = parallax::serve::pipeline_executor(pipe, 7);
+            // static models: device placement chosen at register time —
+            // delegated branches lease staging, CPU branches lease M_i
+            let pipe =
+                Pipeline::build(Framework::Parallax, model, &soc, Mode::Heterogeneous, sched_cfg)
+                    .or_else(|_| {
+                        Pipeline::build(Framework::Parallax, model, &soc, Mode::CpuOnly, sched_cfg)
+                    })
+                    .expect("cpu supported")
+                    .with_governor(governor.clone());
+            let (placement, demand, exec) = parallax::serve::placed_pipeline_executor(pipe, 7);
             server.register_with_demand(model.slug(), demand, exec);
             println!(
-                "registered {:<12} branch-peak demand {:.2} MB",
+                "registered {:<12} placement: {} delegated branch(es), demand {:.2} MB \
+                 (incl. {:.1} KB staging)",
                 model.slug(),
-                demand as f64 / 1e6
+                placement.num_delegated(),
+                demand as f64 / 1e6,
+                placement.total_staging_bytes() as f64 / 1e3
             );
         }
     }

@@ -108,6 +108,41 @@ pub fn mixed() -> Graph {
     g
 }
 
+/// Fallback-heavy co-execution profile (the paper's §3.1 story in one
+/// graph): a static delegate-eligible matmul trunk of `trunk_len`
+/// `[dim×dim]` matmuls runs in parallel with `chains` GELU fallback
+/// chains of `chain_len` ops each (GELU is NNAPI-unsupported, so the
+/// chains can never delegate), merged by a final concat.  The trunk
+/// and the chains start from independent source tensors, so they land
+/// in one Branch-Layer with no mutual dependencies — exactly the shape
+/// where accelerator/CPU co-execution pays: the delegate lane hides
+/// the trunk behind the CPU fallback waves.
+pub fn fallback_heavy(chains: usize, chain_len: usize, dim: usize, trunk_len: usize) -> Graph {
+    let mut g = Graph::new("fallback_heavy");
+    // heavy static trunk: a matmul chain (delegate-eligible region)
+    let mut t = g.tensor(&[dim, dim], "trunk_in");
+    for i in 0..trunk_len {
+        let w = g.tensor(&[dim, dim], &format!("trunk_w{i}"));
+        let o = g.tensor(&[dim, dim], &format!("trunk_t{i}"));
+        g.add_node(format!("trunk_mm{i}"), OpKind::MatMul, vec![t, w], vec![o]);
+        t = o;
+    }
+    let mut tails = vec![t];
+    // CPU fallback chains: GELU is outside the NNAPI-style support set
+    for c in 0..chains {
+        let mut x = g.tensor(&[dim * dim], &format!("chain{c}_in"));
+        for j in 0..chain_len {
+            let o = g.tensor(&[dim * dim], &format!("chain{c}_t{j}"));
+            g.add_node(format!("fallback{c}_{j}"), OpKind::Gelu, vec![x], vec![o]);
+            x = o;
+        }
+        tails.push(x);
+    }
+    let merged = g.tensor(&[dim * dim * (chains + 1)], "merged");
+    g.add_node("merge", OpKind::Concat, tails, vec![merged]);
+    g
+}
+
 /// If-gated arms: a predicate-driven `If` barrier emits two arm tokens,
 /// each feeding a chain of `arm_len` ops, merged by a `Maximum` select.
 /// At runtime only one arm is live — the §3.4 subgraph-control path
@@ -208,6 +243,24 @@ mod tests {
             let g = random_dag(&mut rng, 8, 5);
             assert!(g.validate().is_empty(), "seed {seed}: {:?}", g.validate());
             assert!(g.topo_order().is_some(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn fallback_heavy_shape() {
+        let g = fallback_heavy(4, 3, 32, 3);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.num_nodes(), 3 + 4 * 3 + 1);
+        // trunk is delegate-eligible, chains are not
+        let p = crate::partition::partition(
+            &g,
+            &crate::partition::CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        assert!(!p.regions.is_empty(), "trunk must form a region");
+        for n in g.nodes() {
+            if n.name.starts_with("fallback") {
+                assert!(p.is_cpu(n.id), "{} must fall back", n.name);
+            }
         }
     }
 

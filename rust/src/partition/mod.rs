@@ -61,6 +61,23 @@ impl CostModel {
         }
     }
 
+    /// [`CostModel::from_device`] with every parameter read off a
+    /// [`SocProfile`](crate::device::SocProfile): dispatch latency,
+    /// single-big-core CPU rate, sustained accelerator rate and
+    /// host↔accelerator bandwidth.  This is the placement-aware wiring
+    /// — the same device model that decides branch placement
+    /// (`crate::place`) also prices the partitioner's keep-or-prune
+    /// cut, so what gets offloaded and what it costs to offload come
+    /// from one set of numbers.
+    pub fn from_profile(soc: &crate::device::SocProfile) -> Self {
+        Self::from_device(
+            soc.acc_dispatch_s,
+            soc.cpu_flops_per_core / 2.0,
+            soc.acc_flops * soc.acc_utilization / 2.0,
+            soc.mem_bw,
+        )
+    }
+
     /// Paper's check: keep a region on the accelerator?
     pub fn keep_delegate(&self, n: usize, f: u64, b: u64) -> bool {
         n >= self.min_ops

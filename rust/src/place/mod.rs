@@ -1,0 +1,367 @@
+//! Device placement for the real runtime (paper §3.1 applied to
+//! execution, not just simulation).
+//!
+//! Until this module existed, heterogeneity lived only in the `sim`
+//! device-time model: the real [`Engine`](crate::exec::Engine) ran
+//! every wave on host CPU threads, delegate regions included.  This
+//! module closes that sim-vs-exec gap.  Given a Branch-Layer plan and a
+//! [`SocProfile`], [`assign`] gives every branch a [`Placement`] — CPU
+//! thread pool or accelerator delegate — by minimising the modelled
+//! latency from the profile's parameters:
+//!
+//! ```text
+//!   t_cpu(b)      = Σ_units max(F / R_cpu, B / (share · B_bw))
+//!   t_delegate(b) = Σ_regions (L_dispatch + F / (R_acc · util) + B_boundary / B_bw)
+//!                 + Σ_glue    F / R_cpu
+//! ```
+//!
+//! the same Appendix-B terms the `sim` timing model and the
+//! [`CostModel`](crate::partition::CostModel) thresholds are built
+//! from.  A branch is delegated only when `t_delegate < t_cpu` *and*
+//! it is delegate-safe: it contains a delegate region and carries no
+//! `OpClass::Dynamic` operator or dynamically-shaped tensor — dynamic
+//! work always falls back to the CPU pool, which is what keeps the
+//! §3.4 segmented path's barrier segments host-side by construction.
+//!
+//! The plan also prices what delegation *costs the host*: each
+//! delegated branch needs host-visible staging buffers for delegate
+//! I/O (the region boundary tensors that cross the host↔accelerator
+//! interface).  [`sched::placed_layer_demand`](crate::sched::placed_layer_demand)
+//! folds those staging bytes into the governor lease of every layer
+//! that co-executes, so offloading never becomes a way to smuggle
+//! memory past the §3.3 budget.
+//!
+//! Downstream consumers:
+//! * [`exec::Engine::run_placed`](crate::exec::Engine::run_placed) —
+//!   executes delegated branches on an async
+//!   [`DelegateWorker`](crate::exec::DelegateWorker) lane that
+//!   overlaps wall-clock with the CPU fallback waves;
+//! * [`ctrl::SegmentedEngine::with_placement`](crate::ctrl::SegmentedEngine::with_placement)
+//!   — dynamic models: resolved dynamic segments stay on CPU, static
+//!   neighbours may be delegated;
+//! * [`serve::placed_pipeline_executor`](crate::serve::placed_pipeline_executor)
+//!   — per-model placement chosen at register time.
+//!
+//! # Examples
+//!
+//! ```
+//! use parallax::branch::{self, DEFAULT_BETA};
+//! use parallax::device::SocProfile;
+//! use parallax::models::micro;
+//! use parallax::partition::{partition, CostModel};
+//! use parallax::place::{self, PlacePolicy, Placement};
+//!
+//! let g = micro::fallback_heavy(4, 4, 512, 4);
+//! let soc = SocProfile::pixel6();
+//! let p = partition(&g, &CostModel::from_profile(&soc));
+//! let plan = branch::plan(&g, &p, DEFAULT_BETA);
+//! let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+//! // the heavy matmul trunk goes to the delegate, fallback chains stay CPU
+//! assert!(placed.num_delegated() >= 1);
+//! let forced = place::assign(&g, &p, &plan, &soc, PlacePolicy::ForceCpu);
+//! assert!(forced.assignment.iter().all(|&pl| pl == Placement::CpuPool));
+//! ```
+
+use crate::branch::{BranchPlan, Unit};
+use crate::device::SocProfile;
+use crate::flops;
+use crate::graph::{Graph, OpClass};
+use crate::partition::Partition;
+
+/// Where one branch executes (branch-level, unlike
+/// [`partition::Placement`](crate::partition::Placement) which labels
+/// individual nodes during region discovery).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Host CPU thread pool (the classic wave path).
+    CpuPool,
+    /// Accelerator delegate, executed on the async delegate lane.
+    Delegate,
+}
+
+/// How [`assign`] decides placements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Minimise modelled latency: delegate exactly the delegate-safe
+    /// branches whose modelled accelerator time beats their CPU time.
+    Auto,
+    /// Force everything onto the CPU pool — the baseline configuration
+    /// whose execution is bit-identical to the classic
+    /// [`Engine::run`](crate::exec::Engine::run).
+    ForceCpu,
+}
+
+/// A complete branch → device assignment plus the modelled figures it
+/// was decided from.  Built once per (model, device) by [`assign`];
+/// immutable afterwards.
+#[derive(Clone, Debug)]
+pub struct PlacementPlan {
+    /// Per-branch placement, indexed by branch id.
+    pub assignment: Vec<Placement>,
+    /// Modelled single-core CPU latency per branch, seconds.
+    pub cpu_latency_s: Vec<f64>,
+    /// Modelled delegate latency per branch, seconds
+    /// (`f64::INFINITY` for branches that cannot delegate).
+    pub delegate_latency_s: Vec<f64>,
+    /// Host-visible staging bytes for delegate I/O per branch (region
+    /// boundary tensors); 0 for CPU-placed branches.
+    pub staging_bytes: Vec<u64>,
+}
+
+impl PlacementPlan {
+    /// Placement with every branch on the CPU pool (no modelling).
+    pub fn cpu_only(num_branches: usize) -> Self {
+        Self {
+            assignment: vec![Placement::CpuPool; num_branches],
+            cpu_latency_s: vec![0.0; num_branches],
+            delegate_latency_s: vec![f64::INFINITY; num_branches],
+            staging_bytes: vec![0; num_branches],
+        }
+    }
+
+    /// Is branch `b` assigned to the accelerator delegate?
+    pub fn is_delegated(&self, b: usize) -> bool {
+        self.assignment[b] == Placement::Delegate
+    }
+
+    /// Number of delegated branches.
+    pub fn num_delegated(&self) -> usize {
+        self.assignment.iter().filter(|&&p| p == Placement::Delegate).count()
+    }
+
+    /// Branch ids assigned to the delegate, ascending.
+    pub fn delegated(&self) -> impl Iterator<Item = usize> + '_ {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p == Placement::Delegate)
+            .map(|(b, _)| b)
+    }
+
+    /// Total host-visible staging bytes of the delegated branches.
+    pub fn total_staging_bytes(&self) -> u64 {
+        self.delegated().map(|b| self.staging_bytes[b]).sum()
+    }
+}
+
+/// Single-thread share of the SoC memory bandwidth a streaming CPU
+/// kernel reaches (mirrors the simulator's single-core share).
+const CPU_BW_SHARE: f64 = 0.35;
+
+/// Bytes a node streams at worst-case shapes (inputs + outputs).
+fn node_stream_bytes(g: &Graph, id: crate::graph::NodeId) -> u64 {
+    let n = g.node(id);
+    n.inputs
+        .iter()
+        .chain(n.outputs.iter())
+        .map(|&t| g.tensor_info(t).byte_size_max() as u64)
+        .sum()
+}
+
+/// Modelled single-core CPU latency of a branch: per unit, the greater
+/// of its compute time and its memory-streaming time (§3.1 cost-model
+/// terms, evaluated at worst-case shapes).
+pub fn cpu_latency(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize, soc: &SocProfile) -> f64 {
+    let bw = soc.mem_bw * CPU_BW_SHARE;
+    plan.branches[b]
+        .units
+        .iter()
+        .map(|&u| {
+            let f = plan.unit_graph.flops[u] as f64;
+            let bytes: u64 = match &plan.unit_graph.units[u] {
+                Unit::Cpu(id) => node_stream_bytes(g, *id),
+                Unit::Region(ri) => {
+                    p.regions[*ri].iter().map(|&id| node_stream_bytes(g, id)).sum()
+                }
+            };
+            (f / soc.cpu_flops_per_core).max(bytes as f64 / bw)
+        })
+        .sum()
+}
+
+/// Modelled delegate latency of a branch: per region
+/// `L + F/(R_acc·util) + B_boundary/B_bw` (Appendix B); CPU glue units
+/// inside the branch are charged exactly as [`cpu_latency`] charges
+/// them — `max(F/R_cpu, B/(share·B_bw))` — so the two alternatives
+/// price identical host work identically and the comparison is never
+/// biased by the glue.  `INFINITY` when the branch holds no delegate
+/// region.
+pub fn delegate_latency(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    b: usize,
+    soc: &SocProfile,
+) -> f64 {
+    if !plan.branches[b].has_delegate {
+        return f64::INFINITY;
+    }
+    let bw = soc.mem_bw * CPU_BW_SHARE;
+    plan.branches[b]
+        .units
+        .iter()
+        .map(|&u| match &plan.unit_graph.units[u] {
+            Unit::Region(ri) => {
+                let f = plan.unit_graph.flops[u] as f64;
+                let bnd = flops::boundary_bytes(g, &p.regions[*ri]) as f64;
+                soc.acc_dispatch_s
+                    + f / (soc.acc_flops * soc.acc_utilization)
+                    + bnd / soc.mem_bw
+            }
+            Unit::Cpu(id) => {
+                let f = plan.unit_graph.flops[u] as f64;
+                (f / soc.cpu_flops_per_core).max(node_stream_bytes(g, *id) as f64 / bw)
+            }
+        })
+        .sum()
+}
+
+/// Host-visible staging bytes a delegated branch needs: the boundary
+/// tensors of its regions, which cross the host↔accelerator interface
+/// and must stay resident on the host while the delegate runs.
+pub fn staging_bytes(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> u64 {
+    plan.branches[b]
+        .units
+        .iter()
+        .map(|&u| match &plan.unit_graph.units[u] {
+            Unit::Region(ri) => flops::boundary_bytes(g, &p.regions[*ri]),
+            Unit::Cpu(_) => 0,
+        })
+        .sum()
+}
+
+/// Can this branch execute on the delegate at all?  Requires a delegate
+/// region and forbids `OpClass::Dynamic` operators and dynamic shapes
+/// anywhere in the branch (NNAPI-style static requirement — dynamic
+/// work is exactly what the paper's fallback story keeps on the CPU).
+pub fn delegate_safe(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> bool {
+    plan.branches[b].has_delegate
+        && plan.branch_nodes(g, p, b).iter().all(|&id| {
+            g.node(id).kind.class() != OpClass::Dynamic && !g.node_has_dynamic_shape(id)
+        })
+}
+
+/// Assign every branch of a plan a [`Placement`] for one device.
+///
+/// Under [`PlacePolicy::Auto`] a branch is delegated iff it is
+/// [`delegate_safe`] and its modelled delegate latency beats its
+/// modelled CPU latency; [`PlacePolicy::ForceCpu`] pins everything to
+/// the CPU pool (the bit-identical baseline).  The modelled latencies
+/// and staging bytes are recorded on the returned plan so executors
+/// and benches can report the decision basis.
+pub fn assign(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    soc: &SocProfile,
+    policy: PlacePolicy,
+) -> PlacementPlan {
+    let nb = plan.branches.len();
+    let mut out = PlacementPlan {
+        assignment: vec![Placement::CpuPool; nb],
+        cpu_latency_s: vec![0.0; nb],
+        delegate_latency_s: vec![f64::INFINITY; nb],
+        staging_bytes: vec![0; nb],
+    };
+    for b in 0..nb {
+        out.cpu_latency_s[b] = cpu_latency(g, p, plan, b, soc);
+        if !delegate_safe(g, p, plan, b) {
+            continue;
+        }
+        out.delegate_latency_s[b] = delegate_latency(g, p, plan, b, soc);
+        if policy == PlacePolicy::Auto && out.delegate_latency_s[b] < out.cpu_latency_s[b] {
+            out.assignment[b] = Placement::Delegate;
+            out.staging_bytes[b] = staging_bytes(g, p, plan, b);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::branch::{self, DEFAULT_BETA};
+    use crate::models::micro;
+    use crate::partition::{partition, CostModel};
+
+    fn loose() -> CostModel {
+        CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX }
+    }
+
+    #[test]
+    fn heavy_trunk_delegates_on_pixel6() {
+        let g = micro::fallback_heavy(4, 4, 128, 6);
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        assert!(!p.regions.is_empty(), "trunk must form a region");
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert!(placed.num_delegated() >= 1, "heavy static trunk should delegate");
+        for b in placed.delegated() {
+            assert!(plan.branches[b].has_delegate);
+            assert!(placed.staging_bytes[b] > 0, "delegate I/O needs staging");
+            assert!(placed.delegate_latency_s[b] < placed.cpu_latency_s[b]);
+        }
+        assert!(placed.total_staging_bytes() > 0);
+    }
+
+    #[test]
+    fn force_cpu_places_nothing_on_delegate() {
+        let g = micro::fallback_heavy(4, 4, 128, 6);
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::ForceCpu);
+        assert_eq!(placed.num_delegated(), 0);
+        assert!(placed.assignment.iter().all(|&pl| pl == Placement::CpuPool));
+        assert_eq!(placed.total_staging_bytes(), 0);
+    }
+
+    #[test]
+    fn dynamic_branches_never_delegate() {
+        let g = micro::mixed();
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        for b in placed.delegated() {
+            for id in plan.branch_nodes(&g, &p, b) {
+                assert_ne!(g.node(id).kind.class(), OpClass::Dynamic);
+                assert!(!g.node_has_dynamic_shape(id));
+            }
+        }
+    }
+
+    #[test]
+    fn high_dispatch_device_keeps_small_regions_on_cpu() {
+        // a modest trunk: worth offloading on the TPU-class pixel6,
+        // not through the P30 Pro's 1.1 ms OpenCL dispatch path
+        let g = micro::fallback_heavy(2, 3, 48, 2);
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let fast = assign(&g, &p, &plan, &SocProfile::pixel6(), PlacePolicy::Auto);
+        let slow = assign(&g, &p, &plan, &SocProfile::p30_pro(), PlacePolicy::Auto);
+        assert!(
+            slow.num_delegated() <= fast.num_delegated(),
+            "higher dispatch cost must never delegate more"
+        );
+        assert_eq!(slow.num_delegated(), 0, "48³ matmuls lose to 1.1 ms dispatch");
+    }
+
+    #[test]
+    fn modelled_latencies_are_finite_and_positive_for_cpu() {
+        let g = micro::parallel_chains(3, 4);
+        let soc = SocProfile::redmi_k50();
+        let p = partition(
+            &g,
+            &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+        );
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        for b in 0..plan.branches.len() {
+            assert!(placed.cpu_latency_s[b].is_finite());
+            assert!(placed.cpu_latency_s[b] > 0.0);
+            assert!(placed.delegate_latency_s[b].is_infinite(), "no regions -> no delegate");
+        }
+    }
+}

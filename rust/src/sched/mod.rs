@@ -227,6 +227,47 @@ pub fn schedule_governed(
     schedule(plan, mems, gov.budget(), cfg)
 }
 
+/// Governor demand of one co-executing layer under a heterogeneous
+/// placement (`crate::place`): the peak CPU-wave branch demand **plus**
+/// the host-visible staging buffers of every delegated branch in the
+/// layer.
+///
+/// Delegated branches hold no host arenas, but their delegate-I/O
+/// staging stays resident for the whole layer while the accelerator
+/// lane is in flight — so offloading can never smuggle memory past the
+/// §3.3 budget.  A `has_delegate` branch that placement kept on the
+/// CPU counts at its full M_i (its arena is real on the host).
+/// [`Engine::run_placed`](crate::exec::Engine::run_placed) leases this
+/// figure once per layer;
+/// [`SegmentedEngine::with_placement`](crate::ctrl::SegmentedEngine::with_placement)
+/// folds the same staging term into its per-segment residency demand.
+pub fn placed_layer_demand(
+    mems: &[BranchMemory],
+    placement: &crate::place::PlacementPlan,
+    ls: &LayerSchedule,
+) -> u64 {
+    let staging: u64 = ls
+        .all()
+        .filter(|&b| placement.is_delegated(b))
+        .map(|b| placement.staging_bytes[b])
+        .sum();
+    let mut peak = 0u64;
+    for wave in &ls.waves {
+        let sum: u64 = wave
+            .iter()
+            .filter(|&&b| !placement.is_delegated(b))
+            .map(|&b| mems[b].total() as u64)
+            .sum();
+        peak = peak.max(sum);
+    }
+    for &b in &ls.sequential {
+        if !placement.is_delegated(b) {
+            peak = peak.max(mems[b].total() as u64);
+        }
+    }
+    staging + peak
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -118,6 +118,45 @@ pub fn pipeline_executor(
     (demand, exec)
 }
 
+/// [`pipeline_executor`] with the per-model device placement chosen at
+/// register time: [`crate::place::assign`] decides which branches run
+/// on the accelerator for this pipeline's SoC, and the returned demand
+/// is the placement-aware branch-peak
+/// ([`Pipeline::peak_placed_demand`](crate::baselines::Pipeline::peak_placed_demand))
+/// — delegated branches lease their host-visible staging instead of a
+/// host arena.  Returns the placement plan too so callers can log the
+/// decision (`parallax serve` prints it per model).
+///
+/// The placement also gates the *simulated* execution mode: when it
+/// delegates nothing (e.g. a high-dispatch device rejects every
+/// region), the pipeline is demoted to CPU-only simulation so charged
+/// accelerator time matches the decision that sized the lease.  (The
+/// simulator models delegation at `has_delegate` granularity, so a
+/// placement that rejects only *some* regions still simulates all of
+/// them accelerated — a known modelling coarseness, not a lease bug.)
+pub fn placed_pipeline_executor(
+    mut pipe: crate::baselines::Pipeline,
+    rng_seed: u64,
+) -> (crate::place::PlacementPlan, u64, Box<dyn ModelExecutor>) {
+    let placement = crate::place::assign(
+        &pipe.graph,
+        &pipe.partition,
+        &pipe.plan,
+        &pipe.soc,
+        crate::place::PlacePolicy::Auto,
+    );
+    if placement.num_delegated() == 0 {
+        pipe.mode = crate::sim::Mode::CpuOnly;
+    }
+    let demand = pipe.peak_placed_demand(&placement);
+    let mut rng = crate::util::rng::Rng::new(rng_seed);
+    let exec = Box::new(FnExecutor(move |seed| {
+        let r = pipe.run(&mut rng, sim_fill(seed));
+        Ok((r.latency_s, r.energy_j))
+    }));
+    (placement, demand, exec)
+}
+
 /// Fill buckets the resolved-demand table is precomputed for.
 const DEMAND_BUCKETS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
 
@@ -796,6 +835,40 @@ mod tests {
         assert!(short <= worst, "short {short} > worst {worst}");
         for seed in 0..97 {
             assert!(demand_fn(seed) <= worst);
+        }
+    }
+
+    #[test]
+    fn placed_executor_demand_covers_staging() {
+        // register-time placement: the adapter must lease exactly the
+        // placement-aware peak, which covers the host-visible staging
+        // of every delegated branch's layer.
+        let soc = crate::device::SocProfile::pixel6();
+        let pipe = crate::baselines::Pipeline::build(
+            crate::baselines::Framework::Parallax,
+            crate::models::ModelKind::Yolov8n,
+            &soc,
+            crate::sim::Mode::Heterogeneous,
+            crate::sched::SchedCfg::default(),
+        )
+        .unwrap();
+        let expect = crate::place::assign(
+            &pipe.graph,
+            &pipe.partition,
+            &pipe.plan,
+            &pipe.soc,
+            crate::place::PlacePolicy::Auto,
+        );
+        let expect_demand = pipe.peak_placed_demand(&expect);
+        let (placement, demand, _exec) = placed_pipeline_executor(pipe, 7);
+        assert_eq!(demand, expect_demand, "adapter must lease the placed peak");
+        assert_eq!(placement.num_delegated(), expect.num_delegated());
+        assert!(demand > 0);
+        for b in placement.delegated() {
+            assert!(
+                demand >= placement.staging_bytes[b],
+                "demand must cover branch {b} staging"
+            );
         }
     }
 

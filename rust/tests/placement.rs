@@ -1,0 +1,276 @@
+//! Heterogeneous placement & delegate co-execution tests.
+//!
+//! Pins the contracts of `place` + `exec::run_placed` +
+//! `ctrl::SegmentedEngine::with_placement`:
+//! * CPU-forced placement is bit-identical to the classic `Engine::run`
+//! * delegated runs produce identical outputs with strictly fewer
+//!   CPU-wave branch executions
+//! * placement never assigns `OpClass::Dynamic` work to the delegate
+//! * governed placed runs never exceed the budget with the delegated
+//!   branches' host-visible staging buffers included in the lease
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::ctrl::SegmentedEngine;
+use parallax::device::SocProfile;
+use parallax::exec::Engine;
+use parallax::graph::{DType, Dim, Graph, OpClass, OpKind};
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel};
+use parallax::place::{self, PlacePolicy, Placement, PlacementPlan};
+use parallax::sched::{self, placed_layer_demand, MemoryGovernor, SchedCfg};
+use parallax::util::prop;
+
+fn loose() -> CostModel {
+    CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX }
+}
+
+/// A placement that force-delegates every delegate-safe branch,
+/// whatever the latency model says — exercises the execution paths
+/// even on graphs too small for the Auto policy to bother offloading.
+fn delegate_all(
+    g: &Graph,
+    p: &parallax::partition::Partition,
+    plan: &branch::BranchPlan,
+    soc: &SocProfile,
+) -> PlacementPlan {
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    for b in 0..plan.branches.len() {
+        if place::delegate_safe(g, p, plan, b) {
+            pl.assignment[b] = Placement::Delegate;
+            pl.staging_bytes[b] = place::staging_bytes(g, p, plan, b);
+            pl.delegate_latency_s[b] = place::delegate_latency(g, p, plan, b, soc);
+        }
+    }
+    pl
+}
+
+/// fallback_heavy with a dynamic NMS tail: static trunk + CPU chains
+/// merge, then NonMaxSuppression gates a dynamic post-segment — the
+/// shape where delegation and §3.4 segmentation must compose.
+fn fallback_heavy_dynamic(chains: usize, chain_len: usize, dim: usize, trunk_len: usize) -> Graph {
+    let mut g = micro::fallback_heavy(chains, chain_len, dim, trunk_len);
+    let merged = g.tensors().iter().find(|t| t.label == "merged").map(|t| t.id).unwrap();
+    let dets = g.add_tensor(
+        vec![Dim::Dynamic { max: 64 }, Dim::Static(6)],
+        DType::F32,
+        "dets",
+    );
+    g.add_node("nms", OpKind::NonMaxSuppression, vec![merged], vec![dets]);
+    let out = g.add_tensor(
+        vec![Dim::Dynamic { max: 64 }, Dim::Static(6)],
+        DType::F32,
+        "out",
+    );
+    g.add_node("output", OpKind::Output, vec![dets], vec![out]);
+    g
+}
+
+#[test]
+fn cpu_forced_matches_classic_run_across_thread_counts() {
+    let g = micro::fallback_heavy(4, 3, 32, 3);
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let mut baseline = None;
+    for threads in [1, 2, 6] {
+        let cfg = SchedCfg { max_threads: threads, margin: 0.4 };
+        let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let (v_classic, _) = engine.run(&s).unwrap();
+        let (v_placed, st) = engine.run_placed(&s, &forced, None).unwrap();
+        assert_eq!(v_classic.checksum(), v_placed.checksum(), "threads={threads}");
+        assert_eq!(st.delegate_jobs, 0);
+        let c = v_placed.checksum();
+        if let Some(prev) = baseline {
+            assert_eq!(prev, c, "threads={threads} changed results");
+        }
+        baseline = Some(c);
+    }
+}
+
+#[test]
+fn delegated_outputs_identical_with_fewer_cpu_wave_runs() {
+    let g = micro::fallback_heavy(6, 4, 48, 3);
+    let soc = SocProfile::pixel6();
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    let delegated = delegate_all(&g, &p, &plan, &soc);
+    assert!(delegated.num_delegated() >= 1);
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let (v_cpu, st_cpu) = engine.run_placed(&s, &forced, None).unwrap();
+    let (v_del, st_del) = engine.run_placed(&s, &delegated, None).unwrap();
+    assert_eq!(v_cpu.checksum(), v_del.checksum());
+    assert!(v_del.all_finite());
+    assert_eq!(st_del.delegate_jobs, delegated.num_delegated());
+    assert!(st_del.cpu_branch_runs < st_cpu.cpu_branch_runs);
+    assert_eq!(st_del.cpu_branch_runs + st_del.delegate_jobs, st_cpu.cpu_branch_runs);
+}
+
+#[test]
+fn prop_placement_never_delegates_dynamic_work() {
+    prop::check("no dynamic on delegate", 40, |rng| {
+        let g = match rng.range(0, 4) {
+            0 => micro::mixed(),
+            1 => micro::gated(rng.range(2, 6)),
+            2 => fallback_heavy_dynamic(rng.range(2, 5), 3, 32, 3),
+            _ => {
+                let (layers, width) = (rng.range(2, 8), rng.range(1, 5));
+                micro::random_dag(rng, layers, width)
+            }
+        };
+        let socs = [SocProfile::pixel6, SocProfile::p30_pro, SocProfile::redmi_k50];
+        let soc = socs[rng.range(0, 3)]();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        for b in placed.delegated() {
+            assert!(plan.branches[b].has_delegate, "branch {b} has no region");
+            for id in plan.branch_nodes(&g, &p, b) {
+                assert_ne!(
+                    g.node(id).kind.class(),
+                    OpClass::Dynamic,
+                    "dynamic op {} delegated",
+                    g.node(id).name
+                );
+                assert!(
+                    !g.node_has_dynamic_shape(id),
+                    "dynamic shape {} delegated",
+                    g.node(id).name
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_zoo_placement_keeps_dynamic_on_cpu() {
+    // the real zoo under the paper's cost model: whatever the device,
+    // no dynamic operator may reach the delegate
+    for kind in [
+        parallax::models::ModelKind::WhisperTiny,
+        parallax::models::ModelKind::Yolov8n,
+    ] {
+        let g = kind.build();
+        let p = partition(&g, &CostModel::default());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        for make in SocProfile::ALL {
+            let placed = place::assign(&g, &p, &plan, &make(), PlacePolicy::Auto);
+            for b in placed.delegated() {
+                for id in plan.branch_nodes(&g, &p, b) {
+                    assert_ne!(g.node(id).kind.class(), OpClass::Dynamic);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_governed_placed_run_respects_budget_with_staging() {
+    let g = micro::fallback_heavy(4, 3, 32, 3);
+    let soc = SocProfile::pixel6();
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let placement = delegate_all(&g, &p, &plan, &soc);
+    assert!(placement.num_delegated() >= 1);
+    let cfg = SchedCfg { max_threads: 3, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    // staging must be part of every co-executing layer's lease
+    for ls in &s {
+        let d = placed_layer_demand(&mems, &placement, ls);
+        let staging: u64 = ls
+            .all()
+            .filter(|&b| placement.is_delegated(b))
+            .map(|b| placement.staging_bytes[b])
+            .sum();
+        assert!(d >= staging, "layer demand {d} below its staging {staging}");
+    }
+    prop::check("placed leases within budget", 20, |rng| {
+        let budget = rng.range_u64(1, 1 << 22);
+        let gov = MemoryGovernor::new(budget);
+        let (v, _) = engine.run_placed(&s, &placement, Some(&gov)).unwrap();
+        assert!(v.all_finite());
+        assert_eq!(gov.in_use(), 0, "leases leaked");
+        let st = gov.stats();
+        assert!(
+            st.peak_reserved <= budget || st.over_budget_grants > 0,
+            "budget {budget} exceeded without a degraded-serial grant \
+             (peak {})",
+            st.peak_reserved
+        );
+    });
+}
+
+#[test]
+fn segmented_engine_with_placement_matches_classic_segmented() {
+    // static trunk delegated, dynamic NMS tail resolved on CPU: the
+    // placed segmented run must reproduce the classic one bit for bit.
+    let g = fallback_heavy_dynamic(4, 3, 32, 3);
+    let soc = SocProfile::pixel6();
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg::default();
+    let placement = delegate_all(&g, &p, &plan, &soc);
+    assert!(placement.num_delegated() >= 1, "static trunk must be delegate-safe");
+    // the NMS barrier's branch stays on the CPU
+    let se_classic = SegmentedEngine::new(&engine, cfg, 1 << 31);
+    let (v1, s1) = se_classic.run(&[], None).unwrap();
+    let se_placed = SegmentedEngine::with_placement(&engine, cfg, 1 << 31, placement.clone());
+    let (v2, s2) = se_placed.run(&[], None).unwrap();
+    assert_eq!(v1.checksum(), v2.checksum(), "placement changed segmented results");
+    assert_eq!(s1.bindings, s2.bindings, "placement changed barrier resolution");
+    assert!(s2.exec.delegate_jobs >= 1, "delegate lane unused in segmented run");
+    // every branch of a barrier segment is CPU-placed
+    for seg in &se_placed.seg_plan().segments {
+        if seg.barrier.is_some() {
+            for &b in &seg.branches {
+                assert!(!placement.is_delegated(b), "barrier branch {b} delegated");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_placed_demand_never_loses_bytes() {
+    // Delegating a branch may move its bytes from the CPU-peak term
+    // (M_i) to the staging term, but never lose them from the lease:
+    // removing the delegated branches lowers the CPU peak by at most
+    // their summed M_i, so  d_all + Σ M_i(delegated) ≥ d_none +
+    // Σ staging(delegated)  must hold for every layer.
+    prop::check("placed demand accounting", 50, |rng| {
+        let g = micro::fallback_heavy(rng.range(2, 6), 3, 32, rng.range(3, 6));
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg { max_threads: rng.range(1, 5), margin: 0.4 };
+        let s = sched::schedule(&plan, &mems, rng.range_u64(1, 1 << 30), &cfg);
+        let none = PlacementPlan::cpu_only(plan.branches.len());
+        let all = delegate_all(&g, &p, &plan, &soc);
+        for ls in &s {
+            let d_none = placed_layer_demand(&mems, &none, ls);
+            let d_all = placed_layer_demand(&mems, &all, ls);
+            let staging_all: u64 =
+                ls.all().filter(|&b| all.is_delegated(b)).map(|b| all.staging_bytes[b]).sum();
+            let del_mi: u64 = ls
+                .all()
+                .filter(|&b| all.is_delegated(b))
+                .map(|b| mems[b].total() as u64)
+                .sum();
+            assert!(d_all >= staging_all, "staging dropped from the lease");
+            assert!(
+                d_all + del_mi >= d_none + staging_all,
+                "delegation lost bytes: d_all {d_all} + M_i {del_mi} < \
+                 d_none {d_none} + staging {staging_all}"
+            );
+        }
+    });
+}

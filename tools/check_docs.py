@@ -7,7 +7,11 @@ Verifies, over the whole repo:
   2. `<NAME>.md` mentions in Rust doc comments and *.md prose refer to
      markdown files that exist at the repo root;
   3. `<NAME>.md §Section` references resolve to a real heading of that
-     file (substring match against `#`-headings).
+     file (substring match against `#`-headings);
+  4. every `cargo bench --bench <name>` reproduce command in README.md
+     and EXPERIMENTS.md, and every backticked bench target in README's
+     paper-table -> bench map, names a `[[bench]]` target that exists
+     in Cargo.toml.
 
 Exit code 0 = clean; 1 = dangling references (each printed).
 Run from the repo root: `python3 tools/check_docs.py`.
@@ -22,6 +26,44 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#][^)]*)\)")
 MD_FILE = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
 MD_SECTION = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\s+§([A-Za-z0-9_-]+)")
+BENCH_CMD = re.compile(r"cargo bench --bench\s+([A-Za-z0-9_-]+)")
+BENCH_NAME = re.compile(r'^\s*name\s*=\s*"([^"]+)"\s*$', re.MULTILINE)
+
+
+def cargo_bench_targets():
+    """Names of all [[bench]] targets declared in the root Cargo.toml."""
+    path = os.path.join(ROOT, "Cargo.toml")
+    targets = set()
+    section = None
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            stripped = line.strip()
+            if stripped.startswith("[["):
+                section = stripped
+                continue
+            if section == "[[bench]]":
+                m = BENCH_NAME.match(line)
+                if m:
+                    targets.add(m.group(1))
+    return targets
+
+
+def bench_map_rows(readme_text):
+    """Backticked target names from the second column of README's
+    paper-table -> bench-target map."""
+    rows = []
+    in_map = False
+    for line in readme_text.splitlines():
+        if line.startswith("##"):
+            in_map = "bench target" in line.lower()
+            continue
+        if not in_map or not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.split("|")]
+        # cells[0] and cells[-1] are the empty outer splits
+        if len(cells) >= 3 and cells[2].startswith("`") and cells[2].endswith("`"):
+            rows.append(cells[2].strip("`"))
+    return rows
 
 
 def repo_files(exts):
@@ -71,6 +113,8 @@ def main():
         rel = os.path.relpath(src, ROOT)
         if rel.startswith("tools" + os.sep):
             continue  # this checker's own docs
+        if rel == "ISSUE.md":
+            continue  # transient work order; cites paper sections, not repo headings
         text = open(src, encoding="utf-8", errors="replace").read()
         for name in set(MD_FILE.findall(text)):
             if name not in known_md:
@@ -82,6 +126,35 @@ def main():
             if not any(section.lower() in h.lower() for h in heads):
                 problems.append(
                     f"{rel}: {name} §{section} has no matching heading"
+                )
+
+    # 4. bench reproduce commands + README bench-map rows must name
+    #    real Cargo.toml [[bench]] targets
+    targets = cargo_bench_targets()
+    for name in ("README.md", "EXPERIMENTS.md"):
+        path = os.path.join(ROOT, name)
+        if not os.path.exists(path):
+            continue
+        text = open(path, encoding="utf-8").read()
+        for target in set(BENCH_CMD.findall(text)):
+            if target not in targets:
+                problems.append(
+                    f"{name}: `cargo bench --bench {target}` names no "
+                    f"Cargo.toml [[bench]] target"
+                )
+    readme = os.path.join(ROOT, "README.md")
+    if os.path.exists(readme):
+        rows = bench_map_rows(open(readme, encoding="utf-8").read())
+        if not rows:
+            problems.append(
+                "README.md: paper-table -> bench map has no parseable rows "
+                "(expected a '## ... bench target ...' table)"
+            )
+        for target in rows:
+            if target not in targets:
+                problems.append(
+                    f"README.md: bench-map row `{target}` names no "
+                    f"Cargo.toml [[bench]] target"
                 )
 
     if problems:
