@@ -10,10 +10,12 @@
 //!    (`CostModel::from_profile` — Appendix B thresholds from the
 //!    `SocProfile`).
 //! 2. Extract branches/layers (§3.1) and assign each branch a
-//!    `Placement` by modelled latency (`place::assign`).
-//! 3. Execute: delegated branches on the async delegate lane
-//!    overlapping the CPU fallback waves (`Engine::run_placed`), with
-//!    the governor lease covering the delegate-I/O staging.
+//!    `Placement` by modelled per-lane latency (`place::assign` —
+//!    load-balanced across the SoC's accelerator lanes).
+//! 3. Execute: delegated branches on persistent per-lane delegate
+//!    workers overlapping the CPU fallback waves
+//!    (`Engine::run_placed`), with the governor lease covering the
+//!    in-flight delegate-I/O staging.
 //! 4. Cross-check against the CPU-only-forced run: bit-identical
 //!    outputs, strictly fewer CPU-wave branch executions.
 
@@ -28,13 +30,18 @@ use parallax::sched::{self, MemoryGovernor, SchedCfg};
 
 fn main() -> anyhow::Result<()> {
     let soc = SocProfile::pixel6();
-    println!(
-        "device: {} (acc {:.1} TFLOP/s @ {:.0}% util, dispatch {:.2} ms)\n",
-        soc.display_name(),
-        soc.acc_flops / 1e12,
-        soc.acc_utilization * 100.0,
-        soc.acc_dispatch_s * 1e3,
-    );
+    println!("device: {} — {} accelerator lane(s):", soc.display_name(), soc.lanes.len());
+    for (i, lane) in soc.lanes.iter().enumerate() {
+        println!(
+            "  lane {i} ({}): {:.1} TFLOP/s @ {:.0}% util, dispatch {:.2} ms{}",
+            lane.name,
+            lane.flops / 1e12,
+            lane.utilization * 100.0,
+            lane.dispatch_s * 1e3,
+            if lane.reachable { "" } else { "  [UNREACHABLE]" },
+        );
+    }
+    println!();
 
     // -- 1. model + device-derived partition ---------------------------
     let g = micro::fallback_heavy(6, 24, 448, 4);
@@ -57,11 +64,11 @@ fn main() -> anyhow::Result<()> {
     let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
     for b in 0..plan.branches.len() {
         let tag = match placed.assignment[b] {
-            Placement::Delegate => "DELEGATE",
-            Placement::CpuPool => "cpu",
+            Placement::Delegate(lane) => format!("LANE {lane} ({})", soc.lanes[lane].name),
+            Placement::CpuPool => "cpu".to_string(),
         };
         println!(
-            "branch {b:>2}: {:>8}  modelled cpu {:>8.3} ms  delegate {:>8}  \
+            "branch {b:>2}: {:>12}  modelled cpu {:>8.3} ms  delegate {:>8}  \
              staging {:>6.1} KB",
             tag,
             placed.cpu_latency_s[b] * 1e3,

@@ -268,20 +268,28 @@ impl Pipeline {
 
     /// [`Pipeline::peak_layer_demand`] under a heterogeneous placement
     /// (`crate::place`): delegated branches contribute their
-    /// host-visible delegate-I/O staging instead of a host arena, and
-    /// `has_delegate` branches the placement kept on the CPU count at
-    /// their full M_i.  What a serving host should lease per in-flight
-    /// batch when the model was registered with a placement.
+    /// host-visible delegate-I/O staging instead of a host arena —
+    /// held *in flight* from their dispatch layer until their first
+    /// consumer's layer, matching the cross-layer overlap the real
+    /// engine runs — and `has_delegate` branches the placement kept on
+    /// the CPU count at their full M_i.  What a serving host should
+    /// lease per in-flight batch when the model was registered with a
+    /// placement.
     pub fn peak_placed_demand(&self, placement: &crate::place::PlacementPlan) -> u64 {
+        // one pseudo-schedule per layer lets the shared in-flight
+        // staging accounting compute the dispatch→merge spans
+        let pseudo: Vec<LayerSchedule> = self
+            .plan
+            .layers
+            .iter()
+            .map(|l| LayerSchedule { waves: vec![l.clone()], sequential: vec![] })
+            .collect();
+        let inflight = sched::placed_inflight_staging(&self.plan, placement, &pseudo);
         self.plan
             .layers
             .iter()
-            .map(|layer| {
-                let staging: u64 = layer
-                    .iter()
-                    .filter(|&&b| placement.is_delegated(b))
-                    .map(|&b| placement.staging_bytes[b])
-                    .sum();
+            .zip(&inflight)
+            .map(|(layer, &staging)| {
                 let cpu: u64 = layer
                     .iter()
                     .filter(|&&b| !placement.is_delegated(b))

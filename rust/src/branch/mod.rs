@@ -331,6 +331,26 @@ impl BranchPlan {
         (layers, par, maxb)
     }
 
+    /// Branch-level successor sets (dedup'd cross-branch unit edges):
+    /// `succs[a]` holds every branch consuming one of `a`'s outputs.
+    /// Shared by the cross-layer delegate overlap (first-consumer merge
+    /// points) and the in-flight staging accounting
+    /// ([`sched::placed_inflight_staging`](crate::sched::placed_inflight_staging)).
+    pub fn branch_succs(&self) -> Vec<Vec<usize>> {
+        let nb = self.branches.len();
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        for (u, us) in self.unit_graph.succs.iter().enumerate() {
+            let bu = self.branch_of_unit[u];
+            for &v in us {
+                let bv = self.branch_of_unit[v];
+                if bu != bv && !succs[bu].contains(&bv) {
+                    succs[bu].push(bv);
+                }
+            }
+        }
+        succs
+    }
+
     /// All graph nodes of a branch, in unit order (regions expanded).
     pub fn branch_nodes(&self, _g: &Graph, p: &Partition, b: usize) -> Vec<NodeId> {
         let mut out = Vec::new();

@@ -471,6 +471,7 @@ struct Entry {
 
 fn build_entry(
     plan: &BranchPlan,
+    branch_succs: &[Vec<usize>],
     mems: &[BranchMemory],
     seg: &SegmentExec,
     dead: &[usize],
@@ -508,22 +509,20 @@ fn build_entry(
     // footprint of any one layer — §3.3 applied at segment
     // granularity.  Resolved shapes shrink both terms, so decode-step
     // leases track the actual sequence length instead of the worst
-    // case.  Under a placement, a layer's transient adds its delegated
-    // branches' host-visible delegate-I/O staging (live only while
-    // that layer's delegate lane is in flight — mirroring the per-layer
-    // lease `Engine::run_placed` takes) on top of its widest wave's
-    // arena peak.
+    // case.  Under a placement, a layer's transient adds the
+    // host-visible delegate-I/O staging of every lane job *in flight*
+    // during that layer — with cross-layer overlap a job dispatched in
+    // an earlier layer holds its staging until its first consumer, so
+    // the per-layer staging term is the in-flight accounting of
+    // `sched::placed_inflight_staging`, not just the layer's own
+    // dispatches — on top of its widest wave's arena peak.
+    let inflight: Vec<u64> = match placement {
+        Some(pl) => sched::placed_inflight_staging_from(branch_succs, pl, &schedules),
+        None => vec![0; schedules.len()],
+    };
     let mut boundary = 0u64;
     let mut peak_transient = 0u64;
-    for ls in &schedules {
-        let mut staging = 0u64;
-        if let Some(pl) = placement {
-            for b in ls.all() {
-                if pl.is_delegated(b) {
-                    staging += pl.staging_bytes[b];
-                }
-            }
-        }
+    for (li, ls) in schedules.iter().enumerate() {
         let mut layer_arena = 0u64;
         for wave in &ls.waves {
             let mut arena = 0u64;
@@ -543,7 +542,7 @@ fn build_entry(
             layer_arena = layer_arena.max(mems[b].arena_bytes as u64);
             boundary += mems[b].boundary_out_bytes as u64;
         }
-        peak_transient = peak_transient.max(staging + layer_arena);
+        peak_transient = peak_transient.max(inflight[li] + layer_arena);
     }
     Entry { schedules, demand: boundary + peak_transient }
 }
@@ -556,6 +555,8 @@ fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
     acc.cpu_branch_runs += s.cpu_branch_runs;
     acc.delegate_jobs += s.delegate_jobs;
     acc.acc_modelled_s += s.acc_modelled_s;
+    acc.delegate_stalls += s.delegate_stalls;
+    acc.lane_gaps += s.lane_gaps;
     acc.wall_s += s.wall_s;
 }
 
@@ -592,6 +593,9 @@ pub struct SegmentedEngine<'a> {
     engine: &'a Engine<'a>,
     seg_plan: SegmentedPlan,
     max_mems: Vec<BranchMemory>,
+    /// Branch successor map, derived once from the immutable plan
+    /// (feeds the in-flight staging spans of every re-plan).
+    branch_succs: Vec<Vec<usize>>,
     /// Per-segment plans at worst-case shapes (the static fallback).
     max_entries: Vec<Arc<Entry>>,
     budget: u64,
@@ -612,10 +616,11 @@ impl<'a> SegmentedEngine<'a> {
     }
 
     /// [`SegmentedEngine::new`] with a heterogeneous placement
-    /// (`crate::place`): delegate-placed branches execute on the async
-    /// [`DelegateWorker`](crate::exec::DelegateWorker) lane, and every
-    /// segment's residency lease covers their host-visible staging
-    /// buffers.  Because placement never delegates a branch carrying
+    /// (`crate::place`): delegate-placed branches execute on their
+    /// lane's persistent [`DelegateWorker`](crate::exec::DelegateWorker)
+    /// thread, and every segment's residency lease covers their
+    /// host-visible staging buffers for as long as the jobs are in
+    /// flight.  Because placement never delegates a branch carrying
     /// `OpClass::Dynamic` work, resolved dynamic segments stay on the
     /// CPU while their static neighbours may be offloaded — the §3.4
     /// and heterogeneous paths compose instead of conflicting.
@@ -637,17 +642,31 @@ impl<'a> SegmentedEngine<'a> {
         let (g, p, plan) = (engine.graph, engine.partition, engine.plan);
         let seg_plan = segment_plan(g, p, plan);
         let max_mems = memory::branch_memories(g, p, plan);
+        // the plan is immutable: derive the branch successor map once
+        // and reuse it for every (re-)planned segment's in-flight
+        // staging spans instead of rebuilding it per cache miss
+        let branch_succs = plan.branch_succs();
         let max_entries = seg_plan
             .segments
             .iter()
             .map(|seg| {
-                Arc::new(build_entry(plan, &max_mems, seg, &[], budget, &cfg, placement.as_ref()))
+                Arc::new(build_entry(
+                    plan,
+                    &branch_succs,
+                    &max_mems,
+                    seg,
+                    &[],
+                    budget,
+                    &cfg,
+                    placement.as_ref(),
+                ))
             })
             .collect();
         Self {
             engine,
             seg_plan,
             max_mems,
+            branch_succs,
             max_entries,
             budget,
             cfg,
@@ -827,6 +846,7 @@ impl<'a> SegmentedEngine<'a> {
                 None,
                 env,
                 self.placement.as_ref(),
+                true,
             )?;
             merge_stats(&mut stats.exec, s);
             stats.segments_run += 1;
@@ -866,6 +886,7 @@ impl<'a> SegmentedEngine<'a> {
         }
         let entry = Arc::new(build_entry(
             plan,
+            &self.branch_succs,
             &mems,
             seg,
             dead,

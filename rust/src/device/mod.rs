@@ -11,6 +11,44 @@
 
 use crate::util::rng::Rng;
 
+/// One accelerator queue ("lane") of a SoC: the TPU/NPU, the GPU, a
+/// DSP.  Mobile SoCs expose several such queues simultaneously; each
+/// lane has its own sustained rate, dispatch latency, transfer
+/// bandwidth and power draw, and — crucially — its own *reachability*:
+/// a lane the runtime cannot drive (the P30 Pro's NPU has no NNAPI
+/// path) must never be a placement target, however fast its modelled
+/// rates look.  The legacy scalar fields on [`SocProfile`]
+/// (`acc_flops`/`acc_utilization`/`acc_dispatch_s`/`p_acc_w`/`nnapi`)
+/// remain as a one-lane compatibility view mirroring `lanes[0]`, with
+/// the old `nnapi` flag folded into [`AccLane::reachable`].
+#[derive(Clone, Debug)]
+pub struct AccLane {
+    /// Short lane name for tables ("tpu", "gpu", "mdla", ...).
+    pub name: &'static str,
+    /// Peak compute rate, FLOP/s.
+    pub flops: f64,
+    /// Sustained fraction of peak a delegate reaches on the zoo's
+    /// region sizes (small tensors never fill the MAC array).
+    pub utilization: f64,
+    /// Dispatch latency per delegate invocation, seconds.
+    pub dispatch_s: f64,
+    /// Host<->lane transfer bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Lane active power, watts.
+    pub power_w: f64,
+    /// Whether the runtime can actually drive this lane (NNAPI/OpenCL
+    /// visibility).  Unreachable lanes are modelling-only: placement
+    /// (`crate::place`) must never delegate to them.
+    pub reachable: bool,
+}
+
+impl AccLane {
+    /// Sustained effective compute rate, FLOP/s.
+    pub fn effective_flops(&self) -> f64 {
+        self.flops * self.utilization
+    }
+}
+
 /// One SoC profile.
 #[derive(Clone, Debug)]
 pub struct SocProfile {
@@ -44,6 +82,11 @@ pub struct SocProfile {
     pub p_acc_w: f64,
     /// Idle/baseline platform power, watts.
     pub p_idle_w: f64,
+    /// Accelerator lanes (concurrent delegate queues).  `lanes[0]`
+    /// mirrors the scalar `acc_*`/`nnapi` fields (the one-lane
+    /// compatibility view); further entries are additional queues the
+    /// multi-lane placement (`crate::place`) can load-balance across.
+    pub lanes: Vec<AccLane>,
 }
 
 impl SocProfile {
@@ -65,6 +108,29 @@ impl SocProfile {
             p_core_w: 1.9,
             p_acc_w: 2.4,
             p_idle_w: 0.65,
+            lanes: vec![
+                AccLane {
+                    name: "tpu",
+                    flops: 30.0e12,
+                    utilization: 0.22,
+                    dispatch_s: 0.20e-3,
+                    mem_bw: 51.2e9,
+                    power_w: 2.4,
+                    reachable: true,
+                },
+                AccLane {
+                    // Mali-G78 via the GPU delegate: slower sustained
+                    // rate, higher queue latency, but a second
+                    // concurrent lane next to the TPU.
+                    name: "gpu",
+                    flops: 4.0e12,
+                    utilization: 0.30,
+                    dispatch_s: 0.45e-3,
+                    mem_bw: 51.2e9,
+                    power_w: 1.6,
+                    reachable: true,
+                },
+            ],
         }
     }
 
@@ -86,6 +152,20 @@ impl SocProfile {
             p_core_w: 1.7,
             p_acc_w: 3.1,
             p_idle_w: 0.70,
+            lanes: vec![AccLane {
+                // The Kirin 980's NPU is not NNAPI-accessible and the
+                // OpenCL GL/CL queue is not runtime-drivable either in
+                // our delegate model: the lane exists for modelling but
+                // placement must never target it (reachable = false
+                // folds the `nnapi` flag).
+                name: "gpu-cl",
+                flops: 6.0e12,
+                utilization: 0.15,
+                dispatch_s: 1.1e-3,
+                mem_bw: 34.1e9,
+                power_w: 3.1,
+                reachable: false,
+            }],
         }
     }
 
@@ -106,6 +186,27 @@ impl SocProfile {
             p_core_w: 1.5,
             p_acc_w: 2.0,
             p_idle_w: 0.60,
+            lanes: vec![
+                AccLane {
+                    name: "mdla",
+                    flops: 12.0e12,
+                    utilization: 0.20,
+                    dispatch_s: 0.35e-3,
+                    mem_bw: 51.2e9,
+                    power_w: 2.0,
+                    reachable: true,
+                },
+                AccLane {
+                    // Mali-G610 GPU delegate as the second queue.
+                    name: "gpu",
+                    flops: 2.6e12,
+                    utilization: 0.22,
+                    dispatch_s: 0.60e-3,
+                    mem_bw: 51.2e9,
+                    power_w: 1.4,
+                    reachable: true,
+                },
+            ],
         }
     }
 
@@ -162,6 +263,12 @@ impl SocProfile {
         let jitter = (base as f64 * 0.08 * (rng.f64() - 0.5)) as i64;
         (base as i64 + jitter).max(1 << 28) as u64
     }
+
+    /// The lanes the runtime can actually drive, with their indices —
+    /// what the multi-lane placement (`crate::place`) iterates.
+    pub fn available_lanes(&self) -> impl Iterator<Item = (usize, &AccLane)> {
+        self.lanes.iter().enumerate().filter(|(_, l)| l.reachable)
+    }
 }
 
 #[cfg(test)]
@@ -215,5 +322,39 @@ mod tests {
     fn p30_has_no_nnapi() {
         assert!(!SocProfile::p30_pro().nnapi);
         assert!(SocProfile::pixel6().nnapi);
+    }
+
+    #[test]
+    fn lane_zero_mirrors_scalar_view() {
+        // the scalar acc_* fields are the one-lane compatibility view:
+        // they must stay in lock-step with lanes[0], nnapi included
+        for f in SocProfile::ALL {
+            let p = f();
+            assert!(!p.lanes.is_empty(), "{}: no lanes", p.name);
+            let l0 = &p.lanes[0];
+            assert_eq!(l0.flops, p.acc_flops, "{}", p.name);
+            assert_eq!(l0.utilization, p.acc_utilization, "{}", p.name);
+            assert_eq!(l0.dispatch_s, p.acc_dispatch_s, "{}", p.name);
+            assert_eq!(l0.mem_bw, p.mem_bw, "{}", p.name);
+            assert_eq!(l0.power_w, p.p_acc_w, "{}", p.name);
+            assert_eq!(l0.reachable, p.nnapi, "{}: nnapi folds into lane 0", p.name);
+        }
+    }
+
+    #[test]
+    fn lane_availability_follows_reachability() {
+        let pixel = SocProfile::pixel6();
+        assert_eq!(pixel.available_lanes().count(), 2, "pixel6 is a 2-lane device");
+        let p30 = SocProfile::p30_pro();
+        assert_eq!(
+            p30.available_lanes().count(),
+            0,
+            "p30's accelerator is runtime-unreachable"
+        );
+        let redmi = SocProfile::redmi_k50();
+        assert_eq!(redmi.available_lanes().count(), 2);
+        for (i, lane) in pixel.available_lanes() {
+            assert!(lane.effective_flops() > 0.0, "lane {i}");
+        }
     }
 }

@@ -311,12 +311,16 @@ pub fn table7() -> String {
 }
 
 /// Heterogeneous placement decisions (repo-specific, `crate::place`):
-/// per model × device, how many branches the placement model assigns
-/// to the accelerator delegate, the host-visible staging they lease,
-/// and the modelled delegate-vs-CPU latency of the delegated set.
-/// Pure modelling — no execution — so the table is cheap and exact;
-/// `benches/heterogeneous.rs` measures the real-engine wall-clock
-/// effect (EXPERIMENTS.md §Heterogeneous).
+/// per model × device, how the placement model distributes delegated
+/// branches across the device's accelerator lanes (the `a+b` column —
+/// one count per [`AccLane`](crate::device::AccLane), so a 2-lane
+/// device shows how the busy-time balancing split the work), the
+/// host-visible staging they lease, and the modelled delegate-vs-CPU
+/// latency of the delegated set.  Devices whose lanes are
+/// runtime-unreachable (the P30 Pro) never delegate, whatever their
+/// modelled rates.  Pure modelling — no execution — so the table is
+/// cheap and exact; `benches/heterogeneous.rs` measures the
+/// real-engine wall-clock effect (EXPERIMENTS.md §Heterogeneous).
 ///
 /// Regions come from the paper's relaxed [`CostModel::default`] (one
 /// partition per model, shared by every device column); what varies
@@ -327,12 +331,16 @@ pub fn table7() -> String {
 pub fn hetero() -> String {
     use crate::place::{self, PlacePolicy};
     let mut out = String::from(
-        "Heterogeneous placement: delegated branches / staging KB / \
+        "Heterogeneous placement: delegated branches per lane / staging KB / \
          modelled delegate vs CPU ms (delegated set)\n",
     );
     out += &format!("{:<18}", "Model");
     for make in SocProfile::ALL {
-        out += &format!(" {:>24}", make().display_name());
+        let soc = make();
+        out += &format!(
+            " {:>24}",
+            format!("{} ({}L)", soc.display_name(), soc.lanes.len())
+        );
     }
     out.push('\n');
     let micro_fb = crate::models::micro::fallback_heavy(6, 24, 448, 4);
@@ -356,11 +364,17 @@ pub fn hetero() -> String {
                 acc_ms += placed.delegate_latency_s[b] * 1e3;
                 cpu_ms += placed.cpu_latency_s[b] * 1e3;
             }
+            let dist = placed
+                .lane_job_counts(soc.lanes.len())
+                .iter()
+                .map(usize::to_string)
+                .collect::<Vec<_>>()
+                .join("+");
             row += &format!(
                 " {:>24}",
                 format!(
                     "{}/{:.0}KB/{:.2}v{:.1}",
-                    placed.num_delegated(),
+                    dist,
                     placed.total_staging_bytes() as f64 / 1e3,
                     acc_ms,
                     cpu_ms

@@ -25,13 +25,20 @@
 //!
 //! Heterogeneous hosts call [`Engine::run_placed`] with a
 //! [`PlacementPlan`](crate::place::PlacementPlan): branches the §3.1
-//! placement model assigns to the accelerator execute on an async
-//! [`DelegateWorker`] lane — a dedicated thread per layer that
+//! placement model assigns to an accelerator lane execute on that
+//! lane's persistent [`DelegateWorker`] — one dedicated thread per
+//! [`AccLane`](crate::device::AccLane) that outlives layer barriers,
 //! overlaps wall-clock with the CPU fallback waves, charges the
 //! modelled delegate time from the device profile, and drives the
 //! PJRT pool for program-hinted blocks when the `pjrt` feature is on.
-//! Forcing the placement to CPU-only reproduces the classic
-//! [`Engine::run`] path bit for bit.
+//! A lane job's outputs merge into the value store right before its
+//! *first consumer's* wave (not at its own layer barrier), so jobs
+//! keep the accelerator busy across the next layers' CPU waves —
+//! dependency-safe because every consumer waits for exactly the
+//! delegated predecessors it reads.  Forcing the placement to CPU-only
+//! reproduces the classic [`Engine::run`] path bit for bit, and
+//! overlap can be disabled per run ([`Engine::run_placed_opts`]) for
+//! the barrier-join ablation.
 
 pub mod host_kernels;
 
@@ -73,11 +80,24 @@ pub struct ExecStats {
     pub cpu_branch_runs: usize,
     /// Branch executions on the async [`DelegateWorker`] lane.
     pub delegate_jobs: usize,
-    /// Modelled accelerator-busy seconds of the delegate lane (the
-    /// `SocProfile` timing recorded by the placement plan) — the
-    /// simulated-delegate substitute for NNAPI wall time, see
+    /// Modelled accelerator-busy seconds summed over all delegate
+    /// lanes (the `SocProfile` timing recorded by the placement plan)
+    /// — the simulated-delegate substitute for NNAPI wall time, see
     /// EXPERIMENTS.md §Heterogeneous.
     pub acc_modelled_s: f64,
+    /// Times the executor had to *block* on a lane result (a consumer
+    /// wave or barrier arrived before the job finished).
+    pub delegate_stalls: usize,
+    /// Observed idle-lane gaps: dispatches to a lane whose previous
+    /// jobs had all completed *and merged* — the lane provably sat
+    /// idle in between.  Barrier-join runs pay one per re-used lane
+    /// per co-executing layer (deterministic: every layer ends
+    /// drained); overlap runs absorb results lazily, so on a
+    /// single-lane run the count is deterministic too, while
+    /// multi-lane counts can vary with cross-lane arrival order.
+    /// Cross-layer overlap's whole point is to drive this to zero
+    /// (the bench's ablation metric, measured on one lane).
+    pub lane_gaps: usize,
     pub wall_s: f64,
 }
 
@@ -103,6 +123,10 @@ pub struct Engine<'a> {
     /// Per-branch peak demand M_i (§3.3) — what governed runs lease
     /// from the process-wide ledger before executing a wave.
     mems: Vec<BranchMemory>,
+    /// Branch-level successor sets (computed once — the plan is
+    /// immutable): the merge points of the cross-layer delegate
+    /// overlap and the spans of the in-flight staging accounting.
+    branch_succs: Vec<Vec<usize>>,
     /// Deterministic synthesized weights, keyed by source tensor id.
     weights: Mutex<HashMap<TensorId, Tensor>>,
     /// Synthesized program weight args, keyed by (program, arg index).
@@ -172,6 +196,7 @@ impl<'a> Engine<'a> {
             }
         }
         let mems = crate::memory::branch_memories(graph, partition, plan);
+        let branch_succs = plan.branch_succs();
         Self {
             graph,
             partition,
@@ -180,6 +205,7 @@ impl<'a> Engine<'a> {
             blocks,
             covered,
             mems,
+            branch_succs,
             weights: Mutex::new(HashMap::new()),
             prog_weights: Mutex::new(HashMap::new()),
         }
@@ -284,13 +310,15 @@ impl<'a> Engine<'a> {
     }
 
     /// Run one inference with a heterogeneous [`PlacementPlan`]
-    /// (`crate::place`): delegated branches execute on the async
-    /// [`DelegateWorker`] lane, overlapping wall-clock with this
-    /// layer's CPU fallback waves; CPU-placed branches take the classic
-    /// wave path.  Each co-executing layer holds a single governor
-    /// lease covering its CPU-wave peak *plus* the delegated branches'
-    /// host-visible staging buffers
-    /// ([`placed_layer_demand`](crate::sched::placed_layer_demand)).
+    /// (`crate::place`): delegated branches execute on persistent
+    /// per-lane [`DelegateWorker`] threads, overlapping wall-clock
+    /// with the CPU fallback waves across layer barriers; CPU-placed
+    /// branches take the classic wave path.  The run holds ONE
+    /// governor lease — the max over layers of the CPU-wave peak
+    /// *plus* the in-flight lane jobs' host-visible staging
+    /// ([`placed_layer_demand`](crate::sched::placed_layer_demand)) —
+    /// from before the first dispatch until the final drain, so
+    /// staging is never resident outside a lease.
     ///
     /// A placement with no delegated branches (e.g.
     /// [`PlacePolicy::ForceCpu`](crate::place::PlacePolicy)) executes
@@ -305,6 +333,21 @@ impl<'a> Engine<'a> {
         placement: &PlacementPlan,
         governor: Option<&MemoryGovernor>,
     ) -> anyhow::Result<(Values, ExecStats)> {
+        self.run_placed_opts(schedules, placement, governor, true)
+    }
+
+    /// [`Engine::run_placed`] with the cross-layer overlap knob
+    /// exposed.  `overlap: false` reproduces the barrier-join
+    /// behaviour — every lane job merges at its own layer's end — the
+    /// ablation baseline `benches/heterogeneous.rs` compares against
+    /// (same outputs; more [`ExecStats::lane_gaps`]).
+    pub fn run_placed_opts(
+        &self,
+        schedules: &[LayerSchedule],
+        placement: &PlacementPlan,
+        governor: Option<&MemoryGovernor>,
+        overlap: bool,
+    ) -> anyhow::Result<(Values, ExecStats)> {
         let values = Values::default();
         let stats = self.run_waves_placed(
             schedules,
@@ -312,6 +355,7 @@ impl<'a> Engine<'a> {
             governor,
             &ShapeEnv::unresolved(),
             Some(placement),
+            overlap,
         )?;
         Ok((values, stats))
     }
@@ -331,14 +375,19 @@ impl<'a> Engine<'a> {
         governor: Option<&MemoryGovernor>,
         env: &ShapeEnv,
     ) -> anyhow::Result<ExecStats> {
-        self.run_waves_placed(schedules, values, governor, env, None)
+        self.run_waves_placed(schedules, values, governor, env, None, true)
     }
 
     /// [`Engine::run_waves`] with an optional heterogeneous placement
     /// — the shared executor core behind the classic, governed, placed
     /// and segmented (§3.4) paths.  `placement: None` (or a placement
-    /// that delegates nothing) runs every branch on CPU waves exactly
-    /// like the classic engine.
+    /// that delegates nothing in these schedules) runs every branch on
+    /// CPU waves exactly like the classic engine; otherwise delegated
+    /// branches run on persistent per-lane [`DelegateWorker`]s, with
+    /// `overlap` choosing first-consumer merges (`true`) or
+    /// barrier-joins at each layer end (`false`, the ablation
+    /// baseline).  All in-flight lane jobs are drained before this
+    /// returns, so callers never observe a partially-merged store.
     pub fn run_waves_placed(
         &self,
         schedules: &[LayerSchedule],
@@ -346,30 +395,43 @@ impl<'a> Engine<'a> {
         governor: Option<&MemoryGovernor>,
         env: &ShapeEnv,
         placement: Option<&PlacementPlan>,
+        overlap: bool,
     ) -> anyhow::Result<ExecStats> {
         let t0 = std::time::Instant::now();
         let c = Counters::default();
-        let mut delegate_jobs = 0usize;
-        let mut acc_modelled = 0.0f64;
-        for ls in schedules {
-            let (jobs, modelled) = self.run_layer(ls, values, governor, env, placement, &c)?;
-            delegate_jobs += jobs;
-            acc_modelled += modelled;
-        }
+        let delegated_here = placement
+            .map(|pl| schedules.iter().any(|ls| ls.all().any(|b| pl.is_delegated(b))))
+            .unwrap_or(false);
+        let lanes = if delegated_here {
+            self.run_overlapped(schedules, values, governor, env, placement.unwrap(), overlap, &c)?
+        } else {
+            // Classic path (also the CPU-forced placed path): per-wave
+            // admission, holding each wave's combined peak for exactly
+            // as long as its branches are in flight.  With a placement,
+            // demand is placement-aware: a `has_delegate` branch whose
+            // offload was rejected executes with a real host arena and
+            // must lease it.
+            for ls in schedules {
+                self.run_layer_classic(ls, values, governor, env, placement, &c)?;
+            }
+            LaneTotals::default()
+        };
         Ok(ExecStats {
             pjrt_calls: c.pjrt_calls.into_inner(),
             host_ops: c.host_ops.into_inner(),
             skipped_fused: c.skipped.into_inner(),
             peak_arena_bytes: c.peak_arena.into_inner(),
             cpu_branch_runs: c.cpu_branch_runs.into_inner(),
-            delegate_jobs,
-            acc_modelled_s: acc_modelled,
+            delegate_jobs: lanes.jobs,
+            acc_modelled_s: lanes.modelled_s,
+            delegate_stalls: lanes.stalls,
+            lane_gaps: lanes.gaps,
             wall_s: t0.elapsed().as_secs_f64(),
         })
     }
 
-    /// Execute one layer; returns `(delegate jobs, modelled acc seconds)`.
-    fn run_layer(
+    /// Execute one layer with no delegate lanes in play.
+    fn run_layer_classic(
         &self,
         ls: &LayerSchedule,
         values: &Values,
@@ -377,67 +439,170 @@ impl<'a> Engine<'a> {
         env: &ShapeEnv,
         placement: Option<&PlacementPlan>,
         c: &Counters,
-    ) -> anyhow::Result<(usize, f64)> {
-        let delegated: Vec<usize> = match placement {
-            Some(pl) => ls.all().filter(|&b| pl.is_delegated(b)).collect(),
-            None => Vec::new(),
+    ) -> anyhow::Result<()> {
+        let demand = |wave: &[usize]| match placement {
+            Some(pl) => self.wave_demand_placed(wave, pl),
+            None => self.wave_demand(wave),
         };
-        if delegated.is_empty() {
-            // Classic path (also the CPU-forced placed path): per-wave
-            // admission, holding each wave's combined peak for exactly
-            // as long as its branches are in flight.  With a placement,
-            // demand is placement-aware: a `has_delegate` branch whose
-            // offload was rejected executes with a real host arena and
-            // must lease it.
-            let demand = |wave: &[usize]| match placement {
-                Some(pl) => self.wave_demand_placed(wave, pl),
-                None => self.wave_demand(wave),
-            };
-            for wave in &ls.waves {
-                if wave.is_empty() {
-                    continue;
-                }
-                let _lease = governor.map(|g| g.acquire(demand(wave)));
-                self.run_wave(wave, values, env, c)?;
+        for wave in &ls.waves {
+            if wave.is_empty() {
+                continue;
             }
-            for &b in &ls.sequential {
-                let _lease = governor.map(|g| g.acquire(demand(&[b])));
-                self.run_sequential(b, values, env, c)?;
-            }
-            return Ok((0, 0.0));
+            let _lease = governor.map(|g| g.acquire(demand(wave)));
+            self.run_wave(wave, values, env, c)?;
         }
-        // Co-executing layer: one lease covers the CPU-wave peak plus
-        // the delegated branches' host-visible staging buffers, held
-        // while the delegate lane is in flight so offloading can never
-        // smuggle memory past the §3.3 budget.
-        let pl = placement.expect("delegated branches imply a placement");
-        let demand = crate::sched::placed_layer_demand(&self.mems, pl, ls);
-        let _lease = governor.map(|g| g.acquire(demand));
-        let client = self.pool.map(|p| p.client());
-        std::thread::scope(|scope| -> anyhow::Result<(usize, f64)> {
-            let worker =
-                DelegateWorker::spawn(scope, self, pl, &delegated, values, env, client, c);
-            for wave in &ls.waves {
-                let cpu: Vec<usize> =
-                    wave.iter().copied().filter(|b| !delegated.contains(b)).collect();
-                if cpu.is_empty() {
+        for &b in &ls.sequential {
+            let _lease = governor.map(|g| g.acquire(demand(&[b])));
+            self.run_sequential(b, values, env, c)?;
+        }
+        Ok(())
+    }
+
+    /// Execute the whole schedule with persistent per-lane delegate
+    /// workers (see [`DelegateWorker`]).  Dependency-safe handoff goes
+    /// through the shared value store: a lane job's outputs merge
+    /// right before the first wave that consumes them (`overlap`) or
+    /// at its own layer's end (barrier-join ablation), and every lane
+    /// drains before this returns.
+    fn run_overlapped(
+        &self,
+        schedules: &[LayerSchedule],
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+        pl: &PlacementPlan,
+        overlap: bool,
+        c: &Counters,
+    ) -> anyhow::Result<LaneTotals> {
+        let nb = self.plan.branches.len();
+        let num_lanes = pl
+            .delegated()
+            .filter_map(|b| pl.lane_of(b))
+            .max()
+            .map(|m| m + 1)
+            .expect("run_overlapped requires delegated branches");
+        // lanes that actually receive jobs from *these* schedules
+        let mut used = vec![false; num_lanes];
+        for ls in schedules {
+            for b in ls.all() {
+                if let Some(l) = pl.lane_of(b) {
+                    used[l] = true;
+                }
+            }
+        }
+        // delegated predecessors per branch: the merge points a
+        // consumer must wait for before it may read the store
+        let mut preds_del: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        for d in pl.delegated() {
+            for &cns in &self.branch_succs[d] {
+                preds_del[cns].push(d);
+            }
+        }
+        // ONE lease covers the whole co-executing run: the max over
+        // layers of (in-flight staging + CPU-wave peak), held from
+        // before the first dispatch until after the final drain.
+        // Staging is leased per lane job from dispatch to merge
+        // (§3.3): jobs keep their host-visible staging across layer
+        // boundaries, so a per-layer lease would leave that staging
+        // unleased in the windows between layers (and during the final
+        // drain) — the §3.3 "never smuggle memory past the budget"
+        // invariant demands the lease outlive every job.  One lease
+        // per thread also keeps the governor deadlock-free.  This
+        // mirrors `Pipeline::peak_placed_demand`, the figure serving
+        // leases per in-flight batch.  Ungoverned runs (the §3.4
+        // segment path holds its own lease and passes governor: None
+        // once per segment per decode step) skip the accounting
+        // entirely.
+        let _lease = governor.map(|g| {
+            let inflight: Vec<u64> = if overlap {
+                crate::sched::placed_inflight_staging_from(&self.branch_succs, pl, schedules)
+            } else {
+                schedules
+                    .iter()
+                    .map(|ls| {
+                        ls.all()
+                            .filter(|&b| pl.is_delegated(b))
+                            .map(|b| pl.staging_bytes[b])
+                            .sum()
+                    })
+                    .collect()
+            };
+            let run_demand = schedules
+                .iter()
+                .zip(&inflight)
+                .map(|(ls, &infl)| crate::sched::placed_layer_demand(&self.mems, pl, ls, infl))
+                .max()
+                .unwrap_or(0);
+            g.acquire(run_demand)
+        });
+        std::thread::scope(|scope| -> anyhow::Result<LaneTotals> {
+            let (res_tx, res_rx) = std::sync::mpsc::channel::<LaneMsg>();
+            let mut job_tx: Vec<Option<std::sync::mpsc::Sender<usize>>> = Vec::new();
+            for (lane, &u) in used.iter().enumerate() {
+                if !u {
+                    job_tx.push(None);
                     continue;
                 }
-                self.run_wave(&cpu, values, env, c)?;
+                let (tx, rx) = std::sync::mpsc::channel::<usize>();
+                let client = self.pool.map(|p| p.client());
+                let results = res_tx.clone();
+                DelegateWorker::spawn(scope, self, lane, rx, results, values, env, client, c);
+                job_tx.push(Some(tx));
             }
-            for &b in &ls.sequential {
-                if delegated.contains(&b) {
-                    continue;
+            drop(res_tx);
+            let mut st = LaneSt::new(nb, num_lanes);
+            for ls in schedules {
+                // Dispatch this layer's *ready* lane jobs first so they
+                // overlap the CPU waves below (and, with `overlap`, the
+                // next layers' waves too).  A lane job that consumes an
+                // earlier job's still-pending output is deferred past
+                // the waves instead of blocking the whole layer on the
+                // accelerator (head-of-line) — its merge-then-dispatch
+                // happens after the CPU work, the earliest point that
+                // doesn't stall independent waves.
+                let mut deferred: Vec<(usize, usize)> = Vec::new();
+                for b in ls.all() {
+                    let Some(lane) = pl.lane_of(b) else { continue };
+                    if preds_del[b].iter().any(|&d| st.pending[d]) {
+                        deferred.push((b, lane));
+                        continue;
+                    }
+                    dispatch_job(&mut st, &job_tx, b, lane)?;
                 }
-                self.run_sequential(b, values, env, c)?;
+                for wave in &ls.waves {
+                    let cpu: Vec<usize> =
+                        wave.iter().copied().filter(|&b| !pl.is_delegated(b)).collect();
+                    if cpu.is_empty() {
+                        continue;
+                    }
+                    // first-consumer merge point: block only on the
+                    // delegated predecessors this wave actually reads
+                    for &b in &cpu {
+                        st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
+                    }
+                    self.run_wave(&cpu, values, env, c)?;
+                }
+                for &b in &ls.sequential {
+                    if pl.is_delegated(b) {
+                        continue;
+                    }
+                    st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
+                    self.run_sequential(b, values, env, c)?;
+                }
+                for (b, lane) in deferred {
+                    // merge the pending inputs, then hand off (the mpsc
+                    // send orders the store reads after the merges)
+                    st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
+                    dispatch_job(&mut st, &job_tx, b, lane)?;
+                }
+                if !overlap {
+                    // barrier-join ablation: every lane job merges at
+                    // its own layer's end, idling the lanes in between
+                    st.drain(&res_rx, values, pl)?;
+                }
             }
-            // Layer barrier: delegate outputs merge before any
-            // dependent branch (always in a later layer) can start.
-            let outcome = worker.join()?;
-            for (t, v) in outcome.outputs {
-                values.insert(t, v);
-            }
-            Ok((outcome.jobs, outcome.modelled_s))
+            st.drain(&res_rx, values, pl)?;
+            Ok(st.totals)
         })
     }
 
@@ -663,69 +828,215 @@ impl<'a> Engine<'a> {
     }
 }
 
-/// What one delegate-lane run produced.
-struct DelegateOutcome {
-    /// Output values of every delegated branch, merged by the caller
-    /// at the layer barrier.
-    outputs: Vec<(TensorId, Tensor)>,
-    /// Number of branches executed on the lane.
-    jobs: usize,
-    /// Modelled accelerator-busy seconds (placement-plan figures).
-    modelled_s: f64,
+/// Record a lane-job dispatch and hand it to the lane's worker (the
+/// one place the dispatch bookkeeping and the channel handoff live —
+/// the ready and deferred paths of `run_overlapped` share it).
+fn dispatch_job(
+    st: &mut LaneSt,
+    job_tx: &[Option<std::sync::mpsc::Sender<usize>>],
+    b: usize,
+    lane: usize,
+) -> anyhow::Result<()> {
+    st.dispatch(b, lane);
+    job_tx[lane]
+        .as_ref()
+        .expect("job for an unused lane")
+        .send(b)
+        .map_err(|_| anyhow::anyhow!("delegate lane {lane} died"))
 }
 
-/// The async accelerator lane: a dedicated thread that executes a
-/// layer's delegated branches *serially* (one accelerator queue, as a
-/// real NNAPI delegate presents) while the CPU fallback waves run
-/// concurrently on the main path — the paper's co-execution claim made
-/// real in the engine.
+/// One finished lane job, reported back to the dispatching thread.
+struct LaneMsg {
+    branch: usize,
+    lane: usize,
+    out: anyhow::Result<Vec<(TensorId, Tensor)>>,
+}
+
+/// Aggregate delegate-lane statistics of one run.
+#[derive(Default)]
+struct LaneTotals {
+    jobs: usize,
+    modelled_s: f64,
+    stalls: usize,
+    gaps: usize,
+}
+
+/// Dispatcher-side lane bookkeeping: which jobs are still in flight,
+/// per-lane occupancy (for the idle-gap metric) and the running
+/// totals.  Results are absorbed lazily — only when a consumer, a
+/// barrier, or the final drain actually needs them — so the idle-gap
+/// count reflects lanes *provably* observed empty (deterministic on a
+/// single lane; multi-lane counts can vary with cross-lane arrival
+/// order, since a blocking settle absorbs whatever message lands
+/// first — see [`ExecStats::lane_gaps`]).
+struct LaneSt {
+    pending: Vec<bool>,
+    pending_n: usize,
+    /// Jobs dispatched to each lane and not yet absorbed.
+    inflight: Vec<usize>,
+    /// Lanes that have received at least one job.
+    ran: Vec<bool>,
+    totals: LaneTotals,
+}
+
+impl LaneSt {
+    fn new(num_branches: usize, num_lanes: usize) -> Self {
+        Self {
+            pending: vec![false; num_branches],
+            pending_n: 0,
+            inflight: vec![0; num_lanes],
+            ran: vec![false; num_lanes],
+            totals: LaneTotals::default(),
+        }
+    }
+
+    /// Record a dispatch (the caller sends the job right after).
+    fn dispatch(&mut self, b: usize, lane: usize) {
+        if self.inflight[lane] == 0 && self.ran[lane] {
+            // every earlier job on this lane completed *and merged*
+            // before new work arrived: the lane provably idled
+            self.totals.gaps += 1;
+        }
+        self.ran[lane] = true;
+        self.inflight[lane] += 1;
+        self.pending[b] = true;
+        self.pending_n += 1;
+    }
+
+    /// Merge one finished job into the store.
+    fn absorb(
+        &mut self,
+        msg: LaneMsg,
+        values: &Values,
+        pl: &PlacementPlan,
+    ) -> anyhow::Result<()> {
+        for (t, v) in msg.out? {
+            values.insert(t, v);
+        }
+        self.pending[msg.branch] = false;
+        self.pending_n -= 1;
+        self.inflight[msg.lane] -= 1;
+        self.totals.jobs += 1;
+        self.totals.modelled_s += pl.delegate_latency_s[msg.branch];
+        Ok(())
+    }
+
+    /// Absorb results until `done` holds, counting a stall whenever we
+    /// actually have to block on a lane.
+    fn settle<F: Fn(&LaneSt) -> bool>(
+        &mut self,
+        rx: &std::sync::mpsc::Receiver<LaneMsg>,
+        values: &Values,
+        pl: &PlacementPlan,
+        done: F,
+    ) -> anyhow::Result<()> {
+        use std::sync::mpsc::TryRecvError;
+        while !done(self) {
+            match rx.try_recv() {
+                Ok(m) => self.absorb(m, values, pl)?,
+                Err(TryRecvError::Empty) => {
+                    self.totals.stalls += 1;
+                    let m = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("delegate lanes disconnected"))?;
+                    self.absorb(m, values, pl)?;
+                }
+                Err(TryRecvError::Disconnected) => {
+                    anyhow::bail!("delegate lanes disconnected with jobs pending")
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge every still-pending job among `deps` (a consumer's
+    /// delegated predecessors) before the consumer reads the store.
+    fn settle_deps(
+        &mut self,
+        deps: &[usize],
+        rx: &std::sync::mpsc::Receiver<LaneMsg>,
+        values: &Values,
+        pl: &PlacementPlan,
+    ) -> anyhow::Result<()> {
+        if deps.iter().any(|&d| self.pending[d]) {
+            self.settle(rx, values, pl, |st| !deps.iter().any(|&d| st.pending[d]))?;
+        }
+        Ok(())
+    }
+
+    /// Merge everything in flight (layer barrier / end of run).
+    fn drain(
+        &mut self,
+        rx: &std::sync::mpsc::Receiver<LaneMsg>,
+        values: &Values,
+        pl: &PlacementPlan,
+    ) -> anyhow::Result<()> {
+        self.settle(rx, values, pl, |st| st.pending_n == 0)
+    }
+}
+
+/// One persistent accelerator lane: a dedicated thread bound to one
+/// [`AccLane`](crate::device::AccLane) that executes its queued jobs
+/// *serially* (one accelerator queue, as a real NNAPI delegate
+/// presents) while the CPU fallback waves — and, with cross-layer
+/// overlap, the *next layers'* waves — run concurrently on the main
+/// path.  The worker outlives layer barriers: it is spawned once per
+/// [`Engine::run_placed`] call, fed over an mpsc job queue, and
+/// reports each finished branch back to the dispatcher, which merges
+/// the outputs into the shared value store right before their first
+/// consumer.
 ///
 /// The lane computes branch outputs with the same deterministic host
 /// kernels (or the PJRT pool for program-hinted blocks when the `pjrt`
 /// feature is on), so delegated results are bit-identical to CPU
 /// execution; what the *delegate* contributes is modelled timing
-/// ([`SocProfile`](crate::device::SocProfile) dispatch + compute +
-/// transfer, recorded on the
+/// ([`SocProfile`](crate::device::SocProfile) per-lane dispatch +
+/// compute + transfer, recorded on the
 /// [`PlacementPlan`](crate::place::PlacementPlan)) plus real
-/// wall-clock overlap.  Instances are created internally by
-/// [`Engine::run_placed`] for each co-executing layer and joined at
-/// the layer barrier.
-pub struct DelegateWorker<'scope> {
-    handle: std::thread::ScopedJoinHandle<'scope, anyhow::Result<DelegateOutcome>>,
-}
+/// wall-clock overlap.
+pub struct DelegateWorker;
 
-impl<'scope> DelegateWorker<'scope> {
-    /// Spawn the lane for one layer's delegated branches.  `branches`
-    /// must only contain delegate-placed branch ids; outputs are
-    /// returned from [`DelegateWorker::join`], not merged into
-    /// `values`, so the caller controls the layer barrier.
+impl DelegateWorker {
+    /// Spawn one lane worker inside `scope`.  It drains `jobs` until
+    /// the dispatcher drops the sending half, reporting every finished
+    /// branch on `results` (outputs are merged by the dispatcher, not
+    /// here, so the dispatcher controls every merge point).  A
+    /// panicking job is caught and reported as an `Err` message — the
+    /// dispatcher is blocked in `recv()` waiting for this very job, so
+    /// letting the panic kill the thread (while sibling lanes keep
+    /// their sender clones alive) would deadlock the run instead of
+    /// failing it.
     #[allow(clippy::too_many_arguments)]
-    fn spawn<'env>(
+    fn spawn<'scope, 'env>(
         scope: &'scope std::thread::Scope<'scope, 'env>,
         engine: &'env Engine<'env>,
-        placement: &'env PlacementPlan,
-        branches: &'env [usize],
+        lane: usize,
+        jobs: std::sync::mpsc::Receiver<usize>,
+        results: std::sync::mpsc::Sender<LaneMsg>,
         values: &'env Values,
         env: &'env ShapeEnv,
         client: Option<WorkerClient>,
         counters: &'env Counters,
-    ) -> Self {
-        let handle = scope.spawn(move || {
-            let mut outputs = Vec::new();
-            let mut modelled = 0.0f64;
-            for &b in branches {
-                outputs.extend(engine.run_branch(b, values, client.clone(), counters, env)?);
-                modelled += placement.delegate_latency_s[b];
+    ) {
+        scope.spawn(move || {
+            while let Ok(b) = jobs.recv() {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    engine.run_branch(b, values, client.clone(), counters, env)
+                }))
+                .unwrap_or_else(|panic| {
+                    let msg = panic
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "<non-string panic>".into());
+                    Err(anyhow::anyhow!("lane {lane} job {b} panicked: {msg}"))
+                });
+                if results.send(LaneMsg { branch: b, lane, out }).is_err() {
+                    // dispatcher bailed: stop draining
+                    break;
+                }
             }
-            Ok(DelegateOutcome { outputs, jobs: branches.len(), modelled_s: modelled })
         });
-        Self { handle }
-    }
-
-    /// Wait for the lane to drain and take its outcome (consumes the
-    /// worker — one join per layer).
-    fn join(self) -> anyhow::Result<DelegateOutcome> {
-        self.handle.join().expect("delegate worker panicked")
     }
 }
 
@@ -998,6 +1309,33 @@ mod tests {
             st_del.cpu_branch_runs + st_del.delegate_jobs,
             st_cpu.cpu_branch_runs,
             "every branch still executes exactly once"
+        );
+    }
+
+    #[test]
+    fn barrier_join_matches_overlap_bit_for_bit() {
+        // the overlap knob moves merge points, never values: first-
+        // consumer merges and layer-barrier joins must produce the
+        // same store and the same job counts
+        let g = crate::models::micro::fallback_pipeline(3, 3, 3, 128, 6);
+        let soc = crate::device::SocProfile::pixel6();
+        let cm = CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX };
+        let p = partition(&g, &cm);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let engine = Engine::new(&g, &p, &plan, None);
+        let s = schedules(&g, &p, &plan, 2);
+        let auto = crate::place::assign(&g, &p, &plan, &soc, crate::place::PlacePolicy::Auto);
+        assert!(auto.num_delegated() >= 2, "every stage trunk should delegate");
+        let (v_overlap, st_overlap) = engine.run_placed_opts(&s, &auto, None, true).unwrap();
+        let (v_barrier, st_barrier) = engine.run_placed_opts(&s, &auto, None, false).unwrap();
+        assert_eq!(v_overlap.checksum(), v_barrier.checksum());
+        assert_eq!(st_overlap.delegate_jobs, st_barrier.delegate_jobs);
+        assert_eq!(st_overlap.cpu_branch_runs, st_barrier.cpu_branch_runs);
+        assert!(
+            st_overlap.lane_gaps <= st_barrier.lane_gaps,
+            "overlap may only remove idle-lane gaps ({} > {})",
+            st_overlap.lane_gaps,
+            st_barrier.lane_gaps
         );
     }
 }

@@ -9,9 +9,10 @@
 //!   management ([`memory`]), resource-constrained parallel scheduling
 //!   ([`sched`]) with a process-wide memory governor
 //!   ([`sched::MemoryGovernor`]), runtime subgraph control for dynamic
-//!   models ([`ctrl`], §3.4), heterogeneous device placement with
-//!   async delegate co-execution ([`place`],
-//!   [`exec::DelegateWorker`]), plus the substrates it needs: a graph
+//!   models ([`ctrl`], §3.4), multi-lane heterogeneous device
+//!   placement with cross-layer delegate co-execution ([`place`],
+//!   [`device::AccLane`], [`exec::DelegateWorker`]), plus the
+//!   substrates it needs: a graph
 //!   IR ([`graph`]), a model zoo ([`models`]), simulated edge SoCs
 //!   ([`device`]), a discrete-event executor ([`sim`]), baseline
 //!   frameworks ([`baselines`]), a real PJRT execution engine

@@ -234,10 +234,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let (placement, demand, exec) = parallax::serve::placed_pipeline_executor(pipe, 7);
             server.register_with_demand(model.slug(), demand, exec);
             println!(
-                "registered {:<12} placement: {} delegated branch(es), demand {:.2} MB \
-                 (incl. {:.1} KB staging)",
+                "registered {:<12} placement: {} delegated branch(es) on {} lane(s), \
+                 demand {:.2} MB (incl. {:.1} KB staging)",
                 model.slug(),
                 placement.num_delegated(),
+                placement.num_lanes_used(),
                 demand as f64 / 1e6,
                 placement.total_staging_bytes() as f64 / 1e3
             );

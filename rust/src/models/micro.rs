@@ -143,6 +143,128 @@ pub fn fallback_heavy(chains: usize, chain_len: usize, dim: usize, trunk_len: us
     g
 }
 
+/// [`fallback_heavy`] with several independent trunks — the multi-lane
+/// co-execution profile: `trunks` delegate-eligible matmul chains (each
+/// its own region, so each becomes its own delegated branch) run in one
+/// Branch-Layer next to the GELU fallback chains.  On a multi-lane
+/// `SocProfile` the placement spreads the trunks across accelerator
+/// queues, so a 2-lane device really does run two trunks concurrently
+/// while the CPU chains execute in waves.
+pub fn fallback_heavy_lanes(
+    trunks: usize,
+    chains: usize,
+    chain_len: usize,
+    dim: usize,
+    trunk_len: usize,
+) -> Graph {
+    let mut g = Graph::new("fallback_heavy_lanes");
+    let mut tails = Vec::new();
+    for k in 0..trunks {
+        let mut t = g.tensor(&[dim, dim], &format!("trunk{k}_in"));
+        for i in 0..trunk_len {
+            let w = g.tensor(&[dim, dim], &format!("trunk{k}_w{i}"));
+            let o = g.tensor(&[dim, dim], &format!("trunk{k}_t{i}"));
+            g.add_node(format!("trunk{k}_mm{i}"), OpKind::MatMul, vec![t, w], vec![o]);
+            t = o;
+        }
+        tails.push(t);
+    }
+    for c in 0..chains {
+        let mut x = g.tensor(&[dim * dim], &format!("chain{c}_in"));
+        for j in 0..chain_len {
+            let o = g.tensor(&[dim * dim], &format!("chain{c}_t{j}"));
+            g.add_node(format!("fallback{c}_{j}"), OpKind::Gelu, vec![x], vec![o]);
+            x = o;
+        }
+        tails.push(x);
+    }
+    let merged = g.tensor(&[dim * dim * (chains + trunks)], "merged");
+    g.add_node("merge", OpKind::Concat, tails, vec![merged]);
+    g
+}
+
+/// Staged co-execution pipeline — the cross-layer overlap profile.
+/// `stages` stages each hold a delegate-eligible matmul trunk plus
+/// `chains` GELU fallback chains; the chains feed the next stage
+/// through a concat→split mixer (kept on the CPU), while every trunk's
+/// output is consumed only by the *final* merge.  So a trunk dispatched
+/// in stage `s` has its first consumer many layers later: a barrier-
+/// join executor idles the accelerator at every stage boundary, while
+/// cross-layer overlap keeps the lane busy straight through the next
+/// stages' CPU waves — exactly the gap `benches/heterogeneous.rs`'s
+/// overlap ablation measures.
+pub fn fallback_pipeline(
+    stages: usize,
+    chains: usize,
+    chain_len: usize,
+    dim: usize,
+    trunk_len: usize,
+) -> Graph {
+    let mut g = Graph::new("fallback_pipeline");
+    let mut trunk_tails: Vec<TensorId> = Vec::new();
+    let mut chain_heads: Vec<TensorId> =
+        (0..chains).map(|c| g.tensor(&[dim * dim], &format!("s0_chain{c}_in"))).collect();
+    // stage-0 trunk feeds from its own source; later trunks feed from
+    // the previous stage's mixer through a CPU Gelu gate, so their
+    // dispatch depends on CPU work, never on an in-flight lane job
+    let mut trunk_feed: Option<TensorId> = None;
+    for s in 0..stages {
+        let mut t = match trunk_feed {
+            None => g.tensor(&[dim, dim], "trunk0_in"),
+            Some(feed) => {
+                let gated = g.tensor(&[dim * dim], &format!("s{s}_trunk_gate"));
+                g.add_node(format!("s{s}_gate"), OpKind::Gelu, vec![feed], vec![gated]);
+                let shaped = g.tensor(&[dim, dim], &format!("s{s}_trunk_in"));
+                g.add_node(format!("s{s}_reshape"), OpKind::Reshape, vec![gated], vec![shaped]);
+                shaped
+            }
+        };
+        for i in 0..trunk_len {
+            let w = g.tensor(&[dim, dim], &format!("s{s}_trunk_w{i}"));
+            let o = g.tensor(&[dim, dim], &format!("s{s}_trunk_t{i}"));
+            g.add_node(format!("s{s}_trunk_mm{i}"), OpKind::MatMul, vec![t, w], vec![o]);
+            t = o;
+        }
+        trunk_tails.push(t);
+        let mut chain_tails = Vec::new();
+        for (c, &head) in chain_heads.iter().enumerate() {
+            let mut x = head;
+            for j in 0..chain_len {
+                let o = g.tensor(&[dim * dim], &format!("s{s}_chain{c}_t{j}"));
+                g.add_node(format!("s{s}_fallback{c}_{j}"), OpKind::Gelu, vec![x], vec![o]);
+                x = o;
+            }
+            chain_tails.push(x);
+        }
+        if s + 1 < stages {
+            // mixer: concat the chain tails, split into the next
+            // stage's chain heads plus the next trunk's feed
+            let mixed = g.tensor(&[dim * dim * chains], &format!("s{s}_mixed"));
+            g.add_node(format!("s{s}_mix"), OpKind::Concat, chain_tails, vec![mixed]);
+            let outs: Vec<TensorId> = (0..=chains)
+                .map(|c| g.tensor(&[dim * dim], &format!("s{s}_split{c}")))
+                .collect();
+            g.add_node(
+                format!("s{s}_split"),
+                OpKind::Split { ways: chains + 1 },
+                vec![mixed],
+                outs.clone(),
+            );
+            trunk_feed = Some(outs[chains]);
+            chain_heads = outs[..chains].to_vec();
+        } else {
+            // last stage: chains merge straight into the final concat
+            chain_heads = chain_tails;
+        }
+    }
+    let mut final_in = trunk_tails;
+    final_in.extend(chain_heads);
+    let n_in = final_in.len();
+    let merged = g.tensor(&[dim * dim * n_in], "merged");
+    g.add_node("merge", OpKind::Concat, final_in, vec![merged]);
+    g
+}
+
 /// If-gated arms: a predicate-driven `If` barrier emits two arm tokens,
 /// each feeding a chain of `arm_len` ops, merged by a `Maximum` select.
 /// At runtime only one arm is live — the §3.4 subgraph-control path
@@ -261,6 +383,41 @@ mod tests {
             if n.name.starts_with("fallback") {
                 assert!(p.is_cpu(n.id), "{} must fall back", n.name);
             }
+        }
+    }
+
+    #[test]
+    fn fallback_heavy_lanes_has_one_region_per_trunk() {
+        let g = fallback_heavy_lanes(3, 2, 4, 32, 3);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        assert_eq!(g.num_nodes(), 3 * 3 + 2 * 4 + 1);
+        let p = crate::partition::partition(
+            &g,
+            &crate::partition::CostModel { min_ops: 3, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        assert_eq!(p.regions.len(), 3, "each trunk is its own delegate region");
+    }
+
+    #[test]
+    fn fallback_pipeline_trunks_merge_only_at_the_end() {
+        let stages = 3;
+        let g = fallback_pipeline(stages, 2, 3, 32, 3);
+        assert!(g.validate().is_empty(), "{:?}", g.validate());
+        let p = crate::partition::partition(
+            &g,
+            &crate::partition::CostModel { min_ops: 3, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        assert_eq!(p.regions.len(), stages, "one trunk region per stage");
+        // every trunk tail is consumed by the final merge only
+        let merge = g.nodes().iter().find(|n| n.name == "merge").unwrap();
+        for s in 0..stages {
+            let tail = g
+                .tensors()
+                .iter()
+                .find(|t| t.label == format!("s{s}_trunk_t2"))
+                .map(|t| t.id)
+                .unwrap();
+            assert_eq!(g.consumers(tail), vec![merge.id], "stage {s} trunk tail");
         }
     }
 

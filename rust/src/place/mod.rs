@@ -6,36 +6,53 @@
 //! every wave on host CPU threads, delegate regions included.  This
 //! module closes that sim-vs-exec gap.  Given a Branch-Layer plan and a
 //! [`SocProfile`], [`assign`] gives every branch a [`Placement`] — CPU
-//! thread pool or accelerator delegate — by minimising the modelled
-//! latency from the profile's parameters:
+//! thread pool or one of the SoC's accelerator *lanes*
+//! ([`AccLane`](crate::device::AccLane): TPU, GPU, DSP — concurrent
+//! delegate queues) — by minimising the modelled latency from the
+//! profile's parameters:
 //!
 //! ```text
-//!   t_cpu(b)      = Σ_units max(F / R_cpu, B / (share · B_bw))
-//!   t_delegate(b) = Σ_regions (L_dispatch + F / (R_acc · util) + B_boundary / B_bw)
-//!                 + Σ_glue    F / R_cpu
+//!   t_cpu(b)         = Σ_units max(F / R_cpu, B / (share · B_bw))
+//!   t_delegate(b, l) = Σ_regions (L_l + F / (R_l · util_l) + B_boundary / B_l)
+//!                    + Σ_glue    F / R_cpu
 //! ```
 //!
 //! the same Appendix-B terms the `sim` timing model and the
 //! [`CostModel`](crate::partition::CostModel) thresholds are built
-//! from.  A branch is delegated only when `t_delegate < t_cpu` *and*
-//! it is delegate-safe: it contains a delegate region and carries no
+//! from, evaluated per lane.  A branch is delegated only when some
+//! *reachable* lane's `t_delegate < t_cpu` *and* the branch is
+//! delegate-safe: it contains a delegate region and carries no
 //! `OpClass::Dynamic` operator or dynamically-shaped tensor — dynamic
 //! work always falls back to the CPU pool, which is what keeps the
 //! §3.4 segmented path's barrier segments host-side by construction.
+//! Among the lanes that beat the CPU, [`assign`] load-balances by
+//! accumulated modelled busy time, so a two-lane SoC splits delegated
+//! branches across its queues instead of serialising them onto one.
+//!
+//! Reachability is a hard gate, not a cost: a lane the runtime cannot
+//! drive (`AccLane::reachable == false`, folding the old
+//! `SocProfile::nnapi` flag — the P30 Pro's accelerator) yields
+//! `INFINITY` from [`lane_delegate_latency`] whatever its modelled
+//! rates, so placement can never target hardware the runtime cannot
+//! reach.
 //!
 //! The plan also prices what delegation *costs the host*: each
 //! delegated branch needs host-visible staging buffers for delegate
 //! I/O (the region boundary tensors that cross the host↔accelerator
-//! interface).  [`sched::placed_layer_demand`](crate::sched::placed_layer_demand)
-//! folds those staging bytes into the governor lease of every layer
-//! that co-executes, so offloading never becomes a way to smuggle
-//! memory past the §3.3 budget.
+//! interface), held from dispatch until the branch's outputs merge at
+//! its first consumer.
+//! [`sched::placed_layer_demand`](crate::sched::placed_layer_demand)
+//! (fed by [`sched::placed_inflight_staging`](crate::sched::placed_inflight_staging))
+//! folds those in-flight staging bytes into the governor lease of
+//! every layer a lane job spans, so offloading never becomes a way to
+//! smuggle memory past the §3.3 budget.
 //!
 //! Downstream consumers:
 //! * [`exec::Engine::run_placed`](crate::exec::Engine::run_placed) —
-//!   executes delegated branches on an async
-//!   [`DelegateWorker`](crate::exec::DelegateWorker) lane that
-//!   overlaps wall-clock with the CPU fallback waves;
+//!   executes delegated branches on persistent per-lane
+//!   [`DelegateWorker`](crate::exec::DelegateWorker) threads that
+//!   overlap wall-clock with the CPU fallback waves *across* layer
+//!   barriers;
 //! * [`ctrl::SegmentedEngine::with_placement`](crate::ctrl::SegmentedEngine::with_placement)
 //!   — dynamic models: resolved dynamic segments stay on CPU, static
 //!   neighbours may be delegated;
@@ -56,14 +73,14 @@
 //! let p = partition(&g, &CostModel::from_profile(&soc));
 //! let plan = branch::plan(&g, &p, DEFAULT_BETA);
 //! let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
-//! // the heavy matmul trunk goes to the delegate, fallback chains stay CPU
+//! // the heavy matmul trunk goes to a delegate lane, fallback chains stay CPU
 //! assert!(placed.num_delegated() >= 1);
 //! let forced = place::assign(&g, &p, &plan, &soc, PlacePolicy::ForceCpu);
 //! assert!(forced.assignment.iter().all(|&pl| pl == Placement::CpuPool));
 //! ```
 
 use crate::branch::{BranchPlan, Unit};
-use crate::device::SocProfile;
+use crate::device::{AccLane, SocProfile};
 use crate::flops;
 use crate::graph::{Graph, OpClass};
 use crate::partition::Partition;
@@ -75,15 +92,17 @@ use crate::partition::Partition;
 pub enum Placement {
     /// Host CPU thread pool (the classic wave path).
     CpuPool,
-    /// Accelerator delegate, executed on the async delegate lane.
-    Delegate,
+    /// Accelerator delegate, executed on the given lane's async worker
+    /// (an index into [`SocProfile::lanes`]).
+    Delegate(usize),
 }
 
 /// How [`assign`] decides placements.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacePolicy {
     /// Minimise modelled latency: delegate exactly the delegate-safe
-    /// branches whose modelled accelerator time beats their CPU time.
+    /// branches for which some reachable lane beats their CPU time,
+    /// load-balanced across lanes by accumulated modelled busy time.
     Auto,
     /// Force everything onto the CPU pool — the baseline configuration
     /// whose execution is bit-identical to the classic
@@ -100,8 +119,9 @@ pub struct PlacementPlan {
     pub assignment: Vec<Placement>,
     /// Modelled single-core CPU latency per branch, seconds.
     pub cpu_latency_s: Vec<f64>,
-    /// Modelled delegate latency per branch, seconds
-    /// (`f64::INFINITY` for branches that cannot delegate).
+    /// Modelled delegate latency per branch, seconds: on its assigned
+    /// lane for delegated branches, the best reachable lane otherwise
+    /// (`f64::INFINITY` for branches that cannot delegate at all).
     pub delegate_latency_s: Vec<f64>,
     /// Host-visible staging bytes for delegate I/O per branch (region
     /// boundary tensors); 0 for CPU-placed branches.
@@ -109,8 +129,11 @@ pub struct PlacementPlan {
 }
 
 impl PlacementPlan {
-    /// Placement with every branch on the CPU pool (no modelling).
-    pub fn cpu_only(num_branches: usize) -> Self {
+    /// The one constructor every plan starts from — all-CPU, no
+    /// modelled figures.  [`PlacementPlan::cpu_only`] and [`assign`]
+    /// both build on this, so the per-branch vectors can never drift
+    /// between the two paths.
+    fn blank(num_branches: usize) -> Self {
         Self {
             assignment: vec![Placement::CpuPool; num_branches],
             cpu_latency_s: vec![0.0; num_branches],
@@ -119,23 +142,58 @@ impl PlacementPlan {
         }
     }
 
-    /// Is branch `b` assigned to the accelerator delegate?
+    /// Placement with every branch on the CPU pool (no modelling).
+    pub fn cpu_only(num_branches: usize) -> Self {
+        Self::blank(num_branches)
+    }
+
+    /// Is branch `b` assigned to an accelerator lane?
     pub fn is_delegated(&self, b: usize) -> bool {
-        self.assignment[b] == Placement::Delegate
+        matches!(self.assignment[b], Placement::Delegate(_))
+    }
+
+    /// The lane branch `b` is assigned to, if delegated.
+    pub fn lane_of(&self, b: usize) -> Option<usize> {
+        match self.assignment[b] {
+            Placement::Delegate(l) => Some(l),
+            Placement::CpuPool => None,
+        }
     }
 
     /// Number of delegated branches.
     pub fn num_delegated(&self) -> usize {
-        self.assignment.iter().filter(|&&p| p == Placement::Delegate).count()
+        (0..self.assignment.len()).filter(|&b| self.is_delegated(b)).count()
     }
 
-    /// Branch ids assigned to the delegate, ascending.
+    /// Branch ids assigned to a delegate lane, ascending.
     pub fn delegated(&self) -> impl Iterator<Item = usize> + '_ {
-        self.assignment
-            .iter()
-            .enumerate()
-            .filter(|(_, &p)| p == Placement::Delegate)
-            .map(|(b, _)| b)
+        (0..self.assignment.len()).filter(move |&b| self.is_delegated(b))
+    }
+
+    /// Number of distinct lanes this plan actually uses.
+    pub fn num_lanes_used(&self) -> usize {
+        let mut seen: Vec<usize> = self.delegated().filter_map(|b| self.lane_of(b)).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        seen.len()
+    }
+
+    /// Delegated-branch count per lane, padded to at least `lanes`
+    /// entries (a device's full lane roster) — the eval table's lane
+    /// distribution column.
+    pub fn lane_job_counts(&self, lanes: usize) -> Vec<usize> {
+        let width = self
+            .delegated()
+            .filter_map(|b| self.lane_of(b))
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0)
+            .max(lanes);
+        let mut counts = vec![0usize; width];
+        for b in self.delegated() {
+            counts[self.lane_of(b).expect("delegated branch has a lane")] += 1;
+        }
+        counts
     }
 
     /// Total host-visible staging bytes of the delegated branches.
@@ -179,21 +237,24 @@ pub fn cpu_latency(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize, soc: &
         .sum()
 }
 
-/// Modelled delegate latency of a branch: per region
-/// `L + F/(R_acc·util) + B_boundary/B_bw` (Appendix B); CPU glue units
-/// inside the branch are charged exactly as [`cpu_latency`] charges
-/// them — `max(F/R_cpu, B/(share·B_bw))` — so the two alternatives
-/// price identical host work identically and the comparison is never
-/// biased by the glue.  `INFINITY` when the branch holds no delegate
-/// region.
-pub fn delegate_latency(
+/// Modelled delegate latency of a branch on one specific lane: per
+/// region `L_l + F/(R_l·util_l) + B_boundary/B_l` (Appendix B per
+/// lane); CPU glue units inside the branch are charged exactly as
+/// [`cpu_latency`] charges them — `max(F/R_cpu, B/(share·B_bw))` — so
+/// the two alternatives price identical host work identically and the
+/// comparison is never biased by the glue.  `INFINITY` when the branch
+/// holds no delegate region **or the lane is unreachable** — the
+/// runtime must never be told to delegate to hardware it cannot drive,
+/// however fast the lane's modelled rates are.
+pub fn lane_delegate_latency(
     g: &Graph,
     p: &Partition,
     plan: &BranchPlan,
     b: usize,
     soc: &SocProfile,
+    lane: &AccLane,
 ) -> f64 {
-    if !plan.branches[b].has_delegate {
+    if !plan.branches[b].has_delegate || !lane.reachable {
         return f64::INFINITY;
     }
     let bw = soc.mem_bw * CPU_BW_SHARE;
@@ -204,9 +265,7 @@ pub fn delegate_latency(
             Unit::Region(ri) => {
                 let f = plan.unit_graph.flops[u] as f64;
                 let bnd = flops::boundary_bytes(g, &p.regions[*ri]) as f64;
-                soc.acc_dispatch_s
-                    + f / (soc.acc_flops * soc.acc_utilization)
-                    + bnd / soc.mem_bw
+                lane.dispatch_s + f / lane.effective_flops() + bnd / lane.mem_bw
             }
             Unit::Cpu(id) => {
                 let f = plan.unit_graph.flops[u] as f64;
@@ -214,6 +273,22 @@ pub fn delegate_latency(
             }
         })
         .sum()
+}
+
+/// Best modelled delegate latency of a branch over the device's
+/// *reachable* lanes (the one-lane view of [`lane_delegate_latency`]).
+/// `INFINITY` when the branch holds no delegate region or no lane is
+/// reachable — an nnapi-false device can never look delegatable.
+pub fn delegate_latency(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    b: usize,
+    soc: &SocProfile,
+) -> f64 {
+    soc.available_lanes()
+        .map(|(_, lane)| lane_delegate_latency(g, p, plan, b, soc, lane))
+        .fold(f64::INFINITY, f64::min)
 }
 
 /// Host-visible staging bytes a delegated branch needs: the boundary
@@ -230,10 +305,11 @@ pub fn staging_bytes(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> u
         .sum()
 }
 
-/// Can this branch execute on the delegate at all?  Requires a delegate
-/// region and forbids `OpClass::Dynamic` operators and dynamic shapes
-/// anywhere in the branch (NNAPI-style static requirement — dynamic
-/// work is exactly what the paper's fallback story keeps on the CPU).
+/// Can this branch execute on a delegate lane at all?  Requires a
+/// delegate region and forbids `OpClass::Dynamic` operators and dynamic
+/// shapes anywhere in the branch (NNAPI-style static requirement —
+/// dynamic work is exactly what the paper's fallback story keeps on the
+/// CPU).
 pub fn delegate_safe(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> bool {
     plan.branches[b].has_delegate
         && plan.branch_nodes(g, p, b).iter().all(|&id| {
@@ -244,8 +320,12 @@ pub fn delegate_safe(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> b
 /// Assign every branch of a plan a [`Placement`] for one device.
 ///
 /// Under [`PlacePolicy::Auto`] a branch is delegated iff it is
-/// [`delegate_safe`] and its modelled delegate latency beats its
-/// modelled CPU latency; [`PlacePolicy::ForceCpu`] pins everything to
+/// [`delegate_safe`] and some *reachable* lane's modelled delegate
+/// latency beats its modelled CPU latency; among the lanes that beat
+/// the CPU, the branch goes to the one with the least accumulated
+/// modelled busy time (ties: faster lane, then lower index), so a
+/// multi-queue SoC spreads delegated branches instead of piling them
+/// onto the fastest lane.  [`PlacePolicy::ForceCpu`] pins everything to
 /// the CPU pool (the bit-identical baseline).  The modelled latencies
 /// and staging bytes are recorded on the returned plan so executors
 /// and benches can report the decision basis.
@@ -257,21 +337,38 @@ pub fn assign(
     policy: PlacePolicy,
 ) -> PlacementPlan {
     let nb = plan.branches.len();
-    let mut out = PlacementPlan {
-        assignment: vec![Placement::CpuPool; nb],
-        cpu_latency_s: vec![0.0; nb],
-        delegate_latency_s: vec![f64::INFINITY; nb],
-        staging_bytes: vec![0; nb],
-    };
+    let mut out = PlacementPlan::blank(nb);
+    let mut busy = vec![0.0f64; soc.lanes.len()];
     for b in 0..nb {
         out.cpu_latency_s[b] = cpu_latency(g, p, plan, b, soc);
         if !delegate_safe(g, p, plan, b) {
             continue;
         }
-        out.delegate_latency_s[b] = delegate_latency(g, p, plan, b, soc);
-        if policy == PlacePolicy::Auto && out.delegate_latency_s[b] < out.cpu_latency_s[b] {
-            out.assignment[b] = Placement::Delegate;
-            out.staging_bytes[b] = staging_bytes(g, p, plan, b);
+        let mut best: Option<(usize, f64)> = None; // least-busy lane beating the CPU
+        let mut best_lat = f64::INFINITY; // best lane latency overall (reporting)
+        for (l, lane) in soc.lanes.iter().enumerate() {
+            let lat = lane_delegate_latency(g, p, plan, b, soc, lane);
+            best_lat = best_lat.min(lat);
+            if lat >= out.cpu_latency_s[b] {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bl, blat)) => {
+                    busy[l] < busy[bl] || (busy[l] == busy[bl] && lat < blat)
+                }
+            };
+            if better {
+                best = Some((l, lat));
+            }
+        }
+        out.delegate_latency_s[b] = best.map(|(_, lat)| lat).unwrap_or(best_lat);
+        if policy == PlacePolicy::Auto {
+            if let Some((l, lat)) = best {
+                out.assignment[b] = Placement::Delegate(l);
+                out.staging_bytes[b] = staging_bytes(g, p, plan, b);
+                busy[l] += lat;
+            }
         }
     }
     out
@@ -301,6 +398,8 @@ mod tests {
             assert!(plan.branches[b].has_delegate);
             assert!(placed.staging_bytes[b] > 0, "delegate I/O needs staging");
             assert!(placed.delegate_latency_s[b] < placed.cpu_latency_s[b]);
+            let lane = placed.lane_of(b).expect("delegated branch carries a lane");
+            assert!(soc.lanes[lane].reachable, "assigned lane must be reachable");
         }
         assert!(placed.total_staging_bytes() > 0);
     }
@@ -315,6 +414,7 @@ mod tests {
         assert_eq!(placed.num_delegated(), 0);
         assert!(placed.assignment.iter().all(|&pl| pl == Placement::CpuPool));
         assert_eq!(placed.total_staging_bytes(), 0);
+        assert_eq!(placed.num_lanes_used(), 0);
     }
 
     #[test]
@@ -333,9 +433,77 @@ mod tests {
     }
 
     #[test]
+    fn unreachable_device_never_delegates() {
+        // Regression for the nnapi-reachability bug: the P30 Pro's
+        // accelerator is runtime-unreachable, yet the heavy fallback
+        // trunk's modelled delegate time *beats* its CPU time — before
+        // the reachability gate this graph delegated on p30.  Placement
+        // must keep everything on the CPU and report the lane as
+        // un-delegatable.
+        let g = micro::fallback_heavy(6, 24, 448, 4);
+        let soc = SocProfile::p30_pro();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        // the modelled rates alone would say "delegate": compute the
+        // raw lane figure with reachability ignored
+        let b = (0..plan.branches.len())
+            .find(|&b| plan.branches[b].has_delegate)
+            .expect("trunk branch");
+        let mut ghost = soc.lanes[0].clone();
+        ghost.reachable = true;
+        let raw = lane_delegate_latency(&g, &p, &plan, b, &soc, &ghost);
+        let cpu = cpu_latency(&g, &p, &plan, b, &soc);
+        assert!(raw < cpu, "premise: modelled rates alone favour the delegate");
+        // ...but the reachability gate wins
+        assert!(lane_delegate_latency(&g, &p, &plan, b, &soc, &soc.lanes[0]).is_infinite());
+        assert!(delegate_latency(&g, &p, &plan, b, &soc).is_infinite());
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert_eq!(placed.num_delegated(), 0, "unreachable hardware must never be a target");
+    }
+
+    #[test]
+    fn fast_but_unreachable_profile_never_delegates() {
+        // An nnapi-false profile with *fast* modelled rates (the exact
+        // hypothetical from the bug report): every lane unreachable,
+        // rates better than pixel6's TPU.
+        let mut soc = SocProfile::pixel6();
+        soc.nnapi = false;
+        for lane in &mut soc.lanes {
+            lane.flops *= 4.0;
+            lane.dispatch_s /= 4.0;
+            lane.reachable = false;
+        }
+        let g = micro::fallback_heavy(4, 4, 128, 6);
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert_eq!(placed.num_delegated(), 0);
+        for b in 0..plan.branches.len() {
+            assert!(placed.delegate_latency_s[b].is_infinite());
+        }
+    }
+
+    #[test]
+    fn two_lane_device_balances_delegated_branches() {
+        // two independent heavy trunks: the least-busy balancing rule
+        // must split them across pixel6's TPU + GPU lanes rather than
+        // serialise both onto the fastest queue
+        let g = micro::fallback_heavy_lanes(2, 2, 4, 128, 6);
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        assert!(p.regions.len() >= 2, "two trunks, two regions");
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert_eq!(placed.num_delegated(), 2, "both trunks delegate");
+        assert_eq!(placed.num_lanes_used(), 2, "busy-time balancing spreads lanes");
+        let counts = placed.lane_job_counts(soc.lanes.len());
+        assert_eq!(counts, vec![1, 1]);
+    }
+
+    #[test]
     fn high_dispatch_device_keeps_small_regions_on_cpu() {
         // a modest trunk: worth offloading on the TPU-class pixel6,
-        // not through the P30 Pro's 1.1 ms OpenCL dispatch path
+        // never on the P30 Pro whose only lane is runtime-unreachable
         let g = micro::fallback_heavy(2, 3, 48, 2);
         let p = partition(&g, &loose());
         let plan = branch::plan(&g, &p, DEFAULT_BETA);
@@ -345,7 +513,7 @@ mod tests {
             slow.num_delegated() <= fast.num_delegated(),
             "higher dispatch cost must never delegate more"
         );
-        assert_eq!(slow.num_delegated(), 0, "48³ matmuls lose to 1.1 ms dispatch");
+        assert_eq!(slow.num_delegated(), 0, "p30's lanes are unreachable");
     }
 
     #[test]

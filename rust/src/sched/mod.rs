@@ -227,30 +227,33 @@ pub fn schedule_governed(
     schedule(plan, mems, gov.budget(), cfg)
 }
 
-/// Governor demand of one co-executing layer under a heterogeneous
-/// placement (`crate::place`): the peak CPU-wave branch demand **plus**
-/// the host-visible staging buffers of every delegated branch in the
-/// layer.
+/// Governor demand of one layer under a heterogeneous placement
+/// (`crate::place`): the peak CPU-wave branch demand **plus**
+/// `inflight_staging` — the host-visible delegate-I/O staging of every
+/// lane job in flight while this layer runs (its own dispatches *and*
+/// jobs from earlier layers whose outputs have not merged yet; compute
+/// the per-layer figure with [`placed_inflight_staging`]).
 ///
-/// Delegated branches hold no host arenas, but their delegate-I/O
-/// staging stays resident for the whole layer while the accelerator
-/// lane is in flight — so offloading can never smuggle memory past the
-/// §3.3 budget.  A `has_delegate` branch that placement kept on the
-/// CPU counts at its full M_i (its arena is real on the host).
-/// [`Engine::run_placed`](crate::exec::Engine::run_placed) leases this
-/// figure once per layer;
+/// Delegated branches hold no host arenas, but their staging buffers
+/// stay resident from dispatch until their outputs merge at the first
+/// consumer — with cross-layer overlap that can be several layers
+/// later, so offloading (on any number of lanes) can never smuggle
+/// memory past the §3.3 budget.  A `has_delegate` branch that
+/// placement kept on the CPU counts at its full M_i (its arena is real
+/// on the host).
+/// [`Engine::run_placed`](crate::exec::Engine::run_placed) leases the
+/// max of this figure over all layers once per run, held from before
+/// the first dispatch until the final drain — so in-flight staging is
+/// never resident outside a lease, even in the windows between layers;
 /// [`SegmentedEngine::with_placement`](crate::ctrl::SegmentedEngine::with_placement)
-/// folds the same staging term into its per-segment residency demand.
+/// folds the same in-flight staging term into its per-segment
+/// residency demand.
 pub fn placed_layer_demand(
     mems: &[BranchMemory],
     placement: &crate::place::PlacementPlan,
     ls: &LayerSchedule,
+    inflight_staging: u64,
 ) -> u64 {
-    let staging: u64 = ls
-        .all()
-        .filter(|&b| placement.is_delegated(b))
-        .map(|b| placement.staging_bytes[b])
-        .sum();
     let mut peak = 0u64;
     for wave in &ls.waves {
         let sum: u64 = wave
@@ -265,7 +268,59 @@ pub fn placed_layer_demand(
             peak = peak.max(mems[b].total() as u64);
         }
     }
-    staging + peak
+    inflight_staging + peak
+}
+
+/// Per-layer in-flight delegate-I/O staging under cross-layer overlap:
+/// a lane job dispatched at layer `i` holds its host-visible staging
+/// until its outputs merge at its first consumer's layer (the last
+/// layer of `schedules` when no consumer is scheduled — graph outputs
+/// merge at the final drain).  `out[i]` is the staging of every job
+/// whose dispatch→merge span covers layer `i`; feed it to
+/// [`placed_layer_demand`] so multi-lane offload with overlap still
+/// can't smuggle memory past the §3.3 budget.
+pub fn placed_inflight_staging(
+    plan: &BranchPlan,
+    placement: &crate::place::PlacementPlan,
+    schedules: &[LayerSchedule],
+) -> Vec<u64> {
+    placed_inflight_staging_from(&plan.branch_succs(), placement, schedules)
+}
+
+/// [`placed_inflight_staging`] against a precomputed successor map
+/// ([`BranchPlan::branch_succs`]) — the plan is immutable, so hot
+/// callers (the engine, which runs once per segment per decode step)
+/// compute the successors once and reuse them here.
+pub fn placed_inflight_staging_from(
+    succs: &[Vec<usize>],
+    placement: &crate::place::PlacementPlan,
+    schedules: &[LayerSchedule],
+) -> Vec<u64> {
+    let n = schedules.len();
+    let mut out = vec![0u64; n];
+    if n == 0 || placement.num_delegated() == 0 {
+        return out;
+    }
+    let mut index_of: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+    for (i, ls) in schedules.iter().enumerate() {
+        for b in ls.all() {
+            index_of.insert(b, i);
+        }
+    }
+    for (i, ls) in schedules.iter().enumerate() {
+        for d in ls.all().filter(|&b| placement.is_delegated(b)) {
+            let merge = succs[d]
+                .iter()
+                .filter_map(|c| index_of.get(c).copied())
+                .min()
+                .unwrap_or(n - 1)
+                .max(i);
+            for slot in out.iter_mut().take(merge + 1).skip(i) {
+                *slot += placement.staging_bytes[d];
+            }
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -120,12 +120,15 @@ pub fn pipeline_executor(
 
 /// [`pipeline_executor`] with the per-model device placement chosen at
 /// register time: [`crate::place::assign`] decides which branches run
-/// on the accelerator for this pipeline's SoC, and the returned demand
-/// is the placement-aware branch-peak
+/// on which accelerator lane for this pipeline's SoC (load-balanced
+/// across the profile's [`AccLane`](crate::device::AccLane)s;
+/// unreachable lanes are never targets), and the returned demand is
+/// the placement-aware branch-peak
 /// ([`Pipeline::peak_placed_demand`](crate::baselines::Pipeline::peak_placed_demand))
-/// — delegated branches lease their host-visible staging instead of a
-/// host arena.  Returns the placement plan too so callers can log the
-/// decision (`parallax serve` prints it per model).
+/// — delegated branches lease their host-visible staging, held in
+/// flight from dispatch to first-consumer merge, instead of a host
+/// arena.  Returns the placement plan too so callers can log the
+/// decision (`parallax serve` prints it per model, lanes included).
 ///
 /// The placement also gates the *simulated* execution mode: when it
 /// delegates nothing (e.g. a high-dispatch device rejects every

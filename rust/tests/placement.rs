@@ -5,9 +5,14 @@
 //! * CPU-forced placement is bit-identical to the classic `Engine::run`
 //! * delegated runs produce identical outputs with strictly fewer
 //!   CPU-wave branch executions
-//! * placement never assigns `OpClass::Dynamic` work to the delegate
-//! * governed placed runs never exceed the budget with the delegated
-//!   branches' host-visible staging buffers included in the lease
+//! * placement never assigns `OpClass::Dynamic` work to a delegate lane
+//!   and never targets an unreachable lane
+//! * 2-lane runs are bit-identical to 1-lane and CPU-forced runs
+//! * cross-layer overlap merges lane outputs before their first
+//!   consumer (no read-before-merge — overlap, barrier-join and
+//!   CPU-forced runs all agree bit for bit)
+//! * governed placed runs never exceed the budget with every in-flight
+//!   lane job's host-visible staging included in its layers' leases
 
 use parallax::branch::{self, DEFAULT_BETA};
 use parallax::ctrl::SegmentedEngine;
@@ -18,7 +23,9 @@ use parallax::memory::branch_memories;
 use parallax::models::micro;
 use parallax::partition::{partition, CostModel};
 use parallax::place::{self, PlacePolicy, Placement, PlacementPlan};
-use parallax::sched::{self, placed_layer_demand, MemoryGovernor, SchedCfg};
+use parallax::sched::{
+    self, placed_inflight_staging, placed_layer_demand, MemoryGovernor, SchedCfg,
+};
 use parallax::util::prop;
 
 fn loose() -> CostModel {
@@ -26,20 +33,29 @@ fn loose() -> CostModel {
 }
 
 /// A placement that force-delegates every delegate-safe branch,
-/// whatever the latency model says — exercises the execution paths
-/// even on graphs too small for the Auto policy to bother offloading.
+/// round-robined across the device's reachable lanes, whatever the
+/// latency model says — exercises the execution paths even on graphs
+/// too small for the Auto policy to bother offloading.
 fn delegate_all(
     g: &Graph,
     p: &parallax::partition::Partition,
     plan: &branch::BranchPlan,
     soc: &SocProfile,
 ) -> PlacementPlan {
+    let lanes: Vec<usize> = soc.available_lanes().map(|(i, _)| i).collect();
+    assert!(!lanes.is_empty(), "delegate_all needs a reachable lane");
     let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    let mut k = 0usize;
     for b in 0..plan.branches.len() {
         if place::delegate_safe(g, p, plan, b) {
-            pl.assignment[b] = Placement::Delegate;
+            let lane = lanes[k % lanes.len()];
+            pl.assignment[b] = Placement::Delegate(lane);
             pl.staging_bytes[b] = place::staging_bytes(g, p, plan, b);
-            pl.delegate_latency_s[b] = place::delegate_latency(g, p, plan, b, soc);
+            // charge the lane the job actually runs on, so modelled
+            // acc-busy stats line up with the assignment
+            pl.delegate_latency_s[b] =
+                place::lane_delegate_latency(g, p, plan, b, soc, &soc.lanes[lane]);
+            k += 1;
         }
     }
     pl
@@ -113,8 +129,42 @@ fn delegated_outputs_identical_with_fewer_cpu_wave_runs() {
 }
 
 #[test]
-fn prop_placement_never_delegates_dynamic_work() {
-    prop::check("no dynamic on delegate", 40, |rng| {
+fn two_lane_run_bit_identical_to_one_lane_and_cpu_forced() {
+    // two independent trunks the Auto policy spreads across pixel6's
+    // TPU + GPU lanes; truncating the profile to one lane must change
+    // nothing but the lane schedule, and CPU-forcing must reproduce
+    // the classic engine — all four stores bit-identical.
+    let g = micro::fallback_heavy_lanes(2, 3, 4, 128, 6);
+    let soc2 = SocProfile::pixel6();
+    let mut soc1 = SocProfile::pixel6();
+    soc1.lanes.truncate(1);
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    let two = place::assign(&g, &p, &plan, &soc2, PlacePolicy::Auto);
+    let one = place::assign(&g, &p, &plan, &soc1, PlacePolicy::Auto);
+    assert_eq!(two.num_delegated(), 2, "both trunks delegate on the 2-lane profile");
+    assert_eq!(two.num_lanes_used(), 2, "busy-time balancing uses both lanes");
+    assert_eq!(one.num_delegated(), 2, "trunks still beat the CPU on one lane");
+    assert_eq!(one.num_lanes_used(), 1);
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let (v_classic, _) = engine.run(&s).unwrap();
+    let (v_forced, _) = engine.run_placed(&s, &forced, None).unwrap();
+    let (v_one, st_one) = engine.run_placed(&s, &one, None).unwrap();
+    let (v_two, st_two) = engine.run_placed(&s, &two, None).unwrap();
+    assert_eq!(v_classic.checksum(), v_forced.checksum());
+    assert_eq!(v_forced.checksum(), v_one.checksum(), "1-lane changed results");
+    assert_eq!(v_one.checksum(), v_two.checksum(), "2-lane changed results");
+    assert_eq!(st_one.delegate_jobs, 2);
+    assert_eq!(st_two.delegate_jobs, 2);
+}
+
+#[test]
+fn prop_placement_never_delegates_dynamic_work_or_unreachable_lanes() {
+    prop::check("no dynamic / no unreachable lane", 40, |rng| {
         let g = match rng.range(0, 4) {
             0 => micro::mixed(),
             1 => micro::gated(rng.range(2, 6)),
@@ -125,12 +175,26 @@ fn prop_placement_never_delegates_dynamic_work() {
             }
         };
         let socs = [SocProfile::pixel6, SocProfile::p30_pro, SocProfile::redmi_k50];
-        let soc = socs[rng.range(0, 3)]();
+        let mut soc = socs[rng.range(0, 3)]();
+        // randomly knock out lanes: unreachable hardware must never be
+        // a placement target whatever the modelled rates say
+        for lane in &mut soc.lanes {
+            if rng.chance(0.3) {
+                lane.reachable = false;
+                lane.flops *= 8.0;
+                lane.dispatch_s /= 8.0;
+            }
+        }
         let p = partition(&g, &loose());
         let plan = branch::plan(&g, &p, DEFAULT_BETA);
         let placed = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
         for b in placed.delegated() {
             assert!(plan.branches[b].has_delegate, "branch {b} has no region");
+            let lane = placed.lane_of(b).unwrap();
+            assert!(
+                soc.lanes[lane].reachable,
+                "branch {b} delegated to unreachable lane {lane}"
+            );
             for id in plan.branch_nodes(&g, &p, b) {
                 assert_ne!(
                     g.node(id).kind.class(),
@@ -151,7 +215,7 @@ fn prop_placement_never_delegates_dynamic_work() {
 #[test]
 fn prop_zoo_placement_keeps_dynamic_on_cpu() {
     // the real zoo under the paper's cost model: whatever the device,
-    // no dynamic operator may reach the delegate
+    // no dynamic operator may reach a delegate lane
     for kind in [
         parallax::models::ModelKind::WhisperTiny,
         parallax::models::ModelKind::Yolov8n,
@@ -171,27 +235,91 @@ fn prop_zoo_placement_keeps_dynamic_on_cpu() {
 }
 
 #[test]
-fn prop_governed_placed_run_respects_budget_with_staging() {
-    let g = micro::fallback_heavy(4, 3, 32, 3);
+fn cross_layer_overlap_merges_before_first_consumer() {
+    // staged pipeline: every trunk's first consumer is the *final*
+    // merge, layers away from its dispatch.  If the overlap path ever
+    // let a consumer read the store before its lane job merged, the
+    // consumer would read the engine's synthesized stand-in and the
+    // checksum would diverge from the CPU-forced run — so three-way
+    // bit-identity (overlap / barrier-join / CPU-forced) pins the
+    // merge-before-first-consumer contract.
+    let g = micro::fallback_pipeline(3, 3, 3, 64, 4);
+    let soc = SocProfile::pixel6();
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let mems = branch_memories(&g, &p, &plan);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    let placement = delegate_all(&g, &p, &plan, &soc);
+    assert!(placement.num_delegated() >= 3, "one trunk per stage must delegate");
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let (v_forced, _) = engine.run_placed(&s, &forced, None).unwrap();
+    let (v_overlap, st_overlap) = engine.run_placed_opts(&s, &placement, None, true).unwrap();
+    let (v_barrier, st_barrier) = engine.run_placed_opts(&s, &placement, None, false).unwrap();
+    assert_eq!(
+        v_forced.checksum(),
+        v_overlap.checksum(),
+        "overlap read a value before its merge"
+    );
+    assert_eq!(v_overlap.checksum(), v_barrier.checksum());
+    assert_eq!(st_overlap.delegate_jobs, placement.num_delegated());
+    assert_eq!(st_barrier.delegate_jobs, placement.num_delegated());
+    assert!(
+        st_overlap.lane_gaps <= st_barrier.lane_gaps,
+        "overlap may only remove idle-lane gaps ({} > {})",
+        st_overlap.lane_gaps,
+        st_barrier.lane_gaps
+    );
+}
+
+#[test]
+fn prop_governed_placed_run_respects_budget_with_staging_in_flight() {
+    // multi-lane, multi-stage: lane jobs from earlier layers are still
+    // in flight while later layers lease — their staging must be in
+    // every spanned layer's lease, and the ledger must stay within
+    // budget (or record a degraded-serial grant)
+    let g = micro::fallback_pipeline(3, 2, 3, 48, 3);
     let soc = SocProfile::pixel6();
     let p = partition(&g, &loose());
     let plan = branch::plan(&g, &p, DEFAULT_BETA);
     let mems = branch_memories(&g, &p, &plan);
     let engine = Engine::new(&g, &p, &plan, None);
     let placement = delegate_all(&g, &p, &plan, &soc);
-    assert!(placement.num_delegated() >= 1);
+    assert!(placement.num_delegated() >= 3);
     let cfg = SchedCfg { max_threads: 3, margin: 0.4 };
     let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
-    // staging must be part of every co-executing layer's lease
-    for ls in &s {
-        let d = placed_layer_demand(&mems, &placement, ls);
-        let staging: u64 = ls
+    // every layer's lease must cover the staging of every lane job in
+    // flight during it — own dispatches and carried-over ones
+    let inflight = placed_inflight_staging(&plan, &placement, &s);
+    for (li, ls) in s.iter().enumerate() {
+        let own: u64 = ls
             .all()
             .filter(|&b| placement.is_delegated(b))
             .map(|b| placement.staging_bytes[b])
             .sum();
-        assert!(d >= staging, "layer demand {d} below its staging {staging}");
+        assert!(
+            inflight[li] >= own,
+            "layer {li}: in-flight staging {} below its own dispatches {}",
+            inflight[li],
+            own
+        );
+        let d = placed_layer_demand(&mems, &placement, ls, inflight[li]);
+        assert!(d >= inflight[li], "layer demand {d} below its in-flight staging");
     }
+    // a trunk dispatched early is still in flight in later layers:
+    // total in-flight bytes must exceed the per-layer own staging
+    // somewhere (the cross-layer carry is real)
+    let carried = inflight.iter().sum::<u64>()
+        > s.iter()
+            .map(|ls| {
+                ls.all()
+                    .filter(|&b| placement.is_delegated(b))
+                    .map(|b| placement.staging_bytes[b])
+                    .sum::<u64>()
+            })
+            .sum::<u64>();
+    assert!(carried, "no lane job ever spanned a layer boundary");
     prop::check("placed leases within budget", 20, |rng| {
         let budget = rng.range_u64(1, 1 << 22);
         let gov = MemoryGovernor::new(budget);
@@ -241,10 +369,10 @@ fn segmented_engine_with_placement_matches_classic_segmented() {
 #[test]
 fn prop_placed_demand_never_loses_bytes() {
     // Delegating a branch may move its bytes from the CPU-peak term
-    // (M_i) to the staging term, but never lose them from the lease:
-    // removing the delegated branches lowers the CPU peak by at most
-    // their summed M_i, so  d_all + Σ M_i(delegated) ≥ d_none +
-    // Σ staging(delegated)  must hold for every layer.
+    // (M_i) to the in-flight staging term, but never lose them from
+    // the lease: removing the delegated branches lowers the CPU peak
+    // by at most their summed M_i, so  d_all + Σ M_i(delegated) ≥
+    // d_none + Σ staging(delegated)  must hold for every layer.
     prop::check("placed demand accounting", 50, |rng| {
         let g = micro::fallback_heavy(rng.range(2, 6), 3, 32, rng.range(3, 6));
         let soc = SocProfile::pixel6();
@@ -255,9 +383,11 @@ fn prop_placed_demand_never_loses_bytes() {
         let s = sched::schedule(&plan, &mems, rng.range_u64(1, 1 << 30), &cfg);
         let none = PlacementPlan::cpu_only(plan.branches.len());
         let all = delegate_all(&g, &p, &plan, &soc);
-        for ls in &s {
-            let d_none = placed_layer_demand(&mems, &none, ls);
-            let d_all = placed_layer_demand(&mems, &all, ls);
+        let inflight_none = placed_inflight_staging(&plan, &none, &s);
+        let inflight_all = placed_inflight_staging(&plan, &all, &s);
+        for (li, ls) in s.iter().enumerate() {
+            let d_none = placed_layer_demand(&mems, &none, ls, inflight_none[li]);
+            let d_all = placed_layer_demand(&mems, &all, ls, inflight_all[li]);
             let staging_all: u64 =
                 ls.all().filter(|&b| all.is_delegated(b)).map(|b| all.staging_bytes[b]).sum();
             let del_mi: u64 = ls

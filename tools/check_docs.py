@@ -11,7 +11,10 @@ Verifies, over the whole repo:
   4. every `cargo bench --bench <name>` reproduce command in README.md
      and EXPERIMENTS.md, and every backticked bench target in README's
      paper-table -> bench map, names a `[[bench]]` target that exists
-     in Cargo.toml.
+     in Cargo.toml;
+  5. every backticked module path in ARCHITECTURE.md's paper-section ->
+     module map names a real `rust/src/<module>` (the leading path
+     segment must exist as rust/src/<seg>/ or rust/src/<seg>.rs).
 
 Exit code 0 = clean; 1 = dangling references (each printed).
 Run from the repo root: `python3 tools/check_docs.py`.
@@ -64,6 +67,53 @@ def bench_map_rows(readme_text):
         if len(cells) >= 3 and cells[2].startswith("`") and cells[2].endswith("`"):
             rows.append(cells[2].strip("`"))
     return rows
+
+
+MODULE_TOKEN = re.compile(r"`([A-Za-z_][A-Za-z0-9_:]*)`")
+
+
+def module_map_rows(arch_text):
+    """Backticked module tokens from the second column of
+    ARCHITECTURE.md's paper-section -> module map."""
+    tokens = []
+    in_map = False
+    for line in arch_text.splitlines():
+        if line.startswith("##"):
+            in_map = "module map" in line.lower()
+            continue
+        if not in_map or not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.split("|")]
+        # cells[0]/cells[-1] are the empty outer splits; cells[2] is
+        # the Module(s) column (skip the header/separator rows)
+        if len(cells) < 4 or cells[2] in ("Module(s)", "") or set(cells[2]) <= {"-"}:
+            continue
+        tokens.extend(MODULE_TOKEN.findall(cells[2]))
+    return tokens
+
+
+def check_module_map(problems):
+    arch = os.path.join(ROOT, "ARCHITECTURE.md")
+    if not os.path.exists(arch):
+        return
+    tokens = module_map_rows(open(arch, encoding="utf-8").read())
+    if not tokens:
+        problems.append(
+            "ARCHITECTURE.md: paper-section -> module map has no parseable "
+            "module tokens (expected a '## ... module map' table)"
+        )
+        return
+    src = os.path.join(ROOT, "rust", "src")
+    for token in tokens:
+        seg = token.split("::")[0]
+        if not (
+            os.path.isdir(os.path.join(src, seg))
+            or os.path.exists(os.path.join(src, seg + ".rs"))
+        ):
+            problems.append(
+                f"ARCHITECTURE.md: module-map row names `{token}` but "
+                f"rust/src/{seg} does not exist"
+            )
 
 
 def repo_files(exts):
@@ -156,6 +206,9 @@ def main():
                     f"README.md: bench-map row `{target}` names no "
                     f"Cargo.toml [[bench]] target"
                 )
+
+    # 5. ARCHITECTURE.md module-map rows must name real rust/src modules
+    check_module_map(problems)
 
     if problems:
         print("docs-integrity check FAILED:")
