@@ -73,4 +73,54 @@ fn main() {
     });
 
     b.report();
+
+    // -- capture/replay vs the interpreting engine on real micro models:
+    // classic rebuilds per-run arenas/maps and spawns per wave; replay
+    // walks the captured step programs.  Same kernels, bit-identical
+    // outputs — the delta is pure bookkeeping.
+    let mut r = Bench::new("captured replay");
+    let micro: Vec<(&str, parallax::graph::Graph)> = vec![
+        ("chain64", parallax::models::micro::chain(64)),
+        ("parallel6x8", parallax::models::micro::parallel_chains(6, 8)),
+        ("mixed", parallax::models::micro::mixed()),
+    ];
+    let mut ratios = Vec::new();
+    for (name, g) in &micro {
+        let p = partition(
+            g,
+            &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+        );
+        let plan = branch::plan(g, &p, DEFAULT_BETA);
+        let mems = memory::branch_memories(g, &p, &plan);
+        let scfg = SchedCfg { max_threads: 4, margin: 0.4 };
+        let schedules = sched::schedule(&plan, &mems, 1 << 34, &scfg);
+        let engine = parallax::exec::Engine::new(g, &p, &plan, None);
+        let captured =
+            engine.capture(&schedules, &parallax::ctrl::ShapeEnv::unresolved(), None);
+        let (v_classic, _) = engine.run(&schedules).unwrap();
+        let (v_replay, _) = engine.run_replayed(&captured, None).unwrap();
+        assert_eq!(
+            v_classic.checksum(),
+            v_replay.checksum(),
+            "{name}: replay must be bit-identical before it is fast"
+        );
+        r.iter(&format!("classic({name})"), || {
+            black_box(engine.run(&schedules).unwrap());
+        });
+        r.iter(&format!("replay({name})"), || {
+            black_box(engine.run_replayed(&captured, None).unwrap());
+        });
+        let cases = r.cases();
+        let classic = cases[cases.len() - 2].mean_ns;
+        let replay = cases[cases.len() - 1].mean_ns;
+        ratios.push((*name, classic / replay));
+    }
+    r.report();
+    println!();
+    for (name, ratio) in &ratios {
+        println!(
+            "replay speedup {name}: {ratio:.2}x {}",
+            if *ratio >= 2.0 { "(>= 2x target met)" } else { "(below 2x target)" }
+        );
+    }
 }

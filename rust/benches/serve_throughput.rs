@@ -188,4 +188,11 @@ fn main() {
         iso_p99 * 1e3,
         if gov_p99 <= iso_p99 * 1.05 { "OK (no worse at equal offered load)" } else { "REGRESSION" }
     );
+
+    // trajectory record: mean ns per request for both deployments
+    // (what tools/check_bench.py diffs against the committed BENCH file)
+    let mut b = parallax::util::bench::Bench::new("serve_throughput");
+    b.record("isolated_mean_per_request", iso_wall * 1e9 / iso_resp.len() as f64);
+    b.record("governed_mean_per_request", gov_wall * 1e9 / gov_resp.len() as f64);
+    b.report();
 }

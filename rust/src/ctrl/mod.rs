@@ -398,7 +398,7 @@ fn value_hash(t: &Tensor) -> u64 {
 pub fn resolve_barrier(
     g: &Graph,
     id: NodeId,
-    read: impl Fn(TensorId) -> Tensor,
+    read: impl Fn(TensorId) -> Arc<Tensor>,
 ) -> BarrierOutcome {
     let node = g.node(id);
     let mut out = BarrierOutcome::default();
@@ -463,14 +463,20 @@ pub fn dead_nodes(g: &Graph, seeds: &[TensorId]) -> HashSet<NodeId> {
 
 // -------------------------------------------------------- segmented engine
 
-/// A cached per-segment plan: schedules plus the lease they hold.
+/// A cached per-segment plan: schedules, the lease they hold, and the
+/// captured executable form the engine replays — the §3.4 plan cache
+/// is a consumer of the same plan-capture layer the static hot path
+/// uses ([`crate::exec::CapturedPlan`]): a cache hit costs zero
+/// planning *and* zero per-run structure walking.
 struct Entry {
     schedules: Vec<sched::LayerSchedule>,
     demand: u64,
+    captured: crate::exec::CapturedPlan,
 }
 
+#[allow(clippy::too_many_arguments)]
 fn build_entry(
-    plan: &BranchPlan,
+    engine: &Engine<'_>,
     branch_succs: &[Vec<usize>],
     mems: &[BranchMemory],
     seg: &SegmentExec,
@@ -478,7 +484,9 @@ fn build_entry(
     budget: u64,
     cfg: &SchedCfg,
     placement: Option<&PlacementPlan>,
+    env: &ShapeEnv,
 ) -> Entry {
+    let plan = engine.plan;
     // Which branches skip host arena/boundary accounting: with a
     // placement, exactly the delegate-placed ones (their staging is
     // priced below; a `has_delegate` branch forced onto the CPU holds
@@ -544,7 +552,8 @@ fn build_entry(
         }
         peak_transient = peak_transient.max(inflight[li] + layer_arena);
     }
-    Entry { schedules, demand: boundary + peak_transient }
+    let captured = engine.capture(&schedules, env, placement);
+    Entry { schedules, demand: boundary + peak_transient, captured }
 }
 
 fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
@@ -651,7 +660,7 @@ impl<'a> SegmentedEngine<'a> {
             .iter()
             .map(|seg| {
                 Arc::new(build_entry(
-                    plan,
+                    engine,
                     &branch_succs,
                     &max_mems,
                     seg,
@@ -659,6 +668,7 @@ impl<'a> SegmentedEngine<'a> {
                     budget,
                     &cfg,
                     placement.as_ref(),
+                    &ShapeEnv::unresolved(),
                 ))
             })
             .collect();
@@ -840,13 +850,15 @@ impl<'a> SegmentedEngine<'a> {
             // slack is never taken from the process-wide ledger, so
             // co-resident models admit more concurrent waves.
             let _lease = governor.map(|gov| gov.acquire(entry.demand));
-            let s = self.engine.run_waves_placed(
-                &entry.schedules,
+            // Replay the cached capture: a plan-cache hit costs zero
+            // planning and zero structure walking (dynamic output
+            // shapes still resolve through this step's exact env).
+            let s = self.engine.run_captured(
+                &entry.captured,
                 values,
                 None,
                 env,
                 self.placement.as_ref(),
-                true,
             )?;
             merge_stats(&mut stats.exec, s);
             stats.segments_run += 1;
@@ -885,7 +897,7 @@ impl<'a> SegmentedEngine<'a> {
             mems[b] = resolved_branch_memory(g, p, plan, b, &bucketed, &self.max_mems[b]);
         }
         let entry = Arc::new(build_entry(
-            plan,
+            self.engine,
             &self.branch_succs,
             &mems,
             seg,
@@ -893,6 +905,7 @@ impl<'a> SegmentedEngine<'a> {
             self.budget,
             &self.cfg,
             self.placement.as_ref(),
+            &bucketed,
         ));
         cache.insert(key, entry.clone());
         entry
@@ -1067,7 +1080,10 @@ mod tests {
             .find(|n| matches!(n.kind, OpKind::While))
             .unwrap();
         let out = resolve_barrier(&g, beam.id, |t| {
-            Tensor::randn(g.tensor_info(t).shape.iter().map(|d| d.max()).collect(), 7)
+            Arc::new(Tensor::randn(
+                g.tensor_info(t).shape.iter().map(|d| d.max()).collect(),
+                7,
+            ))
         });
         assert_eq!(out.bindings.len(), 1);
         let (sym, ext) = out.bindings[0];

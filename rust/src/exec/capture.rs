@@ -1,0 +1,554 @@
+//! Plan capture & replay: the engine's preallocated hot path.
+//!
+//! The paper's latency story (§4) rests on a request path that does no
+//! per-run planning work.  The interpreting engine still walks the
+//! branch/unit structure, rebuilds a [`BumpArena`] and a scratch map
+//! per branch run, and recomputes every wave's lease demand per layer.
+//! This module hoists all of that to a one-time *capture* (the
+//! capture-then-launch idiom of Opara, PAPERS.md): the first run of a
+//! (model, shape-bucket, placement) triple records a [`CapturedPlan`] —
+//! ordered wave lists, per-wave/per-layer lease demands, per-branch
+//! step programs with pre-resolved read sources and arena layouts
+//! ([`crate::memory::plan_branch`] offsets), and the placed lane
+//! topology — and every later run replays it.
+//!
+//! Replay is bit-identical to the fresh path by construction: both
+//! funnel every host node through the same
+//! [`eval_host_node`](super::eval_host_node) kernel dispatch, read the
+//! same shared [`Values`] store with the same local-first/-then-store/
+//! -then-source resolution, and lease the same demand figures (the
+//! capture records exactly the numbers the fresh path would compute).
+//! What replay *removes* is bookkeeping: no structure walk, no
+//! per-run arena or hash map, no thread spawn for one-branch waves, no
+//! deep copies out of the value store.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use super::{eval_host_node, Counters, Engine, ExecStats, Values};
+use crate::branch::Unit;
+use crate::ctrl::ShapeEnv;
+use crate::graph::{NodeId, OpKind, TensorId};
+use crate::memory::{analyze, plan_branch, ArenaPlan, BumpArena};
+use crate::place::PlacementPlan;
+use crate::runtime::Tensor;
+use crate::sched::LayerSchedule;
+
+/// Deterministic synthesized-weight bank, keyed by source tensor id.
+///
+/// Parallax never inspects weight values (see ARCHITECTURE.md
+/// §Substitutions), so sources are synthesized with a fixed per-tensor
+/// seed.  The bank materialises each tensor once and hands out shared
+/// `Arc`s: repeated reads of the same weight never deep-copy, whether
+/// from the engine, a captured replay, or a standalone
+/// [`CapturedPlan::replay`].
+#[derive(Default)]
+pub struct WeightBank {
+    map: Mutex<HashMap<TensorId, Arc<Tensor>>>,
+}
+
+impl WeightBank {
+    /// The synthesized value for source tensor `t`, materialised on
+    /// first touch at the shape the closure supplies (dynamic dims at
+    /// max — artifact shapes must line up).  The formula is the one
+    /// the engine has always used: seeded `randn`, scaled down so deep
+    /// chains stay numerically tame.
+    pub fn source(&self, t: TensorId, shape: impl FnOnce() -> Vec<usize>) -> Arc<Tensor> {
+        let mut m = self.map.lock().unwrap();
+        Arc::clone(m.entry(t).or_insert_with(|| {
+            let mut w = Tensor::randn(shape(), 0xBEEF ^ t.0 as u64);
+            for x in w.data_mut() {
+                *x *= 0.05;
+            }
+            Arc::new(w)
+        }))
+    }
+}
+
+/// Where a replayed step finds one input — resolved at capture, so
+/// replay does no producer lookups.
+#[derive(Clone, Debug)]
+pub(crate) enum ReadSrc {
+    /// Index into the branch-local produced list (the tensor was
+    /// produced earlier in this same branch).
+    Local(usize),
+    /// The shared store, falling back to the synthesized source bank
+    /// (shape recorded for engine-free replay).
+    Extern { t: TensorId, shape: Vec<usize> },
+}
+
+/// One precompiled host step of a branch program.
+#[derive(Clone, Debug)]
+pub(crate) struct Step {
+    kind: OpKind,
+    ins: Vec<TensorId>,
+    outs: Vec<TensorId>,
+    /// Read source per input, parallel to `ins`.
+    reads: Vec<ReadSrc>,
+    /// Output shapes resolved at capture time, parallel to `outs`.
+    shapes: Vec<Vec<usize>>,
+    /// All outputs statically shaped: `shapes` replays under any env.
+    /// Otherwise the replay re-resolves through its own [`ShapeEnv`]
+    /// (the §3.4 exact-extent path).
+    static_shapes: bool,
+}
+
+/// The captured executable form of one branch: its host steps plus the
+/// arena layout the §3.2 planner assigns its internal activations.
+#[derive(Clone, Debug)]
+pub(crate) struct BranchProgram {
+    steps: Vec<Step>,
+    /// Fused-block members skipped inside this branch (stat parity
+    /// with the interpreting path).
+    n_skipped: usize,
+    /// Peak live arena bytes of the captured execution (the figure the
+    /// fresh path's per-run [`BumpArena`] replay reports).
+    peak_arena: usize,
+    /// §3.2 arena layout for branch-internal activations: planned
+    /// once at capture ([`crate::memory::plan_branch`] offsets), where
+    /// the interpreting path replays alloc/free bookkeeping per run.
+    #[allow(dead_code)]
+    arena: ArenaPlan,
+    /// Every step's outputs are statically shaped.
+    static_shapes: bool,
+}
+
+/// Captured per-layer lease figures, parallel to the layer's schedule:
+/// `waves[i]` is wave `i`'s combined §3.3 peak (0 for empty waves,
+/// which the executor skips before leasing), `sequential[j]` the
+/// j-th spill branch's.
+#[derive(Clone, Debug)]
+pub(crate) struct CapturedLayer {
+    pub(crate) waves: Vec<u64>,
+    pub(crate) sequential: Vec<u64>,
+}
+
+/// Captured lane topology of a placed run (overlap mode): what
+/// `run_overlapped` would otherwise derive from the placement per run.
+#[derive(Clone, Debug)]
+pub(crate) struct CapturedPlaced {
+    /// The ONE run-wide lease figure (max over layers of in-flight
+    /// staging + CPU-wave peak).
+    pub(crate) run_demand: u64,
+    /// Lanes that receive jobs from these schedules.
+    pub(crate) used: Vec<bool>,
+    /// Delegated predecessors per branch — the merge points a consumer
+    /// waits for.
+    pub(crate) preds_del: Vec<Vec<usize>>,
+    pub(crate) num_lanes: usize,
+}
+
+/// An executable capture of one (schedules, shape-env, placement)
+/// triple — see the [module docs](self) for what is recorded and why.
+///
+/// Build one with [`Engine::capture`]; replay it with
+/// [`Engine::run_captured`] (engine-assisted: PJRT blocks, dynamic
+/// shapes, placements) or, when [`CapturedPlan::is_standalone`] holds,
+/// with [`CapturedPlan::replay`] — no engine, graph, or plan borrow
+/// required, which is what lets a registered serving model own its
+/// captured plan outright.
+pub struct CapturedPlan {
+    schedules: Vec<LayerSchedule>,
+    progs: Vec<Option<BranchProgram>>,
+    layers: Vec<CapturedLayer>,
+    placed: Option<CapturedPlaced>,
+    /// Captured under a placement (demands are placement-aware).
+    with_placement: bool,
+    /// Fully self-contained: no placement, no PJRT-block branches, all
+    /// shapes static — replayable without the engine.
+    standalone: bool,
+}
+
+impl CapturedPlan {
+    /// The schedules this plan was captured over (replay runs exactly
+    /// these waves in exactly this order).
+    pub fn schedules(&self) -> &[LayerSchedule] {
+        &self.schedules
+    }
+
+    /// Was this capture taken under a placement?  Replay must pass the
+    /// same placement back.
+    pub fn is_placed(&self) -> bool {
+        self.with_placement
+    }
+
+    /// Can this plan replay without its engine ([`CapturedPlan::replay`])?
+    /// True when nothing in it needs graph or pool context: no
+    /// placement, no PJRT-block branches, every step statically shaped.
+    pub fn is_standalone(&self) -> bool {
+        self.standalone
+    }
+
+    /// Number of branches captured as step programs (branches with
+    /// PJRT blocks fall back to the interpreting path at replay).
+    pub fn num_programs(&self) -> usize {
+        self.progs.iter().filter(|p| p.is_some()).count()
+    }
+
+    /// Peak single lease a replay will request: the max captured
+    /// wave/spill demand (and the run-wide placed figure, if any) —
+    /// what a serving registration quotes as the model's demand.
+    pub fn peak_demand(&self) -> u64 {
+        let classic = self
+            .layers
+            .iter()
+            .flat_map(|cl| cl.waves.iter().chain(&cl.sequential))
+            .copied()
+            .max()
+            .unwrap_or(0);
+        classic.max(self.placed.as_ref().map_or(0, |pp| pp.run_demand))
+    }
+
+    pub(crate) fn prog(&self, b: usize) -> Option<&BranchProgram> {
+        self.progs.get(b).and_then(|p| p.as_ref())
+    }
+
+    pub(crate) fn layer(&self, li: usize) -> &CapturedLayer {
+        &self.layers[li]
+    }
+
+    pub(crate) fn placed(&self) -> Option<&CapturedPlaced> {
+        self.placed.as_ref()
+    }
+
+    /// Engine-free replay for standalone plans (see
+    /// [`CapturedPlan::is_standalone`]): run the captured waves against
+    /// `values`, synthesizing source tensors from `weights`.  Outputs
+    /// are bit-identical to the engine running the same schedules —
+    /// both paths share one kernel dispatch and one source formula.
+    /// Multi-branch waves still execute on scoped threads (branch
+    /// isolation is load-bearing, §3.2); singleton waves run inline.
+    pub fn replay(&self, values: &Values, weights: &WeightBank) -> anyhow::Result<ExecStats> {
+        anyhow::ensure!(
+            self.standalone,
+            "captured plan needs its engine (placement, PJRT blocks, or dynamic shapes)"
+        );
+        let t0 = std::time::Instant::now();
+        let mut stats = ExecStats::default();
+        let mut merge = |out: Vec<(TensorId, Arc<Tensor>)>| {
+            for (t, v) in out {
+                values.insert_arc(t, v);
+            }
+        };
+        let mut run_one = |b: usize, stats: &mut ExecStats| {
+            let prog = self.prog(b).expect("standalone plan has every program");
+            stats.host_ops += prog.steps.len();
+            stats.skipped_fused += prog.n_skipped;
+            stats.peak_arena_bytes = stats.peak_arena_bytes.max(prog.peak_arena);
+            stats.cpu_branch_runs += 1;
+            replay_branch(prog, values, weights)
+        };
+        for ls in &self.schedules {
+            for wave in &ls.waves {
+                match wave.len() {
+                    0 => continue,
+                    1 => {
+                        let out = run_one(wave[0], &mut stats);
+                        merge(out);
+                    }
+                    _ => {
+                        let outs: Vec<Vec<(TensorId, Arc<Tensor>)>> =
+                            std::thread::scope(|scope| {
+                                let handles: Vec<_> = wave
+                                    .iter()
+                                    .map(|&b| {
+                                        let prog = self
+                                            .prog(b)
+                                            .expect("standalone plan has every program");
+                                        scope.spawn(move || replay_branch(prog, values, weights))
+                                    })
+                                    .collect();
+                                handles.into_iter().map(|h| h.join().unwrap()).collect()
+                            });
+                        for &b in wave {
+                            let prog = self.prog(b).unwrap();
+                            stats.host_ops += prog.steps.len();
+                            stats.skipped_fused += prog.n_skipped;
+                            stats.peak_arena_bytes =
+                                stats.peak_arena_bytes.max(prog.peak_arena);
+                            stats.cpu_branch_runs += 1;
+                        }
+                        for out in outs {
+                            merge(out);
+                        }
+                    }
+                }
+            }
+            for &b in &ls.sequential {
+                let out = run_one(b, &mut stats);
+                merge(out);
+            }
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok(stats)
+    }
+}
+
+/// Execute one captured branch program with no engine in sight: steps
+/// in order, reads through the pre-resolved [`ReadSrc`]s, shapes from
+/// the capture.
+fn replay_branch(
+    prog: &BranchProgram,
+    values: &Values,
+    weights: &WeightBank,
+) -> Vec<(TensorId, Arc<Tensor>)> {
+    let mut local: Vec<(TensorId, Arc<Tensor>)> = Vec::new();
+    for step in &prog.steps {
+        let out = eval_host_node(
+            &step.kind,
+            &step.ins,
+            &step.outs,
+            |t| {
+                resolve(step, t, &local, values, |t, shape| {
+                    weights.source(t, || shape.to_vec())
+                })
+            },
+            |i| step.shapes[i].clone(),
+        );
+        local.extend(out);
+    }
+    local
+}
+
+/// Resolve one replay read: local list by captured index, else store,
+/// else synthesized source at the captured shape.  (≤3 inputs per op —
+/// the position scan is a handful of compares.)
+fn resolve(
+    step: &Step,
+    t: TensorId,
+    local: &[(TensorId, Arc<Tensor>)],
+    values: &Values,
+    source: impl Fn(TensorId, &[usize]) -> Arc<Tensor>,
+) -> Arc<Tensor> {
+    let i = step
+        .ins
+        .iter()
+        .position(|&x| x == t)
+        .expect("replay read of a tensor the step does not input");
+    match &step.reads[i] {
+        ReadSrc::Local(ix) => Arc::clone(&local[*ix].1),
+        ReadSrc::Extern { t, shape } => {
+            values.get(*t).unwrap_or_else(|| source(*t, shape))
+        }
+    }
+}
+
+impl<'a> Engine<'a> {
+    /// Capture an executable plan for these schedules under `env` and
+    /// `placement` — the one-time structure walk whose result
+    /// [`Engine::run_captured`] replays.  Capture is static: nothing
+    /// executes.  Per branch it records the step program (read sources
+    /// pre-resolved, output shapes resolved through `env`), replays
+    /// the arena alloc/free bookkeeping once for the peak figure, and
+    /// plans the §3.2 arena layout; per layer it records the §3.3
+    /// lease demands the executor would compute; for a delegating
+    /// placement it records the lane topology and the run-wide lease.
+    ///
+    /// Branches containing PJRT program blocks are left uncaptured —
+    /// replay routes them through the interpreting path (the pool call
+    /// is the cost there, not the bookkeeping).
+    pub fn capture(
+        &self,
+        schedules: &[LayerSchedule],
+        env: &ShapeEnv,
+        placement: Option<&PlacementPlan>,
+    ) -> CapturedPlan {
+        let nb = self.plan.branches.len();
+        let mut appears = vec![false; nb];
+        for ls in schedules {
+            for b in ls.all() {
+                appears[b] = true;
+            }
+        }
+        let mut progs: Vec<Option<BranchProgram>> = (0..nb).map(|_| None).collect();
+        for (b, prog) in progs.iter_mut().enumerate() {
+            if appears[b] {
+                *prog = self.capture_branch(b, env);
+            }
+        }
+        let demand = |wave: &[usize]| match placement {
+            Some(pl) => self.wave_demand_placed(wave, pl),
+            None => self.wave_demand(wave),
+        };
+        let layers = schedules
+            .iter()
+            .map(|ls| CapturedLayer {
+                waves: ls.waves.iter().map(|w| demand(w)).collect(),
+                sequential: ls.sequential.iter().map(|&b| demand(&[b])).collect(),
+            })
+            .collect();
+        let placed = placement.and_then(|pl| {
+            let delegated_here =
+                schedules.iter().any(|ls| ls.all().any(|b| pl.is_delegated(b)));
+            if !delegated_here {
+                return None;
+            }
+            let (num_lanes, used, preds_del) = self.lane_topology(schedules, pl);
+            Some(CapturedPlaced {
+                run_demand: self.overlapped_run_demand(schedules, pl, true),
+                used,
+                preds_del,
+                num_lanes,
+            })
+        });
+        let standalone = placement.is_none()
+            && (0..nb).all(|b| {
+                !appears[b]
+                    || progs[b].as_ref().map_or(false, |p| p.static_shapes)
+            });
+        CapturedPlan {
+            schedules: schedules.to_vec(),
+            progs,
+            layers,
+            placed,
+            with_placement: placement.is_some(),
+            standalone,
+        }
+    }
+
+    /// Capture one branch as a step program, or `None` if it contains
+    /// a PJRT program block.  This walks exactly the node sequence
+    /// [`Engine::run_branch`] would execute and replays its arena
+    /// bookkeeping (alloc per produced tensor, free after the last
+    /// consumer) so the captured peak matches the interpreting path's
+    /// per-run figure.
+    fn capture_branch(&self, b: usize, env: &ShapeEnv) -> Option<BranchProgram> {
+        let mut steps = Vec::new();
+        let mut n_skipped = 0usize;
+        let mut n_local = 0usize;
+        let mut local_ix: HashMap<TensorId, usize> = HashMap::new();
+        let mut arena = BumpArena::new();
+        let mut slots: HashMap<TensorId, usize> = HashMap::new();
+        let mut static_all = true;
+        for &u in &self.plan.branches[b].units {
+            let node_ids: Vec<NodeId> = match &self.plan.unit_graph.units[u] {
+                Unit::Cpu(id) => vec![*id],
+                Unit::Region(ri) => self.partition.regions[*ri].clone(),
+            };
+            for id in node_ids {
+                if self.covered.contains(&id) {
+                    n_skipped += 1;
+                    continue;
+                }
+                if self.blocks.contains_key(&id) {
+                    return None;
+                }
+                let node = self.graph.node(id);
+                let reads = node
+                    .inputs
+                    .iter()
+                    .map(|&t| match local_ix.get(&t) {
+                        Some(&ix) => ReadSrc::Local(ix),
+                        None => ReadSrc::Extern {
+                            t,
+                            shape: self
+                                .graph
+                                .tensor_info(t)
+                                .shape
+                                .iter()
+                                .map(|d| d.max())
+                                .collect(),
+                        },
+                    })
+                    .collect();
+                // which tensors the step produces (multi-output nodes
+                // produce all outputs; single-output just the first —
+                // mirroring the kernel dispatch)
+                let produced: Vec<TensorId> = if node.outputs.len() > 1 {
+                    node.outputs.clone()
+                } else {
+                    vec![node.outputs[0]]
+                };
+                let shapes: Vec<Vec<usize>> = node
+                    .outputs
+                    .iter()
+                    .map(|&t| self.shape_of(t, env))
+                    .collect();
+                static_all &= node
+                    .outputs
+                    .iter()
+                    .all(|&t| !self.graph.tensor_info(t).has_dynamic_dim());
+                for (t, shape) in produced.iter().zip(&shapes) {
+                    let bytes = shape.iter().product::<usize>() * 4;
+                    slots.insert(*t, arena.alloc(bytes));
+                    local_ix.insert(*t, n_local);
+                    n_local += 1;
+                }
+                for &t in &node.inputs {
+                    if let Some(&off) = slots.get(&t) {
+                        let last = self
+                            .graph
+                            .consumers(t)
+                            .iter()
+                            .all(|&c| c.0 <= id.0 || self.covered.contains(&c));
+                        if last {
+                            arena.free(off);
+                            slots.remove(&t);
+                        }
+                    }
+                }
+                steps.push(Step {
+                    kind: node.kind.clone(),
+                    ins: node.inputs.clone(),
+                    outs: node.outputs.clone(),
+                    reads,
+                    shapes,
+                    static_shapes: node
+                        .outputs
+                        .iter()
+                        .all(|&t| !self.graph.tensor_info(t).has_dynamic_dim()),
+                });
+            }
+        }
+        // §3.2 layout, planned once: internal (non-escaping) lifetimes
+        // through the branch planner — the offsets a zero-copy runtime
+        // would hand every replay.
+        let nodes = self.plan.branch_nodes(self.graph, self.partition, b);
+        let lts = analyze(self.graph, &nodes);
+        let internal: Vec<_> = lts.into_iter().filter(|lt| !lt.escapes).collect();
+        Some(BranchProgram {
+            steps,
+            n_skipped,
+            peak_arena: arena.peak_live(),
+            arena: plan_branch(&internal),
+            static_shapes: static_all,
+        })
+    }
+
+    /// Replay one captured branch program inside the engine: same step
+    /// loop as the standalone path, but dynamic output shapes resolve
+    /// through `env` and source synthesis goes through the engine's
+    /// weight bank.  Counter updates mirror [`Engine::run_branch`]
+    /// (one host op per step, skips, the captured arena peak).
+    pub(crate) fn run_branch_captured(
+        &self,
+        prog: &BranchProgram,
+        values: &Values,
+        c: &Counters,
+        env: &ShapeEnv,
+    ) -> anyhow::Result<Vec<(TensorId, Arc<Tensor>)>> {
+        let mut local: Vec<(TensorId, Arc<Tensor>)> = Vec::new();
+        for step in &prog.steps {
+            let read = |t| {
+                resolve(step, t, &local, values, |t, shape| {
+                    self.weights.source(t, || shape.to_vec())
+                })
+            };
+            let out = if step.static_shapes {
+                eval_host_node(&step.kind, &step.ins, &step.outs, read, |i| {
+                    step.shapes[i].clone()
+                })
+            } else {
+                eval_host_node(&step.kind, &step.ins, &step.outs, read, |i| {
+                    self.shape_of(step.outs[i], env)
+                })
+            };
+            local.extend(out);
+        }
+        c.host_ops.fetch_add(prog.steps.len(), Ordering::Relaxed);
+        c.skipped.fetch_add(prog.n_skipped, Ordering::Relaxed);
+        c.peak_arena.fetch_max(prog.peak_arena, Ordering::Relaxed);
+        Ok(local)
+    }
+}

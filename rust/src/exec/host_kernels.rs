@@ -8,6 +8,21 @@
 
 use crate::runtime::Tensor;
 
+/// Column tile of the blocked GEMM (output elements per row chunk).
+const MM_JB: usize = 64;
+/// Inner-dim tile of the blocked GEMM.
+const MM_KB: usize = 64;
+
+/// Blocked/tiled row-major GEMM.
+///
+/// Column (`MM_JB`) and inner-dim (`MM_KB`) tiles keep one `b` panel
+/// and one `out` row chunk cache-resident across the `k` sweep.  Per
+/// output element the `k`-accumulation order is ascending regardless
+/// of the tiling, so results are bit-identical to the naive ascending
+/// triple loop.  Every `a[i][k]` contributes — zeros included — so
+/// kernel latency is data-independent (zero-heavy post-ReLU
+/// activations time the same as dense inputs; no sparsity skew in the
+/// benches).
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (sa, sb) = (a.shape(), b.shape());
     assert_eq!(sa.len(), 2, "matmul lhs must be rank-2");
@@ -17,16 +32,19 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(k, k2, "matmul inner dim mismatch");
     let mut out = vec![0f32; m * n];
     let (da, db) = (a.data(), b.data());
-    for i in 0..m {
-        for kk in 0..k {
-            let av = da[i * k + kk];
-            if av == 0.0 {
-                continue;
-            }
-            let row = &db[kk * n..(kk + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(row) {
-                *o += av * bv;
+    for j0 in (0..n).step_by(MM_JB) {
+        let jl = MM_JB.min(n - j0);
+        for k0 in (0..k).step_by(MM_KB) {
+            let kl = MM_KB.min(k - k0);
+            for i in 0..m {
+                let arow = &da[i * k + k0..i * k + k0 + kl];
+                let orow = &mut out[i * n + j0..i * n + j0 + jl];
+                for (kk, &av) in arow.iter().enumerate() {
+                    let brow = &db[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jl];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
             }
         }
     }
@@ -48,10 +66,29 @@ pub fn binary(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
         a.shape(),
         b.shape()
     );
-    assert_eq!(a.len() % n, 0);
+    binary_bias(a, b.data(), f)
+}
+
+/// Fused elementwise ⊕ trailing-axis bias: one pass over `a` in
+/// row-sized chunks, zipping the bias slice directly — no broadcast
+/// tensor materialised and no per-element index modulo.  Bit-identical
+/// to `f(a[i], bias[i % len])` by construction; this *is* the
+/// trailing-axis path of [`binary`], exposed so the engine can feed a
+/// bias tensor without first cloning it into an `a`-shaped view.
+pub fn binary_bias(a: &Tensor, bias: &[f32], f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert!(!bias.is_empty(), "empty bias");
+    assert_eq!(
+        a.len() % bias.len(),
+        0,
+        "bias length must divide the input: {:?} ⊕ {}",
+        a.shape(),
+        bias.len()
+    );
     let mut out = Vec::with_capacity(a.len());
-    for (i, &x) in a.data().iter().enumerate() {
-        out.push(f(x, b.data()[i % n]));
+    for row in a.data().chunks_exact(bias.len()) {
+        for (&x, &y) in row.iter().zip(bias) {
+            out.push(f(x, y));
+        }
     }
     Tensor::new(a.shape().to_vec(), out)
 }
@@ -198,6 +235,65 @@ mod tests {
         let b = Tensor::new(vec![3], vec![1., 2., 3.]);
         let o = binary(&a, &b, |x, y| x + y);
         assert_eq!(o.data(), &[1., 2., 3., 1., 2., 3.]);
+    }
+
+    /// The naive ascending-k triple loop *without* the old `av == 0.0`
+    /// skip — the reference the blocked kernel must match bit for bit.
+    fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    out[i * n + j] += a.data()[i * k + kk] * b.data()[kk * n + j];
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_bitwise() {
+        // randomized shapes straddling the tile sizes, plus zero-heavy
+        // inputs (post-ReLU style) that the old kernel special-cased
+        for (seed, (m, k, n)) in
+            [(1u64, (3, 5, 7)), (2, (17, 64, 65)), (3, (2, 130, 70)), (4, (65, 65, 64))]
+        {
+            let a = unary(&Tensor::randn(vec![m, k], seed), |x| {
+                if x > 0.5 {
+                    0.0
+                } else {
+                    x
+                }
+            });
+            let b = Tensor::randn(vec![k, n], seed ^ 0xFF);
+            let (got, want) = (matmul(&a, &b), matmul_naive(&a, &b));
+            assert_eq!(got.shape(), want.shape());
+            for (g, w) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "blocked GEMM must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_bias_matches_modulo_reference_bitwise() {
+        // the pre-rewrite trailing-axis path: per-element `i % n` index
+        for (seed, (rows, n)) in [(9u64, (1, 1)), (10, (4, 8)), (11, (7, 33))] {
+            let a = Tensor::randn(vec![rows, n], seed);
+            let b = Tensor::randn(vec![n], seed ^ 0xAB);
+            let f = |x: f32, y: f32| x * 0.75 + y;
+            let reference: Vec<f32> = a
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| f(x, b.data()[i % n]))
+                .collect();
+            let got = binary(&a, &b, f);
+            for (g, w) in got.data().iter().zip(&reference) {
+                assert_eq!(g.to_bits(), w.to_bits(), "row-chunked bias must be bit-identical");
+            }
+        }
     }
 
     #[test]

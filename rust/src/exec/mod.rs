@@ -40,11 +40,14 @@
 //! overlap can be disabled per run ([`Engine::run_placed_opts`]) for
 //! the barrier-join ablation.
 
+pub mod capture;
 pub mod host_kernels;
+
+pub use capture::{CapturedPlan, WeightBank};
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::branch::{BranchPlan, Unit};
 use crate::ctrl::ShapeEnv;
@@ -127,8 +130,9 @@ pub struct Engine<'a> {
     /// immutable): the merge points of the cross-layer delegate
     /// overlap and the spans of the in-flight staging accounting.
     branch_succs: Vec<Vec<usize>>,
-    /// Deterministic synthesized weights, keyed by source tensor id.
-    weights: Mutex<HashMap<TensorId, Tensor>>,
+    /// Deterministic synthesized weights, keyed by source tensor id —
+    /// shared `Arc`s so repeated reads never deep-copy.
+    weights: WeightBank,
     /// Synthesized program weight args, keyed by (program, arg index).
     prog_weights: Mutex<HashMap<(String, usize), Tensor>>,
 }
@@ -206,7 +210,7 @@ impl<'a> Engine<'a> {
             covered,
             mems,
             branch_succs,
-            weights: Mutex::new(HashMap::new()),
+            weights: WeightBank::default(),
             prog_weights: Mutex::new(HashMap::new()),
         }
     }
@@ -237,6 +241,70 @@ impl<'a> Engine<'a> {
         self.blocks.len()
     }
 
+    /// Lane topology of a placed run over these schedules: lane count,
+    /// which lanes actually receive jobs, and each branch's delegated
+    /// predecessors (the merge points a consumer must wait for before
+    /// it may read the store).  Computed per run on the fresh path,
+    /// once at capture on the replay path.
+    fn lane_topology(
+        &self,
+        schedules: &[LayerSchedule],
+        pl: &PlacementPlan,
+    ) -> (usize, Vec<bool>, Vec<Vec<usize>>) {
+        let nb = self.plan.branches.len();
+        let num_lanes = pl
+            .delegated()
+            .filter_map(|b| pl.lane_of(b))
+            .max()
+            .map(|m| m + 1)
+            .expect("lane topology requires delegated branches");
+        let mut used = vec![false; num_lanes];
+        for ls in schedules {
+            for b in ls.all() {
+                if let Some(l) = pl.lane_of(b) {
+                    used[l] = true;
+                }
+            }
+        }
+        let mut preds_del: Vec<Vec<usize>> = vec![Vec::new(); nb];
+        for d in pl.delegated() {
+            for &cns in &self.branch_succs[d] {
+                preds_del[cns].push(d);
+            }
+        }
+        (num_lanes, used, preds_del)
+    }
+
+    /// The ONE lease figure of a placed co-executing run: the max over
+    /// layers of (in-flight lane staging + CPU-wave peak) — see the
+    /// lease comment in [`Engine::run_overlapped`].
+    fn overlapped_run_demand(
+        &self,
+        schedules: &[LayerSchedule],
+        pl: &PlacementPlan,
+        overlap: bool,
+    ) -> u64 {
+        let inflight: Vec<u64> = if overlap {
+            crate::sched::placed_inflight_staging_from(&self.branch_succs, pl, schedules)
+        } else {
+            schedules
+                .iter()
+                .map(|ls| {
+                    ls.all()
+                        .filter(|&b| pl.is_delegated(b))
+                        .map(|b| pl.staging_bytes[b])
+                        .sum()
+                })
+                .collect()
+        };
+        schedules
+            .iter()
+            .zip(&inflight)
+            .map(|(ls, &infl)| crate::sched::placed_layer_demand(&self.mems, pl, ls, infl))
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Resolve a tensor's concrete shape under a [`ShapeEnv`]
     /// (unresolved env = every dynamic dim at max).
     fn shape_of(&self, t: TensorId, env: &ShapeEnv) -> Vec<usize> {
@@ -245,26 +313,17 @@ impl<'a> Engine<'a> {
 
     /// A tensor's current value: the store if present, else the
     /// deterministic synthesised source — what barrier resolvers
-    /// ([`crate::ctrl::resolve_barrier`]) read.
-    pub fn read_value(&self, values: &Values, t: TensorId) -> Tensor {
+    /// ([`crate::ctrl::resolve_barrier`]) read.  Returns a shared
+    /// handle; reading never copies tensor data.
+    pub fn read_value(&self, values: &Values, t: TensorId) -> Arc<Tensor> {
         values.get(t).unwrap_or_else(|| self.source_value(t))
     }
 
     /// Deterministic weight/input for a source tensor (no producer).
-    fn source_value(&self, t: TensorId) -> Tensor {
-        let mut cache = self.weights.lock().unwrap();
-        cache
-            .entry(t)
-            .or_insert_with(|| {
-                let shape = self.graph.tensor_info(t).shape.iter().map(|d| d.max()).collect::<Vec<_>>();
-                // scale down so deep chains stay numerically tame
-                let mut w = Tensor::randn(shape, 0xBEEF ^ t.0 as u64);
-                for x in w.data_mut() {
-                    *x *= 0.05;
-                }
-                w
-            })
-            .clone()
+    fn source_value(&self, t: TensorId) -> Arc<Tensor> {
+        self.weights.source(t, || {
+            self.graph.tensor_info(t).shape.iter().map(|d| d.max()).collect()
+        })
     }
 
     /// Deterministic weight for a program argument slot.
@@ -397,13 +456,83 @@ impl<'a> Engine<'a> {
         placement: Option<&PlacementPlan>,
         overlap: bool,
     ) -> anyhow::Result<ExecStats> {
+        self.run_waves_inner(schedules, values, governor, env, placement, overlap, None)
+    }
+
+    /// Replay a [`CapturedPlan`] against a shared value store — the
+    /// hot-path twin of [`Engine::run_waves_placed`]: same executor
+    /// core, but wave lists, per-wave lease demands, branch step
+    /// programs, arena layouts and lane dispatch order come from the
+    /// capture instead of being recomputed, and singleton waves run
+    /// inline without a thread spawn.  Outputs are bit-identical to
+    /// the freshly planned run.  `placement` must be the plan the
+    /// capture was taken under (pass `None` for CPU-only captures);
+    /// `env` resolves any dynamic output shapes at their exact
+    /// extents, exactly like the un-captured path.
+    pub fn run_captured(
+        &self,
+        cp: &CapturedPlan,
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+        placement: Option<&PlacementPlan>,
+    ) -> anyhow::Result<ExecStats> {
+        debug_assert_eq!(
+            placement.is_some(),
+            cp.is_placed(),
+            "replay placement must match the capture"
+        );
+        self.run_waves_inner(
+            cp.schedules(),
+            values,
+            governor,
+            env,
+            placement,
+            true,
+            Some(cp),
+        )
+    }
+
+    /// One-call captured replay at max shapes: fresh store in, `(store,
+    /// stats)` out — the replay twin of [`Engine::run_governed`].
+    pub fn run_replayed(
+        &self,
+        cp: &CapturedPlan,
+        governor: Option<&MemoryGovernor>,
+    ) -> anyhow::Result<(Values, ExecStats)> {
+        let values = Values::default();
+        let stats =
+            self.run_captured(cp, &values, governor, &ShapeEnv::unresolved(), None)?;
+        Ok((values, stats))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_waves_inner(
+        &self,
+        schedules: &[LayerSchedule],
+        values: &Values,
+        governor: Option<&MemoryGovernor>,
+        env: &ShapeEnv,
+        placement: Option<&PlacementPlan>,
+        overlap: bool,
+        cp: Option<&CapturedPlan>,
+    ) -> anyhow::Result<ExecStats> {
         let t0 = std::time::Instant::now();
         let c = Counters::default();
         let delegated_here = placement
             .map(|pl| schedules.iter().any(|ls| ls.all().any(|b| pl.is_delegated(b))))
             .unwrap_or(false);
         let lanes = if delegated_here {
-            self.run_overlapped(schedules, values, governor, env, placement.unwrap(), overlap, &c)?
+            self.run_overlapped(
+                schedules,
+                values,
+                governor,
+                env,
+                placement.unwrap(),
+                overlap,
+                &c,
+                cp,
+            )?
         } else {
             // Classic path (also the CPU-forced placed path): per-wave
             // admission, holding each wave's combined peak for exactly
@@ -411,8 +540,8 @@ impl<'a> Engine<'a> {
             // demand is placement-aware: a `has_delegate` branch whose
             // offload was rejected executes with a real host arena and
             // must lease it.
-            for ls in schedules {
-                self.run_layer_classic(ls, values, governor, env, placement, &c)?;
+            for (li, ls) in schedules.iter().enumerate() {
+                self.run_layer_classic(ls, values, governor, env, placement, &c, cp, li)?;
             }
             LaneTotals::default()
         };
@@ -430,7 +559,12 @@ impl<'a> Engine<'a> {
         })
     }
 
-    /// Execute one layer with no delegate lanes in play.
+    /// Execute one layer with no delegate lanes in play.  On replay
+    /// (`cp` set) the per-wave lease figures come from the capture
+    /// instead of being recomputed — by construction they are the very
+    /// numbers this function would compute, so governed replays lease
+    /// bit-identical demands.
+    #[allow(clippy::too_many_arguments)]
     fn run_layer_classic(
         &self,
         ls: &LayerSchedule,
@@ -439,21 +573,26 @@ impl<'a> Engine<'a> {
         env: &ShapeEnv,
         placement: Option<&PlacementPlan>,
         c: &Counters,
+        cp: Option<&CapturedPlan>,
+        li: usize,
     ) -> anyhow::Result<()> {
+        let cl = cp.map(|cp| cp.layer(li));
         let demand = |wave: &[usize]| match placement {
             Some(pl) => self.wave_demand_placed(wave, pl),
             None => self.wave_demand(wave),
         };
-        for wave in &ls.waves {
+        for (wi, wave) in ls.waves.iter().enumerate() {
             if wave.is_empty() {
                 continue;
             }
-            let _lease = governor.map(|g| g.acquire(demand(wave)));
-            self.run_wave(wave, values, env, c)?;
+            let _lease = governor
+                .map(|g| g.acquire(cl.map_or_else(|| demand(wave), |cl| cl.waves[wi])));
+            self.run_wave(wave, values, env, c, cp)?;
         }
-        for &b in &ls.sequential {
-            let _lease = governor.map(|g| g.acquire(demand(&[b])));
-            self.run_sequential(b, values, env, c)?;
+        for (si, &b) in ls.sequential.iter().enumerate() {
+            let _lease = governor
+                .map(|g| g.acquire(cl.map_or_else(|| demand(&[b]), |cl| cl.sequential[si])));
+            self.run_sequential(b, values, env, c, cp)?;
         }
         Ok(())
     }
@@ -464,6 +603,7 @@ impl<'a> Engine<'a> {
     /// right before the first wave that consumes them (`overlap`) or
     /// at its own layer's end (barrier-join ablation), and every lane
     /// drains before this returns.
+    #[allow(clippy::too_many_arguments)]
     fn run_overlapped(
         &self,
         schedules: &[LayerSchedule],
@@ -473,31 +613,22 @@ impl<'a> Engine<'a> {
         pl: &PlacementPlan,
         overlap: bool,
         c: &Counters,
+        cp: Option<&CapturedPlan>,
     ) -> anyhow::Result<LaneTotals> {
         let nb = self.plan.branches.len();
-        let num_lanes = pl
-            .delegated()
-            .filter_map(|b| pl.lane_of(b))
-            .max()
-            .map(|m| m + 1)
-            .expect("run_overlapped requires delegated branches");
-        // lanes that actually receive jobs from *these* schedules
-        let mut used = vec![false; num_lanes];
-        for ls in schedules {
-            for b in ls.all() {
-                if let Some(l) = pl.lane_of(b) {
-                    used[l] = true;
-                }
-            }
-        }
-        // delegated predecessors per branch: the merge points a
-        // consumer must wait for before it may read the store
-        let mut preds_del: Vec<Vec<usize>> = vec![Vec::new(); nb];
-        for d in pl.delegated() {
-            for &cns in &self.branch_succs[d] {
-                preds_del[cns].push(d);
-            }
-        }
+        // On replay the lane topology — used lanes, delegated
+        // predecessor sets, the run-wide lease figure — comes from the
+        // capture; it is placement-derived, so recomputing it per run
+        // is pure overhead.
+        let captured_placed = cp.and_then(|cp| cp.placed());
+        let computed;
+        let (num_lanes, used, preds_del): (usize, &[bool], &[Vec<usize>]) =
+            if let Some(pp) = captured_placed {
+                (pp.num_lanes, &pp.used, &pp.preds_del)
+            } else {
+                computed = self.lane_topology(schedules, pl);
+                (computed.0, &computed.1, &computed.2)
+            };
         // ONE lease covers the whole co-executing run: the max over
         // layers of (in-flight staging + CPU-wave peak), held from
         // before the first dispatch until after the final drain.
@@ -514,25 +645,10 @@ impl<'a> Engine<'a> {
         // once per segment per decode step) skip the accounting
         // entirely.
         let _lease = governor.map(|g| {
-            let inflight: Vec<u64> = if overlap {
-                crate::sched::placed_inflight_staging_from(&self.branch_succs, pl, schedules)
-            } else {
-                schedules
-                    .iter()
-                    .map(|ls| {
-                        ls.all()
-                            .filter(|&b| pl.is_delegated(b))
-                            .map(|b| pl.staging_bytes[b])
-                            .sum()
-                    })
-                    .collect()
+            let run_demand = match captured_placed {
+                Some(pp) => pp.run_demand,
+                None => self.overlapped_run_demand(schedules, pl, overlap),
             };
-            let run_demand = schedules
-                .iter()
-                .zip(&inflight)
-                .map(|(ls, &infl)| crate::sched::placed_layer_demand(&self.mems, pl, ls, infl))
-                .max()
-                .unwrap_or(0);
             g.acquire(run_demand)
         });
         std::thread::scope(|scope| -> anyhow::Result<LaneTotals> {
@@ -546,7 +662,9 @@ impl<'a> Engine<'a> {
                 let (tx, rx) = std::sync::mpsc::channel::<usize>();
                 let client = self.pool.map(|p| p.client());
                 let results = res_tx.clone();
-                DelegateWorker::spawn(scope, self, lane, rx, results, values, env, client, c);
+                DelegateWorker::spawn(
+                    scope, self, lane, rx, results, values, env, client, c, cp,
+                );
                 job_tx.push(Some(tx));
             }
             drop(res_tx);
@@ -580,14 +698,14 @@ impl<'a> Engine<'a> {
                     for &b in &cpu {
                         st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
                     }
-                    self.run_wave(&cpu, values, env, c)?;
+                    self.run_wave(&cpu, values, env, c, cp)?;
                 }
                 for &b in &ls.sequential {
                     if pl.is_delegated(b) {
                         continue;
                     }
                     st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
-                    self.run_sequential(b, values, env, c)?;
+                    self.run_sequential(b, values, env, c, cp)?;
                 }
                 for (b, lane) in deferred {
                     // merge the pending inputs, then hand off (the mpsc
@@ -607,28 +725,35 @@ impl<'a> Engine<'a> {
     }
 
     /// Run one parallel wave of CPU branches on scoped threads and
-    /// merge their outputs.
+    /// merge their outputs.  Replay runs singleton waves inline — no
+    /// spawn, no join; the capture's whole point is a bookkeeping-free
+    /// hot path, and a one-branch wave has no parallelism to buy.
     fn run_wave(
         &self,
         wave: &[usize],
         values: &Values,
         env: &ShapeEnv,
         c: &Counters,
+        cp: Option<&CapturedPlan>,
     ) -> anyhow::Result<()> {
-        let results: Vec<anyhow::Result<Vec<(TensorId, Tensor)>>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = wave
-                .iter()
-                .map(|&b| {
-                    let client = self.pool.map(|p| p.client());
-                    scope.spawn(move || self.run_branch(b, values, client, c, env))
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        if cp.is_some() && wave.len() == 1 {
+            return self.run_sequential(wave[0], values, env, c, cp);
+        }
+        let results: Vec<anyhow::Result<Vec<(TensorId, Arc<Tensor>)>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = wave
+                    .iter()
+                    .map(|&b| {
+                        let client = self.pool.map(|p| p.client());
+                        scope.spawn(move || self.exec_branch(b, values, client, c, env, cp))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
         c.cpu_branch_runs.fetch_add(wave.len(), Ordering::Relaxed);
         for r in results {
             for (t, v) in r? {
-                values.insert(t, v);
+                values.insert_arc(t, v);
             }
         }
         Ok(())
@@ -641,14 +766,36 @@ impl<'a> Engine<'a> {
         values: &Values,
         env: &ShapeEnv,
         c: &Counters,
+        cp: Option<&CapturedPlan>,
     ) -> anyhow::Result<()> {
         let client = self.pool.map(|p| p.client());
-        let out = self.run_branch(b, values, client, c, env)?;
+        let out = self.exec_branch(b, values, client, c, env, cp)?;
         c.cpu_branch_runs.fetch_add(1, Ordering::Relaxed);
         for (t, v) in out {
-            values.insert(t, v);
+            values.insert_arc(t, v);
         }
         Ok(())
+    }
+
+    /// Branch execution dispatch: a captured program replays over its
+    /// precompiled steps; anything else (fresh runs, branches with
+    /// PJRT blocks) takes the interpreting [`Engine::run_branch`].
+    /// Both paths evaluate host nodes through the same
+    /// [`eval_host_node`] dispatch, so outputs are bit-identical by
+    /// construction.
+    fn exec_branch(
+        &self,
+        b: usize,
+        values: &Values,
+        client: Option<WorkerClient>,
+        c: &Counters,
+        env: &ShapeEnv,
+        cp: Option<&CapturedPlan>,
+    ) -> anyhow::Result<Vec<(TensorId, Arc<Tensor>)>> {
+        if let Some(prog) = cp.and_then(|cp| cp.prog(b)) {
+            return self.run_branch_captured(prog, values, c, env);
+        }
+        self.run_branch(b, values, client, c, env)
     }
 
     /// Execute one branch; returns produced (tensor, value) pairs.
@@ -659,23 +806,22 @@ impl<'a> Engine<'a> {
         client: Option<WorkerClient>,
         c: &Counters,
         env: &ShapeEnv,
-    ) -> anyhow::Result<Vec<(TensorId, Tensor)>> {
-        let mut local: Vec<(TensorId, Tensor)> = Vec::new();
+    ) -> anyhow::Result<Vec<(TensorId, Arc<Tensor>)>> {
+        let mut local: Vec<(TensorId, Arc<Tensor>)> = Vec::new();
         let mut arena = BumpArena::new();
         let mut arena_slots: HashMap<TensorId, usize> = HashMap::new();
 
-        let read = |t: TensorId, local: &[(TensorId, Tensor)]| -> Tensor {
+        // Shared handles all the way down: a hit in the local list or
+        // the store clones an `Arc`, never the tensor data.  A miss
+        // with no producer — or a producer whose value was dropped
+        // (fused) — reads the deterministic synthesized source.
+        let read = |t: TensorId, local: &[(TensorId, Arc<Tensor>)]| -> Arc<Tensor> {
             if let Some((_, v)) = local.iter().rev().find(|(id, _)| *id == t) {
-                return v.clone();
+                return Arc::clone(v);
             }
             if let Some(v) = values.get(t) {
                 return v;
             }
-            if self.graph.producer(t).is_none() {
-                return self.source_value(t);
-            }
-            // producer scheduled earlier but value dropped (fused):
-            // synthesize deterministically as a stand-in.
             self.source_value(t)
         };
 
@@ -690,7 +836,7 @@ impl<'a> Engine<'a> {
                     c.skipped.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
-                let produced: Vec<(TensorId, Tensor)> = if let Some(block) =
+                let produced: Vec<(TensorId, Arc<Tensor>)> = if let Some(block) =
                     self.blocks.get(&id)
                 {
                     // PJRT artifact call
@@ -704,8 +850,7 @@ impl<'a> Engine<'a> {
                         .get(&block.program)
                         .unwrap()
                         .clone();
-                    let mut act = read(block.act_in, &local);
-                    act = fit(&act, &spec.inputs[0]);
+                    let act = fit(&read(block.act_in, &local), &spec.inputs[0]);
                     let mut args = vec![act];
                     for (i, shp) in spec.inputs.iter().enumerate().skip(1) {
                         args.push(self.program_arg(&block.program, i, shp.clone()));
@@ -713,7 +858,7 @@ impl<'a> Engine<'a> {
                     let outs = client.execute(&block.program, args)?;
                     c.pjrt_calls.fetch_add(1, Ordering::Relaxed);
                     let out_shape = self.shape_of(block.out, env);
-                    vec![(block.out, fit(&outs[0], &out_shape))]
+                    vec![(block.out, Arc::new(fit(&outs[0], &out_shape)))]
                 } else {
                     c.host_ops.fetch_add(1, Ordering::Relaxed);
                     self.run_host_node(node, |t| read(t, &local), env)
@@ -746,86 +891,120 @@ impl<'a> Engine<'a> {
     }
 
     /// Host-kernel execution of one node (output shapes resolved
-    /// through `env`).
+    /// through `env`) — a graph-aware wrapper over [`eval_host_node`],
+    /// the one kernel dispatch both fresh runs and captured replays
+    /// share.
     fn run_host_node(
         &self,
         node: &Node,
-        read: impl Fn(TensorId) -> Tensor,
+        read: impl Fn(TensorId) -> Arc<Tensor>,
         env: &ShapeEnv,
-    ) -> Vec<(TensorId, Tensor)> {
-        use host_kernels as hk;
-        let out_t = |i: usize| node.outputs[i];
-        let out_shape = |i: usize| self.shape_of(node.outputs[i], env);
-        let one = |v: Tensor| vec![(node.outputs[0], v)];
-
-        let val = match &node.kind {
-            OpKind::MatMul | OpKind::FullyConnected => {
-                let a = as2d(&read(node.inputs[0]));
-                let b = as2d(&read(node.inputs[1]));
-                if a.shape()[1] == b.shape()[0] {
-                    fit(&hk::matmul(&a, &b), &out_shape(0))
-                } else {
-                    // shape-mismatched synthetic site: cast-copy
-                    fit(&a, &out_shape(0))
-                }
-            }
-            OpKind::Add => fit(&hk::binary(&read(node.inputs[0]), &bcast(&read(node.inputs[1]), &read(node.inputs[0])), |x, y| x + y), &out_shape(0)),
-            OpKind::Sub => fit(&hk::binary(&read(node.inputs[0]), &bcast(&read(node.inputs[1]), &read(node.inputs[0])), |x, y| x - y), &out_shape(0)),
-            OpKind::Mul => fit(&hk::binary(&read(node.inputs[0]), &bcast(&read(node.inputs[1]), &read(node.inputs[0])), |x, y| x * y), &out_shape(0)),
-            OpKind::Maximum => fit(&hk::binary(&read(node.inputs[0]), &bcast(&read(node.inputs[1]), &read(node.inputs[0])), f32::max), &out_shape(0)),
-            OpKind::Relu => hk::unary(&read(node.inputs[0]), hk::relu),
-            OpKind::Silu => hk::unary(&read(node.inputs[0]), hk::silu),
-            OpKind::Gelu => hk::unary(&read(node.inputs[0]), hk::gelu),
-            OpKind::Logistic => hk::unary(&read(node.inputs[0]), hk::sigmoid),
-            OpKind::Tanh => hk::unary(&read(node.inputs[0]), f32::tanh),
-            OpKind::Softmax => hk::softmax(&read(node.inputs[0])),
-            OpKind::LayerNorm => {
-                let x = read(node.inputs[0]);
-                let d = *x.shape().last().unwrap();
-                let g = fit(&read(node.inputs[1]), &[d]);
-                let bta = fit(&read(node.inputs[2]), &[d]);
-                hk::layernorm(&x, &g, &bta, 1e-5)
-            }
-            OpKind::Attention { .. } => {
-                let q = as2d(&read(node.inputs[0]));
-                let k = as2d(&read(node.inputs[1]));
-                let v = as2d(&read(node.inputs[2]));
-                if q.shape()[1] == k.shape()[1] && k.shape() == v.shape() {
-                    fit(&hk::attention(&q, &k, &v), &out_shape(0))
-                } else {
-                    fit(&q, &out_shape(0))
-                }
-            }
-            OpKind::Mean => hk::mean_rows(&read(node.inputs[0])),
-            OpKind::Transpose => {
-                let x = read(node.inputs[0]);
-                if x.shape().len() == 2 {
-                    fit(&hk::transpose2(&x), &out_shape(0))
-                } else {
-                    fit(&x, &out_shape(0))
-                }
-            }
-            // shape plumbing, pools, dynamic ops: shape-cast semantics
-            // (synthetic values; structure is what matters — see module
-            // docs)
-            _ => {
-                if node.inputs.is_empty() {
-                    Tensor::zeros(out_shape(0))
-                } else {
-                    fit(&read(node.inputs[0]), &out_shape(0))
-                }
-            }
-        };
-        let mut out = one(fit(&val, &out_shape(0)));
-        // multi-output nodes (Split): slice the input round-robin
-        if node.outputs.len() > 1 {
-            let src = read(node.inputs[0]);
-            out = (0..node.outputs.len())
-                .map(|i| (out_t(i), fit(&src, &self.shape_of(out_t(i), env))))
-                .collect();
-        }
-        out
+    ) -> Vec<(TensorId, Arc<Tensor>)> {
+        eval_host_node(&node.kind, &node.inputs, &node.outputs, read, |i| {
+            self.shape_of(node.outputs[i], env)
+        })
     }
+}
+
+/// Host-kernel dispatch for one node, independent of graph and engine:
+/// `(kind, inputs, outputs)` plus a read closure and an output-shape
+/// resolver.  The runtime path ([`Engine::run_branch`]) and the
+/// captured-replay path both funnel through here, so replayed outputs
+/// are bit-identical to fresh runs by construction — there is no
+/// second kernel dispatch to drift.
+pub(crate) fn eval_host_node(
+    kind: &OpKind,
+    ins: &[TensorId],
+    outs: &[TensorId],
+    read: impl Fn(TensorId) -> Arc<Tensor>,
+    out_shape: impl Fn(usize) -> Vec<usize>,
+) -> Vec<(TensorId, Arc<Tensor>)> {
+    use host_kernels as hk;
+    let val = match kind {
+        OpKind::MatMul | OpKind::FullyConnected => {
+            let a = as2d(&read(ins[0]));
+            let b = as2d(&read(ins[1]));
+            if a.shape()[1] == b.shape()[0] {
+                fit(&hk::matmul(&a, &b), &out_shape(0))
+            } else {
+                // shape-mismatched synthetic site: cast-copy
+                fit(&a, &out_shape(0))
+            }
+        }
+        OpKind::Add => fit(&bin(&read(ins[0]), &read(ins[1]), |x, y| x + y), &out_shape(0)),
+        OpKind::Sub => fit(&bin(&read(ins[0]), &read(ins[1]), |x, y| x - y), &out_shape(0)),
+        OpKind::Mul => fit(&bin(&read(ins[0]), &read(ins[1]), |x, y| x * y), &out_shape(0)),
+        OpKind::Maximum => fit(&bin(&read(ins[0]), &read(ins[1]), f32::max), &out_shape(0)),
+        OpKind::Relu => hk::unary(&read(ins[0]), hk::relu),
+        OpKind::Silu => hk::unary(&read(ins[0]), hk::silu),
+        OpKind::Gelu => hk::unary(&read(ins[0]), hk::gelu),
+        OpKind::Logistic => hk::unary(&read(ins[0]), hk::sigmoid),
+        OpKind::Tanh => hk::unary(&read(ins[0]), f32::tanh),
+        OpKind::Softmax => hk::softmax(&read(ins[0])),
+        OpKind::LayerNorm => {
+            let x = read(ins[0]);
+            let d = *x.shape().last().unwrap();
+            let g = fit(&read(ins[1]), &[d]);
+            let bta = fit(&read(ins[2]), &[d]);
+            hk::layernorm(&x, &g, &bta, 1e-5)
+        }
+        OpKind::Attention { .. } => {
+            let q = as2d(&read(ins[0]));
+            let k = as2d(&read(ins[1]));
+            let v = as2d(&read(ins[2]));
+            if q.shape()[1] == k.shape()[1] && k.shape() == v.shape() {
+                fit(&hk::attention(&q, &k, &v), &out_shape(0))
+            } else {
+                fit(&q, &out_shape(0))
+            }
+        }
+        OpKind::Mean => hk::mean_rows(&read(ins[0])),
+        OpKind::Transpose => {
+            let x = read(ins[0]);
+            if x.shape().len() == 2 {
+                fit(&hk::transpose2(&x), &out_shape(0))
+            } else {
+                fit(&x, &out_shape(0))
+            }
+        }
+        // shape plumbing, pools, dynamic ops: shape-cast semantics
+        // (synthetic values; structure is what matters — see module
+        // docs)
+        _ => {
+            if ins.is_empty() {
+                Tensor::zeros(out_shape(0))
+            } else {
+                fit(&read(ins[0]), &out_shape(0))
+            }
+        }
+    };
+    let mut out = vec![(outs[0], Arc::new(fit(&val, &out_shape(0))))];
+    // multi-output nodes (Split): slice the input round-robin
+    if outs.len() > 1 {
+        let src = read(ins[0]);
+        out = (0..outs.len())
+            .map(|i| (outs[i], Arc::new(fit(&src, &out_shape(i)))))
+            .collect();
+    }
+    out
+}
+
+/// Elementwise binary with the engine's broadcast convention: equal
+/// shapes zip directly; a trailing-axis bias takes the fused
+/// [`host_kernels::binary_bias`] kernel (no broadcast tensor, no
+/// per-element modulo); anything else shape-casts `b` to `a`'s shape
+/// first.  Bit-identical to materialising the broadcast and calling
+/// [`host_kernels::binary`] — case for case, the same kernel path runs
+/// on the same values.
+fn bin(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    if a.shape() == b.shape() {
+        return host_kernels::binary(a, b, f);
+    }
+    let last = *a.shape().last().unwrap_or(&1);
+    if b.len() == last {
+        return host_kernels::binary_bias(a, b.data(), f);
+    }
+    host_kernels::binary(a, &fit(b, a.shape()), f)
 }
 
 /// Record a lane-job dispatch and hand it to the lane's worker (the
@@ -849,7 +1028,7 @@ fn dispatch_job(
 struct LaneMsg {
     branch: usize,
     lane: usize,
-    out: anyhow::Result<Vec<(TensorId, Tensor)>>,
+    out: anyhow::Result<Vec<(TensorId, Arc<Tensor>)>>,
 }
 
 /// Aggregate delegate-lane statistics of one run.
@@ -911,7 +1090,7 @@ impl LaneSt {
         pl: &PlacementPlan,
     ) -> anyhow::Result<()> {
         for (t, v) in msg.out? {
-            values.insert(t, v);
+            values.insert_arc(t, v);
         }
         self.pending[msg.branch] = false;
         self.pending_n -= 1;
@@ -1017,11 +1196,12 @@ impl DelegateWorker {
         env: &'env ShapeEnv,
         client: Option<WorkerClient>,
         counters: &'env Counters,
+        cp: Option<&'env CapturedPlan>,
     ) {
         scope.spawn(move || {
             while let Ok(b) = jobs.recv() {
                 let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    engine.run_branch(b, values, client.clone(), counters, env)
+                    engine.exec_branch(b, values, client.clone(), counters, env, cp)
                 }))
                 .unwrap_or_else(|panic| {
                     let msg = panic
@@ -1042,18 +1222,28 @@ impl DelegateWorker {
 
 /// Concurrent value store: branches in one wave write disjoint tensors,
 /// so a mutex-per-map is enough (writes merge at wave boundaries; the
-/// mutex serves the sequential-spill path).
+/// mutex serves the sequential-spill path).  Values are held behind
+/// shared `Arc`s: a read hands back a handle, never a deep copy of the
+/// tensor data — the store is copy-free on the hot path.
 #[derive(Default)]
 pub struct Values {
-    map: Mutex<HashMap<TensorId, Tensor>>,
+    map: Mutex<HashMap<TensorId, Arc<Tensor>>>,
 }
 
 impl Values {
     pub fn insert(&self, t: TensorId, v: Tensor) {
+        self.insert_arc(t, Arc::new(v));
+    }
+
+    /// Insert an already-shared value (the executor's merge paths —
+    /// branch outputs are born shared and never re-boxed).
+    pub fn insert_arc(&self, t: TensorId, v: Arc<Tensor>) {
         self.map.lock().unwrap().insert(t, v);
     }
 
-    pub fn get(&self, t: TensorId) -> Option<Tensor> {
+    /// A shared handle on the stored value — cloning the `Arc`, not
+    /// the tensor.
+    pub fn get(&self, t: TensorId) -> Option<Arc<Tensor>> {
         self.map.lock().unwrap().get(&t).cloned()
     }
 
@@ -1119,20 +1309,6 @@ fn as2d(t: &Tensor) -> Tensor {
     let last = *shape.last().unwrap_or(&1);
     let rows = t.len() / last.max(1);
     Tensor::new(vec![rows, last.max(1)], t.data().to_vec())
-}
-
-/// Broadcast helper: returns b, or a bias-shaped view when compatible.
-fn bcast(b: &Tensor, like: &Tensor) -> Tensor {
-    if b.shape() == like.shape() {
-        b.clone()
-    } else {
-        let last = *like.shape().last().unwrap_or(&1);
-        if b.len() == last {
-            Tensor::new(vec![last], b.data().to_vec())
-        } else {
-            fit(b, like.shape())
-        }
-    }
 }
 
 fn hash(s: &str) -> u64 {

@@ -204,6 +204,48 @@ pub fn resolved_pipeline_executor(
     (demand_fn, exec)
 }
 
+/// Real-engine executor built on the capture/replay hot path
+/// ([`crate::exec::CapturedPlan`]): partition → branch plan → schedule
+/// once at registration, [`Engine::capture`](crate::exec::Engine::capture)
+/// the whole thing, and serve every request by replaying the captured
+/// plan — no per-request planning, no arena/map rebuilds, shared-`Arc`
+/// reads.  Fails if the model cannot be captured standalone (dynamic
+/// shapes or PJRT blocks need the engine at replay; register those via
+/// [`pipeline_executor`] / [`resolved_pipeline_executor`] instead).
+///
+/// Returns the demand to lease per batch — the captured plan's own
+/// [`peak_demand`](crate::exec::CapturedPlan::peak_demand), i.e.
+/// exactly the largest lease a replay will request — plus the
+/// executor.  Exec time is measured replay wall time; the checksum is
+/// the replayed output store's, so serving results are bit-comparable
+/// with a fresh engine run of the same schedules.
+pub fn captured_executor(
+    g: &crate::graph::Graph,
+    p: &crate::partition::Partition,
+    plan: &crate::branch::BranchPlan,
+    cfg: &crate::sched::SchedCfg,
+    budget: u64,
+) -> anyhow::Result<(u64, Box<dyn ModelExecutor>)> {
+    let mems = crate::memory::branch_memories(g, p, plan);
+    let schedules = crate::sched::schedule(plan, &mems, budget, cfg);
+    let engine = crate::exec::Engine::new(g, p, plan, None);
+    let captured = engine.capture(&schedules, &crate::ctrl::ShapeEnv::unresolved(), None);
+    anyhow::ensure!(
+        captured.is_standalone(),
+        "model '{}' cannot be captured standalone (dynamic shapes or \
+         PJRT blocks) — register an engine-backed executor instead",
+        g.name
+    );
+    let demand = captured.peak_demand();
+    let weights = crate::exec::WeightBank::default();
+    let exec = Box::new(FnExecutor(move |_seed| {
+        let values = crate::exec::Values::default();
+        let stats = captured.replay(&values, &weights)?;
+        Ok((stats.wall_s, values.checksum()))
+    }));
+    Ok((demand, exec))
+}
+
 /// Dispatcher tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeCfg {
@@ -644,6 +686,39 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), 50, "duplicate or lost responses");
+    }
+
+    #[test]
+    fn captured_executor_serves_engine_identical_results() {
+        // a CPU-only micro model captures standalone; serving it must
+        // reproduce the fresh engine run bit-for-bit, on every request
+        let g = crate::models::micro::parallel_chains(4, 6);
+        let p = crate::partition::partition(
+            &g,
+            &crate::partition::CostModel {
+                min_ops: usize::MAX,
+                min_flops: u64::MAX,
+                max_bytes_per_flop: 0.0,
+            },
+        );
+        let plan = crate::branch::plan(&g, &p, crate::branch::DEFAULT_BETA);
+        let cfg = crate::sched::SchedCfg { max_threads: 4, margin: 0.4 };
+        let (demand, exec) = captured_executor(&g, &p, &plan, &cfg, 1 << 34).unwrap();
+        assert!(demand > 0, "captured demand must be a real lease figure");
+
+        // reference: fresh engine run over the same schedules
+        let mems = crate::memory::branch_memories(&g, &p, &plan);
+        let schedules = crate::sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let engine = crate::exec::Engine::new(&g, &p, &plan, None);
+        let (vals, _) = engine.run(&schedules).unwrap();
+        let want = vals.checksum();
+
+        let mut s = Server::new();
+        s.register_with_demand("captured", demand, exec);
+        let r1 = s.infer("captured", 1).unwrap();
+        let r2 = s.infer("captured", 2).unwrap();
+        assert_eq!(r1.checksum, want, "replay must match the fresh engine run");
+        assert_eq!(r2.checksum, want, "every replay is deterministic");
     }
 
     #[test]

@@ -96,7 +96,11 @@ impl Bench {
         });
     }
 
-    /// Print a criterion-style report to stdout.
+    /// Print a criterion-style report to stdout.  When the `BENCH_JSON`
+    /// env var names a file, the group is also appended to it as a JSON
+    /// trajectory record (see [`Bench::append_json`]) — the mechanism
+    /// behind the committed `BENCH_<n>.json` files that
+    /// `tools/check_bench.py` diffs against fresh runs.
     pub fn report(&self) {
         println!("\n== bench group: {} ==", self.name);
         for c in &self.cases {
@@ -109,6 +113,49 @@ impl Bench {
                 c.iters
             );
         }
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            if !path.is_empty() {
+                if let Err(e) = self.append_json(&path) {
+                    eprintln!("BENCH_JSON: could not write {path}: {e}");
+                }
+            }
+        }
+    }
+
+    /// Append this group to a JSON trajectory file: the file holds a
+    /// top-level array of `{"group", "cases": [{name, iters, mean_ns,
+    /// p50_ns, min_ns}]}` records.  A missing or empty file starts a
+    /// new array; a record with the same group name is replaced, so
+    /// re-running a bench refreshes its numbers in place.
+    pub fn append_json(&self, path: &str) -> std::io::Result<()> {
+        use super::json::Json;
+        use std::collections::BTreeMap;
+        let mut records: Vec<Json> = match std::fs::read_to_string(path) {
+            Ok(src) if !src.trim().is_empty() => Json::parse(&src)
+                .ok()
+                .and_then(|j| j.as_arr().map(<[Json]>::to_vec))
+                .unwrap_or_default(),
+            _ => Vec::new(),
+        };
+        records.retain(|r| r.get("group").and_then(Json::as_str) != Some(&self.name));
+        let cases: Vec<Json> = self
+            .cases
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(c.name.clone()));
+                o.insert("iters".into(), Json::Num(c.iters as f64));
+                o.insert("mean_ns".into(), Json::Num(c.mean_ns));
+                o.insert("p50_ns".into(), Json::Num(c.p50_ns));
+                o.insert("min_ns".into(), Json::Num(c.min_ns));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut rec = BTreeMap::new();
+        rec.insert("group".into(), Json::Str(self.name.clone()));
+        rec.insert("cases".into(), Json::Arr(cases));
+        records.push(Json::Obj(rec));
+        std::fs::write(path, Json::Arr(records).dump() + "\n")
     }
 
     pub fn cases(&self) -> &[Case] {
@@ -147,6 +194,27 @@ mod tests {
         });
         assert_eq!(b.cases().len(), 1);
         assert!(b.cases()[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn append_json_replaces_same_group() {
+        let path = std::env::temp_dir().join(format!("bench_json_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let mut b = Bench::new("g1");
+        b.record("case_a", 1000.0);
+        b.append_json(&path).unwrap();
+        let mut b2 = Bench::new("g1");
+        b2.record("case_a", 2000.0);
+        b2.record("case_b", 3000.0);
+        b2.append_json(&path).unwrap();
+        let j = crate::util::json::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1, "same group replaced, not duplicated");
+        let cases = arr[0].get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("mean_ns").unwrap().as_f64().unwrap(), 2000.0);
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

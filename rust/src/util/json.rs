@@ -1,8 +1,10 @@
-//! Minimal JSON parser — just enough for `artifacts/manifest.json`.
+//! Minimal JSON parser/serializer — just enough for
+//! `artifacts/manifest.json` and the bench trajectory files
+//! ([`crate::util::bench`] with `BENCH_JSON` set).
 //!
 //! Supports objects, arrays, strings (with `\uXXXX` escapes), numbers,
 //! booleans and null.  Not performance-critical: it runs once at
-//! startup on a <100 KiB manifest.
+//! startup on a <100 KiB manifest, or once per bench report.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -71,6 +73,68 @@ impl Json {
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
     }
+
+    /// Serialize back to a JSON document.  Object keys come out in
+    /// `BTreeMap` order, so dump→parse→dump is a fixed point — stable
+    /// diffs for committed artifacts like the bench trajectory.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_str(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -313,5 +377,21 @@ mod tests {
     fn unicode_passthrough() {
         let j = Json::parse(r#""héllo → ok""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "héllo → ok");
+    }
+
+    #[test]
+    fn dump_roundtrips() {
+        let src = r#"{"a":[1,2.5,-3],"b":{"c":"x\"y\n","d":null},"e":true}"#;
+        let j = Json::parse(src).unwrap();
+        let dumped = j.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), j, "parse(dump(x)) == x");
+        assert_eq!(Json::parse(&dumped).unwrap().dump(), dumped, "dump is a fixed point");
+    }
+
+    #[test]
+    fn dump_integers_without_fraction() {
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(2.5).dump(), "2.5");
+        assert_eq!(Json::Str("a→b".into()).dump(), "\"a→b\"");
     }
 }

@@ -1,0 +1,272 @@
+//! Integration tests for plan capture & replay (the preallocated hot
+//! path): a replayed [`CapturedPlan`] must be bit-identical to a
+//! freshly planned run across thread counts, pow2 shape buckets, and
+//! placements, and governed replays must lease exactly the captured
+//! demand figures.
+//!
+//! The parity bar is deliberately `==` on checksums and stats, not
+//! "close": replay and the interpreting engine share one kernel
+//! dispatch (`exec::eval_host_node`), one source-synthesis formula,
+//! and one demand computation, so any drift is a bug, not noise.
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::ctrl::{SegmentedEngine, ShapeEnv};
+use parallax::exec::{Engine, Values, WeightBank};
+use parallax::graph::{DType, Dim, Graph, OpKind};
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel, Partition};
+use parallax::sched::{self, MemoryGovernor, SchedCfg};
+use parallax::util::prop;
+
+fn cpu_only(g: &Graph) -> Partition {
+    partition(
+        g,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    )
+}
+
+fn schedules_for(
+    g: &Graph,
+    p: &Partition,
+    plan: &branch::BranchPlan,
+    threads: usize,
+) -> Vec<parallax::sched::LayerSchedule> {
+    let mems = branch_memories(g, p, plan);
+    let cfg = SchedCfg { max_threads: threads, margin: 0.4 };
+    sched::schedule(plan, &mems, 1 << 34, &cfg)
+}
+
+#[test]
+fn replay_bit_identical_across_thread_counts_and_models() {
+    let models: Vec<(&str, Graph)> = vec![
+        ("chain64", micro::chain(64)),
+        ("parallel6x8", micro::parallel_chains(6, 8)),
+        ("mixed", micro::mixed()),
+        ("diamond", micro::diamond(4, 4)),
+    ];
+    for (name, g) in &models {
+        // both partition flavours: all-CPU units and fused regions
+        let parts = [
+            cpu_only(g),
+            partition(g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX }),
+        ];
+        for p in &parts {
+            let plan = branch::plan(g, p, DEFAULT_BETA);
+            let engine = Engine::new(g, p, &plan, None);
+            for threads in [1, 2, 6] {
+                let s = schedules_for(g, p, &plan, threads);
+                let captured = engine.capture(&s, &ShapeEnv::unresolved(), None);
+                let (v_fresh, st_fresh) = engine.run(&s).unwrap();
+                let (v_replay, st_replay) = engine.run_replayed(&captured, None).unwrap();
+                assert_eq!(
+                    v_fresh.checksum(),
+                    v_replay.checksum(),
+                    "{name}@{threads}t: replay must be bit-identical"
+                );
+                assert_eq!(st_fresh.host_ops, st_replay.host_ops, "{name}@{threads}t");
+                assert_eq!(
+                    st_fresh.cpu_branch_runs, st_replay.cpu_branch_runs,
+                    "{name}@{threads}t"
+                );
+                assert_eq!(
+                    st_fresh.skipped_fused, st_replay.skipped_fused,
+                    "{name}@{threads}t"
+                );
+                assert_eq!(
+                    st_fresh.peak_arena_bytes, st_replay.peak_arena_bytes,
+                    "{name}@{threads}t: captured arena peak must match the \
+                     interpreting path's per-run bookkeeping"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replay_matches_fresh_on_random_dags() {
+    prop::check("capture/replay parity", 40, |rng| {
+        let layers = rng.range(2, 10);
+        let width = rng.range(1, 6);
+        let g = micro::random_dag(rng, layers, width);
+        let p = cpu_only(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let engine = Engine::new(&g, &p, &plan, None);
+        for threads in [1, 4] {
+            let s = schedules_for(&g, &p, &plan, threads);
+            let captured = engine.capture(&s, &ShapeEnv::unresolved(), None);
+            let (v_fresh, _) = engine.run(&s).unwrap();
+            let (v_replay, _) = engine.run_replayed(&captured, None).unwrap();
+            assert_eq!(v_fresh.checksum(), v_replay.checksum());
+            // static CPU-only DAG: also replayable with no engine at all
+            assert!(captured.is_standalone());
+            let values = Values::default();
+            captured.replay(&values, &WeightBank::default()).unwrap();
+            assert_eq!(v_fresh.checksum(), values.checksum());
+        }
+    });
+}
+
+#[test]
+fn governed_replay_leases_exactly_captured_demands() {
+    let g = micro::parallel_chains(4, 6);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan, 4);
+    let captured = engine.capture(&s, &ShapeEnv::unresolved(), None);
+
+    let gov_fresh = MemoryGovernor::new(1 << 30);
+    let gov_replay = MemoryGovernor::new(1 << 30);
+    let (v_fresh, _) = engine.run_governed(&s, Some(&gov_fresh)).unwrap();
+    let (v_replay, _) = engine.run_replayed(&captured, Some(&gov_replay)).unwrap();
+
+    assert_eq!(v_fresh.checksum(), v_replay.checksum());
+    assert_eq!(
+        gov_fresh.peak_reserved(),
+        gov_replay.peak_reserved(),
+        "governed replay must lease exactly the figures the fresh path computes"
+    );
+    assert_eq!(
+        gov_fresh.stats().grants,
+        gov_replay.stats().grants,
+        "replay takes the same number of leases (one per non-empty wave/spill)"
+    );
+    assert_eq!(
+        gov_replay.peak_reserved(),
+        captured.peak_demand(),
+        "the run's peak lease is the captured plan's own quoted demand"
+    );
+    assert_eq!(gov_fresh.in_use(), 0);
+    assert_eq!(gov_replay.in_use(), 0);
+}
+
+#[test]
+fn placed_replay_bit_identical_with_equal_leases() {
+    // heavy enough that the Pixel 6 placement model offloads the trunk
+    let g = micro::fallback_heavy(4, 3, 128, 6);
+    let soc = parallax::device::SocProfile::pixel6();
+    let p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX });
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan, 4);
+
+    let auto = parallax::place::assign(&g, &p, &plan, &soc, parallax::place::PlacePolicy::Auto);
+    assert!(auto.num_delegated() >= 1, "trunk should delegate on pixel6");
+    let captured = engine.capture(&s, &ShapeEnv::unresolved(), Some(&auto));
+    assert!(captured.is_placed());
+    assert!(!captured.is_standalone(), "placed captures need their engine");
+
+    let gov_fresh = MemoryGovernor::new(1 << 30);
+    let gov_replay = MemoryGovernor::new(1 << 30);
+    let (v_fresh, st_fresh) = engine.run_placed(&s, &auto, Some(&gov_fresh)).unwrap();
+    let v_replay = Values::default();
+    let st_replay = engine
+        .run_captured(&captured, &v_replay, Some(&gov_replay), &ShapeEnv::unresolved(), Some(&auto))
+        .unwrap();
+
+    assert_eq!(
+        v_fresh.checksum(),
+        v_replay.checksum(),
+        "placed replay must be bit-identical to the freshly planned placed run"
+    );
+    assert_eq!(st_fresh.delegate_jobs, st_replay.delegate_jobs);
+    assert_eq!(st_fresh.cpu_branch_runs, st_replay.cpu_branch_runs);
+    assert_eq!(
+        gov_fresh.peak_reserved(),
+        gov_replay.peak_reserved(),
+        "placed replay must lease exactly the captured run-wide figure"
+    );
+    assert_eq!(gov_fresh.in_use(), 0);
+    assert_eq!(gov_replay.in_use(), 0);
+
+    // CPU-forced placement: captures as placed (demands stay
+    // placement-aware) but with no lane topology, and still replays
+    // bit-identically through the classic path
+    let forced = parallax::place::PlacementPlan::cpu_only(plan.branches.len());
+    let cap_forced = engine.capture(&s, &ShapeEnv::unresolved(), Some(&forced));
+    assert!(cap_forced.is_placed());
+    let (v_forced, _) = engine.run_placed(&s, &forced, None).unwrap();
+    let v_forced_replay = Values::default();
+    engine
+        .run_captured(&cap_forced, &v_forced_replay, None, &ShapeEnv::unresolved(), Some(&forced))
+        .unwrap();
+    assert_eq!(v_forced.checksum(), v_forced_replay.checksum());
+}
+
+const DYN_T: usize = 16;
+
+/// Dynamic-seq chain: every activation's leading dim is `Dim::Dynamic`,
+/// so the §3.4 segment cache plans (and captures) per pow2 bucket and
+/// replays each step at its exact extent.
+fn dyn_chain() -> Graph {
+    let d = 32;
+    let mut g = Graph::new("dyn_chain");
+    let t_dyn = Dim::Dynamic { max: DYN_T };
+    let mut x = g.add_tensor(vec![t_dyn, Dim::Static(d)], DType::F32, "x0");
+    for i in 0..3 {
+        let w = g.tensor(&[d, d], &format!("w{i}"));
+        let y = g.add_tensor(vec![t_dyn, Dim::Static(d)], DType::F32, &format!("y{i}"));
+        g.add_node(format!("mm{i}"), OpKind::MatMul, vec![x, w], vec![y]);
+        let z = g.add_tensor(vec![t_dyn, Dim::Static(d)], DType::F32, &format!("z{i}"));
+        g.add_node(format!("act{i}"), OpKind::Gelu, vec![y], vec![z]);
+        x = z;
+    }
+    let sliced = g.tensor(&[1, d], "sliced");
+    g.add_node("slice", OpKind::Slice, vec![x], vec![sliced]);
+    let out = g.tensor(&[1, d], "out");
+    g.add_node("output", OpKind::Output, vec![sliced], vec![out]);
+    assert!(g.validate().is_empty(), "{:?}", g.validate());
+    g
+}
+
+#[test]
+fn bucketed_segment_replay_matches_cold_plans_across_pow2_buckets() {
+    let g = dyn_chain();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+
+    // warm engine reuses bucket-cached captured plans across steps (and
+    // runs wider), cold engines re-capture per step on one thread — the
+    // stores must still match bit for bit at every extent
+    let warm = SegmentedEngine::new(&engine, SchedCfg { max_threads: 4, margin: 0.4 }, 1 << 34);
+    for t in [2usize, 3, 8, 9, 13, DYN_T] {
+        let (v_warm, _) = warm.run(&[(DYN_T, t)], None).unwrap();
+        let cold_engine = Engine::new(&g, &p, &plan, None);
+        let cold =
+            SegmentedEngine::new(&cold_engine, SchedCfg { max_threads: 1, margin: 0.4 }, 1 << 34);
+        let (v_cold, _) = cold.run(&[(DYN_T, t)], None).unwrap();
+        assert_eq!(
+            v_warm.checksum(),
+            v_cold.checksum(),
+            "t={t}: bucket-cached captured plan must replay exactly like a cold plan"
+        );
+        assert!(v_warm.all_finite());
+    }
+    let (hits, misses) = warm.cache_stats();
+    assert!(hits >= 1, "pow2 buckets must be re-used across extents ({hits} hits)");
+    assert!(misses >= 1);
+}
+
+#[test]
+fn standalone_replay_matches_engine_stats_exactly() {
+    let g = micro::mixed();
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan, 4);
+    let captured = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(captured.is_standalone());
+    assert!(captured.num_programs() > 0);
+    assert!(captured.peak_demand() > 0);
+
+    let (v_fresh, st_fresh) = engine.run(&s).unwrap();
+    let values = Values::default();
+    let st = captured.replay(&values, &WeightBank::default()).unwrap();
+    assert_eq!(v_fresh.checksum(), values.checksum());
+    assert_eq!(st_fresh.host_ops, st.host_ops);
+    assert_eq!(st_fresh.cpu_branch_runs, st.cpu_branch_runs);
+    assert_eq!(st_fresh.skipped_fused, st.skipped_fused);
+    assert_eq!(st_fresh.peak_arena_bytes, st.peak_arena_bytes);
+}

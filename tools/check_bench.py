@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Bench-trajectory check: validate and diff recorded BENCH files.
+
+The bench harness (`parallax::util::bench::Bench`) appends one JSON
+record per group to the file named by the `BENCH_JSON` env var:
+
+    [{"group": "<name>", "cases": [{"name", "iters", "mean_ns",
+      "p50_ns", "min_ns"}, ...]}, ...]
+
+A PR that claims a perf result commits the recorded trajectory as
+`BENCH_<n>.json` at the repo root.  This script has two modes:
+
+  validate (1 arg):
+      python3 tools/check_bench.py BENCH_6.json
+    Checks the file parses and every record/case has the harness schema
+    with positive timings.  Exit 1 on malformed records.
+
+  diff (2 args):
+      BENCH_JSON=fresh.json cargo bench --bench hotpath
+      BENCH_JSON=fresh.json cargo bench --bench serve_throughput
+      python3 tools/check_bench.py BENCH_6.json fresh.json
+    Compares a fresh run against the committed trajectory on the
+    guarded groups (below): a case regresses when its fresh mean is
+    more than MARGIN x the committed mean.  The margin is generous —
+    bench hosts differ wildly; this guards against order-of-magnitude
+    hot-path regressions, not single-digit noise.  Exit 1 on
+    regression.
+
+Cases present in only one file are reported but never fail the check
+(benches grow over time).  Groups outside GUARDED are informational.
+"""
+
+import json
+import sys
+
+# Groups whose means are guarded against regression; everything else in
+# the trajectory is context.
+GUARDED = {"coordinator hot paths", "captured replay", "serve_throughput"}
+
+# A fresh mean above MARGIN x the committed mean fails the check.
+MARGIN = 2.0
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list):
+        raise ValueError(f"{path}: top level must be an array of group records")
+    table = {}
+    for rec in data:
+        group = rec.get("group")
+        cases = rec.get("cases")
+        if not isinstance(group, str) or not isinstance(cases, list):
+            raise ValueError(f"{path}: record missing 'group'/'cases': {rec}")
+        for c in cases:
+            name = c.get("name")
+            if not isinstance(name, str):
+                raise ValueError(f"{path}: case in '{group}' missing 'name': {c}")
+            for k in ("iters", "mean_ns", "p50_ns", "min_ns"):
+                v = c.get(k)
+                if not isinstance(v, (int, float)) or v <= 0:
+                    raise ValueError(
+                        f"{path}: case '{group}/{name}' field '{k}' "
+                        f"must be a positive number, got {v!r}"
+                    )
+            table[(group, name)] = c
+    return table
+
+
+def fmt_ns(ns):
+    for unit, div in (("s", 1e9), ("ms", 1e6), ("us", 1e3)):
+        if ns >= div:
+            return f"{ns / div:.2f} {unit}"
+    return f"{ns:.1f} ns"
+
+
+def main(argv):
+    if len(argv) not in (2, 3):
+        print(__doc__)
+        return 2
+
+    try:
+        committed = load(argv[1])
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}")
+        return 1
+    groups = sorted({g for g, _ in committed})
+    print(f"{argv[1]}: {len(committed)} cases across {len(groups)} groups")
+    for g in groups:
+        n = sum(1 for gg, _ in committed if gg == g)
+        tag = "guarded" if g in GUARDED else "info"
+        print(f"  {g:<28} {n:>2} cases  [{tag}]")
+
+    if len(argv) == 2:
+        print("OK: trajectory is well-formed")
+        return 0
+
+    try:
+        fresh = load(argv[2])
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}")
+        return 1
+
+    regressions = []
+    compared = 0
+    for key, base in sorted(committed.items()):
+        group, name = key
+        if group not in GUARDED:
+            continue
+        cur = fresh.get(key)
+        if cur is None:
+            print(f"  skip {group}/{name}: not in fresh run")
+            continue
+        compared += 1
+        ratio = cur["mean_ns"] / base["mean_ns"]
+        status = "ok"
+        if ratio > MARGIN:
+            status = "REGRESSION"
+            regressions.append((group, name, ratio))
+        print(
+            f"  {status:<10} {group}/{name}: committed {fmt_ns(base['mean_ns'])}"
+            f" -> fresh {fmt_ns(cur['mean_ns'])} ({ratio:.2f}x)"
+        )
+    for key in sorted(fresh):
+        if key not in committed and key[0] in GUARDED:
+            print(f"  new  {key[0]}/{key[1]}: {fmt_ns(fresh[key]['mean_ns'])}")
+
+    if regressions:
+        print(f"FAIL: {len(regressions)} case(s) regressed beyond {MARGIN}x")
+        return 1
+    if compared == 0:
+        print("WARN: no guarded cases compared (group names changed?)")
+    print("OK: no hot-path regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
