@@ -2,11 +2,53 @@
 //!
 //! `cargo bench --bench fig2_energy` prints the same rows the paper
 //! reports (see EXPERIMENTS.md for the paper-vs-measured comparison)
-//! plus the wall time of the regeneration itself.
+//! plus the wall time of the regeneration itself, and records two
+//! trajectory groups (`BENCH_JSON`, tools/check_bench.py):
+//!
+//! * `fig2 energy modelled` — simulator closed form, mean over the
+//!   30-input protocol, per model x framework;
+//! * `fig2 energy measured` — the real executor's per-run energy
+//!   ledger ([`parallax::eval::fig2_measured_mj`]), per model.
+//!
+//! The harness's nano-unit field carries nanojoules here (1 ns slot
+//! ≡ 1 nJ), so the dimensionless regression ratios stay meaningful.
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::device::SocProfile;
+use parallax::eval;
+use parallax::models::ModelKind;
+use parallax::sched::SchedCfg;
+use parallax::sim::Mode;
+use parallax::util::bench::Bench;
 
 fn main() {
     let t0 = std::time::Instant::now();
-    let table = parallax::eval::run("fig2").expect("known experiment");
+    let table = eval::run("fig2").expect("known experiment");
     println!("{table}");
+
+    let soc = SocProfile::pixel6();
+    let mut modelled = Bench::new("fig2 energy modelled");
+    for model in ModelKind::ALL {
+        for fw in Framework::ALL {
+            let Ok(p) = Pipeline::build(fw, model, &soc, Mode::CpuOnly, SchedCfg::default())
+            else {
+                continue;
+            };
+            let r = p.run_protocol(eval::RUNS, eval::SEED);
+            let mj = r.iter().map(|x| x.energy_j).sum::<f64>() / r.len() as f64 * 1e3;
+            modelled.record(
+                &format!("{}/{}", model.display_name(), fw.profile().name),
+                mj * 1e6, // mJ -> nJ
+            );
+        }
+    }
+    modelled.report();
+
+    let mut measured = Bench::new("fig2 energy measured");
+    for model in ModelKind::ALL {
+        measured.record(model.display_name(), eval::fig2_measured_mj(model, &soc) * 1e6);
+    }
+    measured.report();
+
     println!("[fig2_energy] regenerated in {:.2}s", t0.elapsed().as_secs_f64());
 }

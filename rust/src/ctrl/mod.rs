@@ -64,11 +64,12 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::branch::BranchPlan;
+use crate::device::{SocProfile, ThermalModel};
 use crate::exec::{Engine, ExecStats, Values};
 use crate::graph::{Dim, Graph, NodeId, OpClass, OpKind, TensorId, TensorInfo};
 use crate::memory::{self, BranchMemory};
 use crate::partition::Partition;
-use crate::place::PlacementPlan;
+use crate::place::{self, PlacePolicy, PlacementPlan};
 use crate::runtime::Tensor;
 use crate::sched::{self, MemoryGovernor, SchedCfg};
 
@@ -567,12 +568,45 @@ fn merge_stats(acc: &mut ExecStats, s: ExecStats) {
     acc.delegate_stalls += s.delegate_stalls;
     acc.lane_gaps += s.lane_gaps;
     acc.wall_s += s.wall_s;
+    acc.cpu_modelled_s += s.cpu_modelled_s;
+    acc.energy_j += s.energy_j;
+    acc.energy_idle_j += s.energy_idle_j;
+    acc.energy_cpu_j += s.energy_cpu_j;
+    acc.energy_lane_j += s.energy_lane_j;
 }
 
-/// Plan-cache key: (segment id, bucketed bindings, dead branch ids).
-/// Structural — two distinct (bucket, dead-set) states can never
-/// collide into reusing the wrong cached plan.
-type PlanKey = (usize, Vec<(usize, usize)>, Vec<usize>);
+/// Plan-cache key: (placement generation, segment id, bucketed
+/// bindings, dead branch ids).  Structural — two distinct (generation,
+/// bucket, dead-set) states can never collide into reusing the wrong
+/// cached plan; the generation term is what invalidates every cached
+/// [`CapturedPlan`](crate::exec::CapturedPlan) when a thermal
+/// re-placement swaps the lane topology mid-stream.
+type PlanKey = (usize, usize, Vec<(usize, usize)>, Vec<usize>);
+
+/// Thermal-throttling configuration of a [`SegmentedEngine`] (see
+/// [`SegmentedEngine::with_thermal`]).
+struct ThermalCfg {
+    /// The unthrottled device profile placements are derived from.
+    soc: SocProfile,
+    model: ThermalModel,
+    policy: PlacePolicy,
+    /// Re-place when any lane's effective rate factor drifts from the
+    /// factor the current placement was derived at by more than this.
+    tolerance: f64,
+}
+
+/// The mutable placement state of a [`SegmentedEngine`]: swapped
+/// atomically (under one lock) by a thermal re-placement, snapshotted
+/// per segment by the execution path.
+struct PlacedState {
+    placement: Option<Arc<PlacementPlan>>,
+    /// Per-segment plans at worst-case shapes under `placement`.
+    max_entries: Vec<Arc<Entry>>,
+    /// Bumped on every re-placement — the plan-cache epoch.
+    generation: usize,
+    /// The per-lane rate factors `placement` was derived at.
+    lane_factors: Vec<f64>,
+}
 
 /// Statistics of one segmented run.
 #[derive(Clone, Debug, Default)]
@@ -605,13 +639,20 @@ pub struct SegmentedEngine<'a> {
     /// Branch successor map, derived once from the immutable plan
     /// (feeds the in-flight staging spans of every re-plan).
     branch_succs: Vec<Vec<usize>>,
-    /// Per-segment plans at worst-case shapes (the static fallback).
-    max_entries: Vec<Arc<Entry>>,
     budget: u64,
     cfg: SchedCfg,
-    /// Heterogeneous placement: delegated branches run on the engine's
-    /// delegate lane, their staging priced into segment demands.
-    placement: Option<PlacementPlan>,
+    /// Heterogeneous placement + its per-segment max-shape plans:
+    /// behind one lock because a thermal re-placement swaps both
+    /// together mid-stream (plain placed/static engines take the lock
+    /// once per segment and never contend).
+    state: Mutex<PlacedState>,
+    /// Thermal throttling: set by [`SegmentedEngine::with_thermal`].
+    thermal: Option<ThermalCfg>,
+    /// Accumulated modelled busy seconds per lane across every run of
+    /// this engine — the stream-level odometer the thermal model reads.
+    lane_busy: Mutex<Vec<f64>>,
+    /// Mid-stream re-placements performed so far.
+    replacements: AtomicUsize,
     cache: Mutex<HashMap<PlanKey, Arc<Entry>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
@@ -621,7 +662,7 @@ impl<'a> SegmentedEngine<'a> {
     /// Build the segmented view of an engine's plan.  `budget` is the
     /// per-wave scheduling budget (typically the governor's).
     pub fn new(engine: &'a Engine<'a>, cfg: SchedCfg, budget: u64) -> Self {
-        Self::build(engine, cfg, budget, None)
+        Self::build(engine, cfg, budget, None, None)
     }
 
     /// [`SegmentedEngine::new`] with a heterogeneous placement
@@ -639,7 +680,37 @@ impl<'a> SegmentedEngine<'a> {
         budget: u64,
         placement: PlacementPlan,
     ) -> Self {
-        Self::build(engine, cfg, budget, Some(placement))
+        Self::build(engine, cfg, budget, Some(placement), None)
+    }
+
+    /// [`SegmentedEngine::with_placement`] under a
+    /// [`ThermalModel`](crate::device::ThermalModel): the initial
+    /// placement is derived from the cold `soc` under `policy`, and
+    /// every run accumulates each lane's modelled busy seconds.  When a
+    /// lane's thermal rate factor drifts from the factor the current
+    /// placement was derived at by more than `tolerance`, the engine
+    /// re-places against the throttled profile *mid-stream*: the
+    /// placement and per-segment max-shape plans are swapped atomically
+    /// and every cached [`CapturedPlan`](crate::exec::CapturedPlan) is
+    /// invalidated (the plan-cache key carries a placement generation).
+    /// Outputs stay bit-identical across re-placements by construction
+    /// — placement only moves branches between devices, never changes
+    /// what they compute — and every post-throttle lease is still sized
+    /// by the §3.3 rules under the new placement.
+    pub fn with_thermal(
+        engine: &'a Engine<'a>,
+        cfg: SchedCfg,
+        budget: u64,
+        soc: &SocProfile,
+        policy: PlacePolicy,
+        model: ThermalModel,
+        tolerance: f64,
+    ) -> Self {
+        let placement =
+            place::assign(engine.graph, engine.partition, engine.plan, soc, policy);
+        let thermal =
+            ThermalCfg { soc: soc.clone(), model, policy, tolerance };
+        Self::build(engine, cfg, budget, Some(placement), Some(thermal))
     }
 
     fn build(
@@ -647,6 +718,7 @@ impl<'a> SegmentedEngine<'a> {
         cfg: SchedCfg,
         budget: u64,
         placement: Option<PlacementPlan>,
+        thermal: Option<ThermalCfg>,
     ) -> Self {
         let (g, p, plan) = (engine.graph, engine.partition, engine.plan);
         let seg_plan = segment_plan(g, p, plan);
@@ -672,15 +744,23 @@ impl<'a> SegmentedEngine<'a> {
                 ))
             })
             .collect();
+        let num_lanes = thermal.as_ref().map_or(0, |tc| tc.soc.lanes.len());
         Self {
             engine,
             seg_plan,
             max_mems,
             branch_succs,
-            max_entries,
             budget,
             cfg,
-            placement,
+            state: Mutex::new(PlacedState {
+                placement: placement.map(Arc::new),
+                max_entries,
+                generation: 0,
+                lane_factors: vec![1.0; num_lanes],
+            }),
+            thermal,
+            lane_busy: Mutex::new(vec![0.0; num_lanes]),
+            replacements: AtomicUsize::new(0),
             cache: Mutex::new(HashMap::new()),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
@@ -709,7 +789,27 @@ impl<'a> SegmentedEngine<'a> {
 
     /// Peak per-segment lease of the worst-case (max-shape) plan.
     pub fn max_plan_peak_demand(&self) -> u64 {
-        self.max_entries.iter().map(|e| e.demand).max().unwrap_or(0)
+        let st = self.state.lock().unwrap();
+        st.max_entries.iter().map(|e| e.demand).max().unwrap_or(0)
+    }
+
+    /// Mid-stream thermal re-placements performed so far (0 without
+    /// [`SegmentedEngine::with_thermal`]).
+    pub fn thermal_replacements(&self) -> usize {
+        self.replacements.load(Ordering::Relaxed)
+    }
+
+    /// The placement currently in force, if any — a snapshot: a
+    /// concurrent thermal re-placement swaps the engine to a new plan
+    /// without invalidating handed-out `Arc`s.
+    pub fn placement_snapshot(&self) -> Option<Arc<PlacementPlan>> {
+        self.state.lock().unwrap().placement.clone()
+    }
+
+    /// Accumulated modelled busy seconds per lane across every run of
+    /// this engine (empty without [`SegmentedEngine::with_thermal`]).
+    pub fn lane_busy_s(&self) -> Vec<f64> {
+        self.lane_busy.lock().unwrap().clone()
     }
 
     /// Run the whole model with runtime resolution.  `bindings` are
@@ -829,7 +929,15 @@ impl<'a> SegmentedEngine<'a> {
                     }
                 }
             }
-            stats.max_plan_demand = stats.max_plan_demand.max(self.max_entries[sid].demand);
+            // Snapshot placement + max-shape plan + generation in one
+            // lock acquisition, so the entry replayed below can never
+            // mismatch the placement it was captured under — even if a
+            // thermal re-placement lands between two segments.
+            let (placement, max_entry, generation) = {
+                let st = self.state.lock().unwrap();
+                (st.placement.clone(), st.max_entries[sid].clone(), st.generation)
+            };
+            stats.max_plan_demand = stats.max_plan_demand.max(max_entry.demand);
             let seg_dead: Vec<usize> = seg
                 .branches
                 .iter()
@@ -838,9 +946,9 @@ impl<'a> SegmentedEngine<'a> {
                 .collect();
             stats.pruned_branches += seg_dead.len();
             let entry = if resolve && !(env.is_unresolved() && seg_dead.is_empty()) {
-                self.entry_for(sid, env, &seg_dead, stats)
+                self.entry_for(sid, env, &seg_dead, stats, placement.as_deref(), generation)
             } else {
-                self.max_entries[sid].clone()
+                max_entry
             };
             if entry.schedules.is_empty() {
                 continue;
@@ -858,12 +966,84 @@ impl<'a> SegmentedEngine<'a> {
                 values,
                 None,
                 env,
-                self.placement.as_ref(),
+                placement.as_deref(),
             )?;
             merge_stats(&mut stats.exec, s);
             stats.segments_run += 1;
+            if self.thermal.is_some() {
+                self.note_thermal(&entry, placement.as_deref());
+            }
         }
         Ok(())
+    }
+
+    /// Thermal bookkeeping after one segment: advance each lane's busy
+    /// odometer by the modelled delegate time this segment's schedules
+    /// put on it (the same per-branch figure the engine's lane ledger
+    /// charges), then re-place if any lane's rate factor drifted past
+    /// the tolerance since the current placement was derived.
+    fn note_thermal(&self, entry: &Entry, placement: Option<&PlacementPlan>) {
+        let Some(tc) = &self.thermal else { return };
+        let Some(pl) = placement else { return };
+        let mut busy = self.lane_busy.lock().unwrap();
+        for ls in &entry.schedules {
+            for b in ls.all() {
+                if let Some(lane) = pl.lane_of(b) {
+                    if lane < busy.len() {
+                        busy[lane] += pl.delegate_latency_s[b];
+                    }
+                }
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        let drifted = st
+            .lane_factors
+            .iter()
+            .enumerate()
+            .any(|(l, &f)| (f - tc.model.rate_factor(busy[l])).abs() > tc.tolerance);
+        if !drifted {
+            return;
+        }
+        let factors: Vec<f64> =
+            (0..busy.len()).map(|l| tc.model.rate_factor(busy[l])).collect();
+        let throttled = tc.model.throttled(&tc.soc, &busy);
+        let (g, p, plan) = (self.engine.graph, self.engine.partition, self.engine.plan);
+        let next = place::assign(g, p, plan, &throttled, tc.policy);
+        // Always adopt the new factors (no re-check until the next
+        // drift); swap plans only when the assignment actually moved.
+        st.lane_factors = factors;
+        let changed = st
+            .placement
+            .as_ref()
+            .map_or(true, |cur| cur.assignment != next.assignment);
+        if !changed {
+            return;
+        }
+        let next = Arc::new(next);
+        st.max_entries = self
+            .seg_plan
+            .segments
+            .iter()
+            .map(|seg| {
+                Arc::new(build_entry(
+                    self.engine,
+                    &self.branch_succs,
+                    &self.max_mems,
+                    seg,
+                    &[],
+                    self.budget,
+                    &self.cfg,
+                    Some(next.as_ref()),
+                    &ShapeEnv::unresolved(),
+                ))
+            })
+            .collect();
+        st.placement = Some(next);
+        st.generation += 1;
+        self.replacements.fetch_add(1, Ordering::Relaxed);
+        // stale-generation entries can never be looked up again — drop
+        // them rather than letting a long stream accumulate dead plans
+        self.cache.lock().unwrap().clear();
     }
 
     fn entry_for(
@@ -872,11 +1052,14 @@ impl<'a> SegmentedEngine<'a> {
         env: &ShapeEnv,
         dead: &[usize],
         stats: &mut CtrlStats,
+        placement: Option<&PlacementPlan>,
+        generation: usize,
     ) -> Arc<Entry> {
         // memory is sized at the bucket's upper bound, so every exact
         // env in the bucket stays within the cached reservation
         let bucketed = env.bucketed();
-        let key: PlanKey = (sid, bucketed.bindings().collect(), dead.to_vec());
+        let key: PlanKey =
+            (generation, sid, bucketed.bindings().collect(), dead.to_vec());
         // one lock across lookup + plan: concurrent first-steps on the
         // same bucket must not double-plan, or the documented
         // ≤ ⌈log₂ t_max⌉+1 misses-per-segment bound breaks.  Planning
@@ -904,7 +1087,7 @@ impl<'a> SegmentedEngine<'a> {
             dead,
             self.budget,
             &self.cfg,
-            self.placement.as_ref(),
+            placement,
             &bucketed,
         ));
         cache.insert(key, entry.clone());

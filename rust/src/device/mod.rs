@@ -271,6 +271,83 @@ impl SocProfile {
     }
 }
 
+/// One throttling step of a [`ThermalModel`]: once a lane's accumulated
+/// busy time crosses `busy_s` seconds, its sustained compute rate is
+/// multiplied by `rate_factor` (< 1.0 for throttling).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThermalStep {
+    /// Accumulated lane busy-time threshold, seconds.
+    pub busy_s: f64,
+    /// Multiplicative rate degradation applied once the threshold is
+    /// crossed (0 < factor ≤ 1).
+    pub rate_factor: f64,
+}
+
+/// Deterministic thermal-throttling model: lane rates degrade as
+/// accumulated per-lane busy time crosses the step thresholds.  The
+/// model is a stand-in for a SoC's thermal governor — sustained
+/// accelerator load heats the die and the firmware caps the clocks.
+/// Every lane shares the same step table but is throttled by *its own*
+/// accumulated busy time, so an idle lane stays at full rate while a
+/// saturated one degrades.
+///
+/// The segmented engine
+/// ([`SegmentedEngine::with_thermal`](crate::ctrl::SegmentedEngine::with_thermal))
+/// tracks per-lane busy time across a decode/serve stream, derives the
+/// throttled profile via [`ThermalModel::throttled`], and re-places
+/// mid-stream when any lane's effective rate drifts past a tolerance.
+///
+/// ```
+/// use parallax::device::{ThermalModel, ThermalStep};
+/// let tm = ThermalModel::new(vec![ThermalStep { busy_s: 1.0, rate_factor: 0.5 }]);
+/// assert_eq!(tm.rate_factor(0.5), 1.0);
+/// assert_eq!(tm.rate_factor(2.0), 0.5);
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ThermalModel {
+    /// Throttling thresholds; evaluation takes the minimum factor over
+    /// all crossed steps, so step order does not matter.
+    pub steps: Vec<ThermalStep>,
+}
+
+impl ThermalModel {
+    pub fn new(steps: Vec<ThermalStep>) -> Self {
+        Self { steps }
+    }
+
+    /// A model that never throttles.
+    pub fn none() -> Self {
+        Self { steps: Vec::new() }
+    }
+
+    /// The multiplicative rate factor for a lane that has accumulated
+    /// `busy_s` seconds of busy time: the minimum factor over every
+    /// crossed step, 1.0 while no threshold is crossed.
+    pub fn rate_factor(&self, busy_s: f64) -> f64 {
+        self.steps
+            .iter()
+            .filter(|s| busy_s >= s.busy_s)
+            .map(|s| s.rate_factor)
+            .fold(1.0, f64::min)
+    }
+
+    /// The SoC profile with every lane's compute rate degraded by its
+    /// own accumulated busy time (`lane_busy_s[l]`; missing entries
+    /// count as idle).  The scalar `acc_flops` compatibility mirror is
+    /// kept in lock-step with `lanes[0]`.
+    pub fn throttled(&self, base: &SocProfile, lane_busy_s: &[f64]) -> SocProfile {
+        let mut soc = base.clone();
+        for (l, lane) in soc.lanes.iter_mut().enumerate() {
+            let busy = lane_busy_s.get(l).copied().unwrap_or(0.0);
+            lane.flops = base.lanes[l].flops * self.rate_factor(busy);
+        }
+        if let Some(l0) = soc.lanes.first() {
+            soc.acc_flops = l0.flops;
+        }
+        soc
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +416,29 @@ mod tests {
             assert_eq!(l0.power_w, p.p_acc_w, "{}", p.name);
             assert_eq!(l0.reachable, p.nnapi, "{}: nnapi folds into lane 0", p.name);
         }
+    }
+
+    #[test]
+    fn thermal_model_degrades_only_crossed_lanes() {
+        let tm = ThermalModel::new(vec![
+            ThermalStep { busy_s: 1.0, rate_factor: 0.6 },
+            ThermalStep { busy_s: 2.0, rate_factor: 0.3 },
+        ]);
+        assert_eq!(tm.rate_factor(0.0), 1.0);
+        assert_eq!(tm.rate_factor(1.5), 0.6);
+        assert_eq!(tm.rate_factor(5.0), 0.3, "deepest crossed step wins");
+        let base = SocProfile::pixel6();
+        // lane 0 hot, lane 1 idle
+        let hot = tm.throttled(&base, &[1.5, 0.0]);
+        assert_eq!(hot.lanes[0].flops, base.lanes[0].flops * 0.6);
+        assert_eq!(hot.lanes[1].flops, base.lanes[1].flops);
+        assert_eq!(hot.acc_flops, hot.lanes[0].flops, "scalar mirror follows lane 0");
+        // busy vector shorter than the lane list: missing lanes idle
+        let short = tm.throttled(&base, &[3.0]);
+        assert_eq!(short.lanes[0].flops, base.lanes[0].flops * 0.3);
+        assert_eq!(short.lanes[1].flops, base.lanes[1].flops);
+        // a no-step model never throttles
+        assert_eq!(ThermalModel::none().rate_factor(1e9), 1.0);
     }
 
     #[test]

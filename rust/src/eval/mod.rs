@@ -143,13 +143,47 @@ pub fn table5() -> String {
     out
 }
 
-/// Figure 2: energy on Pixel 6, CPU-only (mJ per inference).
+/// Figure 2 measured column: one real-engine inference with the energy
+/// ledger attached (mJ).  The schedule is the same fixed-budget one the
+/// simulator prices, the [`crate::exec::EnergyModel`] comes from
+/// [`crate::sim::energy_model_for`] at full fill (the engine executes
+/// max-shape tensors), so on static models the executor's accumulated
+/// `ExecStats::energy_j` reproduces the simulator's closed form; on
+/// dynamic models it reports max-fill energy, above the random-fill
+/// modelled mean (EXPERIMENTS.md §Energy, §Deviations).
+pub fn fig2_measured_mj(model: ModelKind, soc: &SocProfile) -> f64 {
+    let cfg = SchedCfg::default();
+    let pipe = Pipeline::build(Framework::Parallax, model, soc, Mode::CpuOnly, cfg)
+        .expect("cpu always supported");
+    // fixed (effectively unbounded) budget: no free-memory jitter, the
+    // measured schedule is exactly the one the modelled column prices
+    let schedules = crate::sched::schedule(&pipe.plan, &pipe.mems, 1 << 34, &cfg);
+    let mut engine =
+        crate::exec::Engine::new(&pipe.graph, &pipe.partition, &pipe.plan, None);
+    engine.set_energy_model(crate::sim::energy_model_for(
+        &pipe.graph,
+        &pipe.partition,
+        &pipe.plan,
+        &schedules,
+        &pipe.profile,
+        soc,
+        &cfg,
+        1.0,
+    ));
+    let (_, st) = engine.run(&schedules).expect("host execution");
+    st.energy_j * 1e3
+}
+
+/// Figure 2: energy on Pixel 6, CPU-only (mJ per inference).  The four
+/// framework columns are modelled (simulator closed form over the
+/// 30-input protocol); `PLX meas` is the real executor's per-run energy
+/// ledger ([`fig2_measured_mj`]).
 pub fn fig2() -> String {
     let soc = SocProfile::pixel6();
     let mut out = String::from("Figure 2: Energy per inference, Pixel 6 CPU-only (mJ)\n");
     out += &format!(
-        "{:<18} {:>9} {:>11} {:>9} {:>9}\n",
-        "Model", "ORT", "ExecuTorch", "TFLite", "Parallax"
+        "{:<18} {:>9} {:>11} {:>9} {:>9} {:>10}\n",
+        "Model", "ORT", "ExecuTorch", "TFLite", "Parallax", "PLX meas"
     );
     for model in ModelKind::ALL {
         let mut row = format!("{:<18}", model.display_name());
@@ -165,6 +199,7 @@ pub fn fig2() -> String {
                 None => format!(" {:>9}", "-"),
             };
         }
+        row += &format!(" {:>10.1}", fig2_measured_mj(model, &soc));
         out += &row;
         out.push('\n');
     }

@@ -26,7 +26,7 @@ use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
-use super::{eval_host_node, Counters, Engine, ExecStats, Values};
+use super::{eval_host_node, Counters, EnergyModel, Engine, ExecStats, IdleTime, Values};
 use crate::branch::Unit;
 use crate::ctrl::ShapeEnv;
 use crate::graph::{NodeId, OpKind, TensorId};
@@ -158,6 +158,10 @@ pub struct CapturedPlan {
     /// Fully self-contained: no placement, no PJRT-block branches, all
     /// shapes static — replayable without the engine.
     standalone: bool,
+    /// The engine's [`EnergyModel`] at capture time, so standalone
+    /// replays charge the same Fig. 2 decomposition the fresh path
+    /// would (engine-assisted replays use the engine's own model).
+    energy: Option<EnergyModel>,
 }
 
 impl CapturedPlan {
@@ -226,6 +230,23 @@ impl CapturedPlan {
         );
         let t0 = std::time::Instant::now();
         let mut stats = ExecStats::default();
+        // Energy ledger mirrors the engine's: per-wave span is the max
+        // branch slot time (+ sync for multi-branch waves), core-seconds
+        // add up.  Single-threaded here, so plain accumulators.
+        let (mut span_s, mut core_s) = (0.0f64, 0.0f64);
+        let charge = |wave: &[usize], span_s: &mut f64, core_s: &mut f64| {
+            let Some(em) = &self.energy else { return };
+            let span = wave
+                .iter()
+                .map(|&b| em.branch_span_s.get(b).copied().unwrap_or(0.0))
+                .fold(0.0, f64::max);
+            let sync = if wave.len() > 1 { em.sync_s } else { 0.0 };
+            *span_s += span + sync;
+            *core_s += wave
+                .iter()
+                .map(|&b| em.branch_core_s.get(b).copied().unwrap_or(0.0))
+                .sum::<f64>();
+        };
         let mut merge = |out: Vec<(TensorId, Arc<Tensor>)>| {
             for (t, v) in out {
                 values.insert_arc(t, v);
@@ -245,6 +266,7 @@ impl CapturedPlan {
                     0 => continue,
                     1 => {
                         let out = run_one(wave[0], &mut stats);
+                        charge(wave, &mut span_s, &mut core_s);
                         merge(out);
                     }
                     _ => {
@@ -269,6 +291,7 @@ impl CapturedPlan {
                                 stats.peak_arena_bytes.max(prog.peak_arena);
                             stats.cpu_branch_runs += 1;
                         }
+                        charge(wave, &mut span_s, &mut core_s);
                         for out in outs {
                             merge(out);
                         }
@@ -277,10 +300,22 @@ impl CapturedPlan {
             }
             for &b in &ls.sequential {
                 let out = run_one(b, &mut stats);
+                charge(&[b], &mut span_s, &mut core_s);
                 merge(out);
             }
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
+        if let Some(em) = &self.energy {
+            let t_total = match em.idle {
+                IdleTime::Modelled => em.base_s + span_s,
+                IdleTime::MeasuredWall => stats.wall_s,
+            };
+            stats.cpu_modelled_s = core_s;
+            stats.energy_idle_j = em.p_idle_w * t_total;
+            stats.energy_cpu_j = em.p_core_w * core_s;
+            stats.energy_lane_j = 0.0;
+            stats.energy_j = stats.energy_idle_j + stats.energy_cpu_j;
+        }
         Ok(stats)
     }
 }
@@ -404,6 +439,7 @@ impl<'a> Engine<'a> {
             placed,
             with_placement: placement.is_some(),
             standalone,
+            energy: self.energy.clone(),
         }
     }
 

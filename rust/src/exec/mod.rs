@@ -46,7 +46,7 @@ pub mod host_kernels;
 pub use capture::{CapturedPlan, WeightBank};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::branch::{BranchPlan, Unit};
@@ -102,6 +102,72 @@ pub struct ExecStats {
     /// (the bench's ablation metric, measured on one lane).
     pub lane_gaps: usize,
     pub wall_s: f64,
+    /// Modelled CPU core-seconds accumulated over the run's waves and
+    /// sequential spills — the `core_seconds` input of the Fig. 2
+    /// energy decomposition.  Zero unless the engine carries an
+    /// [`EnergyModel`].
+    pub cpu_modelled_s: f64,
+    /// Total modelled energy of this run, joules:
+    /// `energy_idle_j + energy_cpu_j + energy_lane_j` — the same
+    /// `P_idle·T + P_core·core_seconds + P_acc·acc_busy` decomposition
+    /// the analytic `sim` path uses (see EXPERIMENTS.md §Energy).
+    /// Zero unless the engine carries an [`EnergyModel`].
+    pub energy_j: f64,
+    /// Idle/base-power term: `p_idle_w · T`, where `T` is either the
+    /// modelled span or the measured wall time, per
+    /// [`EnergyModel::idle`].
+    pub energy_idle_j: f64,
+    /// CPU term: `p_core_w · cpu_modelled_s`.
+    pub energy_cpu_j: f64,
+    /// Accelerator term: Σ over lanes of `lane_power_w[l] ·` that
+    /// lane's accumulated modelled busy seconds.
+    pub energy_lane_j: f64,
+}
+
+/// Per-run energy accounting model (Fig. 2): power draws plus the
+/// per-branch modelled times the executor charges as branches actually
+/// run.  Built from a [`SocProfile`](crate::device::SocProfile) and a
+/// schedule — [`crate::sim::energy_model_for`] precomputes each
+/// branch's span/core-seconds under exactly the wave composition the
+/// analytic simulator uses, so the executor's independently-accumulated
+/// decomposition can be tested term-by-term against `sim`'s closed
+/// form.  Attach with [`Engine::set_energy_model`]; engines without a
+/// model report all-zero energy fields.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyModel {
+    /// Device idle/base power draw, watts.
+    pub p_idle_w: f64,
+    /// Marginal power of one busy CPU core, watts.
+    pub p_core_w: f64,
+    /// Marginal power of each accelerator lane, watts (indexed like
+    /// `SocProfile::lanes`; missing entries draw 0).
+    pub lane_power_w: Vec<f64>,
+    /// Modelled elapsed seconds of each branch *in its scheduled
+    /// slot* (wave-position dependent).  A wave's span is the max over
+    /// its branches.
+    pub branch_span_s: Vec<f64>,
+    /// Modelled CPU core-seconds of each branch in its scheduled slot.
+    pub branch_core_s: Vec<f64>,
+    /// Fixed per-run overhead seconds (framework graph overhead) added
+    /// to the modelled span.
+    pub base_s: f64,
+    /// Synchronisation seconds charged per multi-branch wave.
+    pub sync_s: f64,
+    /// What the idle term's `T` is charged from.
+    pub idle: IdleTime,
+}
+
+/// The time base of the [`EnergyModel`] idle term.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IdleTime {
+    /// `T` = modelled span (`base_s` + accumulated wave/spill spans) —
+    /// comparable term-by-term with the analytic `sim` closed form.
+    #[default]
+    Modelled,
+    /// `T` = measured host wall time ([`ExecStats::wall_s`]).  Host
+    /// wall clock is not SoC time (see EXPERIMENTS.md §Deviations), so
+    /// this deviates from `sim` by construction.
+    MeasuredWall,
 }
 
 /// Shared per-run counters threaded through branch executions.
@@ -112,6 +178,24 @@ struct Counters {
     skipped: AtomicUsize,
     peak_arena: AtomicUsize,
     cpu_branch_runs: AtomicUsize,
+    /// Modelled span seconds, f64 bits (energy ledger; dispatcher
+    /// thread only, so accumulation order is deterministic and replay
+    /// charges are bit-identical to fresh runs).
+    span_bits: AtomicU64,
+    /// Modelled CPU core-seconds, f64 bits (energy ledger).
+    core_bits: AtomicU64,
+}
+
+/// Add `v` into an f64 stored as `AtomicU64` bits.
+fn add_f64(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
 }
 
 /// The engine: graph + plan + (optional) PJRT pool.
@@ -135,6 +219,9 @@ pub struct Engine<'a> {
     weights: WeightBank,
     /// Synthesized program weight args, keyed by (program, arg index).
     prog_weights: Mutex<HashMap<(String, usize), Tensor>>,
+    /// Optional energy ledger (Fig. 2): when set, every run charges
+    /// the modelled idle/cpu/lane energy terms into its [`ExecStats`].
+    energy: Option<EnergyModel>,
 }
 
 impl<'a> Engine<'a> {
@@ -212,7 +299,22 @@ impl<'a> Engine<'a> {
             branch_succs,
             weights: WeightBank::default(),
             prog_weights: Mutex::new(HashMap::new()),
+            energy: None,
         }
+    }
+
+    /// Attach an [`EnergyModel`]: subsequent runs on any path (classic,
+    /// governed, placed, captured-replay, segmented) charge the Fig. 2
+    /// energy decomposition into their [`ExecStats`].  Call before the
+    /// engine is shared (`&Engine` runs cannot mutate it); captures
+    /// taken afterwards carry the model for standalone replay.
+    pub fn set_energy_model(&mut self, em: EnergyModel) {
+        self.energy = Some(em);
+    }
+
+    /// The attached [`EnergyModel`], if any.
+    pub fn energy_model(&self) -> Option<&EnergyModel> {
+        self.energy.as_ref()
     }
 
     /// Combined §3.3 peak demand of a wave's CPU branches (delegate
@@ -545,7 +647,8 @@ impl<'a> Engine<'a> {
             }
             LaneTotals::default()
         };
-        Ok(ExecStats {
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut stats = ExecStats {
             pjrt_calls: c.pjrt_calls.into_inner(),
             host_ops: c.host_ops.into_inner(),
             skipped_fused: c.skipped.into_inner(),
@@ -555,8 +658,28 @@ impl<'a> Engine<'a> {
             acc_modelled_s: lanes.modelled_s,
             delegate_stalls: lanes.stalls,
             lane_gaps: lanes.gaps,
-            wall_s: t0.elapsed().as_secs_f64(),
-        })
+            wall_s,
+            ..ExecStats::default()
+        };
+        if let Some(em) = &self.energy {
+            let span = f64::from_bits(c.span_bits.into_inner());
+            let core = f64::from_bits(c.core_bits.into_inner());
+            let t_total = match em.idle {
+                IdleTime::Modelled => em.base_s + span,
+                IdleTime::MeasuredWall => wall_s,
+            };
+            stats.cpu_modelled_s = core;
+            stats.energy_idle_j = em.p_idle_w * t_total;
+            stats.energy_cpu_j = em.p_core_w * core;
+            stats.energy_lane_j = lanes
+                .busy_s
+                .iter()
+                .enumerate()
+                .map(|(l, &busy)| em.lane_power_w.get(l).copied().unwrap_or(0.0) * busy)
+                .sum();
+            stats.energy_j = stats.energy_idle_j + stats.energy_cpu_j + stats.energy_lane_j;
+        }
+        Ok(stats)
     }
 
     /// Execute one layer with no delegate lanes in play.  On replay
@@ -751,6 +874,21 @@ impl<'a> Engine<'a> {
                 handles.into_iter().map(|h| h.join().unwrap()).collect()
             });
         c.cpu_branch_runs.fetch_add(wave.len(), Ordering::Relaxed);
+        if let Some(em) = &self.energy {
+            // A wave's span is the max over its branches' slot times;
+            // core-seconds add up.  Multi-branch waves pay one sync.
+            let span = wave
+                .iter()
+                .map(|&b| em.branch_span_s.get(b).copied().unwrap_or(0.0))
+                .fold(0.0, f64::max);
+            let sync = if wave.len() > 1 { em.sync_s } else { 0.0 };
+            add_f64(&c.span_bits, span + sync);
+            let core: f64 = wave
+                .iter()
+                .map(|&b| em.branch_core_s.get(b).copied().unwrap_or(0.0))
+                .sum();
+            add_f64(&c.core_bits, core);
+        }
         for r in results {
             for (t, v) in r? {
                 values.insert_arc(t, v);
@@ -771,6 +909,10 @@ impl<'a> Engine<'a> {
         let client = self.pool.map(|p| p.client());
         let out = self.exec_branch(b, values, client, c, env, cp)?;
         c.cpu_branch_runs.fetch_add(1, Ordering::Relaxed);
+        if let Some(em) = &self.energy {
+            add_f64(&c.span_bits, em.branch_span_s.get(b).copied().unwrap_or(0.0));
+            add_f64(&c.core_bits, em.branch_core_s.get(b).copied().unwrap_or(0.0));
+        }
         for (t, v) in out {
             values.insert_arc(t, v);
         }
@@ -1038,6 +1180,9 @@ struct LaneTotals {
     modelled_s: f64,
     stalls: usize,
     gaps: usize,
+    /// Per-lane modelled busy seconds (energy ledger's `acc_busy`
+    /// term, split by lane; empty on CPU-only runs).
+    busy_s: Vec<f64>,
 }
 
 /// Dispatcher-side lane bookkeeping: which jobs are still in flight,
@@ -1065,7 +1210,10 @@ impl LaneSt {
             pending_n: 0,
             inflight: vec![0; num_lanes],
             ran: vec![false; num_lanes],
-            totals: LaneTotals::default(),
+            totals: LaneTotals {
+                busy_s: vec![0.0; num_lanes],
+                ..LaneTotals::default()
+            },
         }
     }
 
@@ -1097,6 +1245,7 @@ impl LaneSt {
         self.inflight[msg.lane] -= 1;
         self.totals.jobs += 1;
         self.totals.modelled_s += pl.delegate_latency_s[msg.branch];
+        self.totals.busy_s[msg.lane] += pl.delegate_latency_s[msg.branch];
         Ok(())
     }
 

@@ -98,7 +98,7 @@ pub enum Placement {
 }
 
 /// How [`assign`] decides placements.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum PlacePolicy {
     /// Minimise modelled latency: delegate exactly the delegate-safe
     /// branches for which some reachable lane beats their CPU time,
@@ -108,6 +108,17 @@ pub enum PlacePolicy {
     /// whose execution is bit-identical to the classic
     /// [`Engine::run`](crate::exec::Engine::run).
     ForceCpu,
+    /// Pareto knob between latency and energy (Fig. 2): every branch ×
+    /// device option is scored `alpha·latency + (1−alpha)·energy`
+    /// (seconds blended with joules from the [`SocProfile`] power
+    /// draws), delegation requires a lane score strictly below the CPU
+    /// score, and lanes load-balance on accumulated blended score.
+    /// `alpha: 1.0` reproduces [`PlacePolicy::Auto`] exactly;
+    /// `alpha: 0.0` minimises modelled energy alone.
+    EnergyAware {
+        /// Latency weight in `[0, 1]` (energy weight is `1 − alpha`).
+        alpha: f64,
+    },
 }
 
 /// A complete branch → device assignment plus the modelled figures it
@@ -291,6 +302,70 @@ pub fn delegate_latency(
         .fold(f64::INFINITY, f64::min)
 }
 
+/// Modelled CPU energy of a branch, joules: the marginal core power
+/// over its modelled single-core latency — the `P_core · core_seconds`
+/// term of the Fig. 2 decomposition, priced per branch.
+pub fn cpu_energy(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize, soc: &SocProfile) -> f64 {
+    soc.p_core_w * cpu_latency(g, p, plan, b, soc)
+}
+
+/// Modelled delegate energy of a branch on one specific lane, joules:
+/// the lane's power draw over its busy terms (the same
+/// `L_l + F/(R_l·util_l) + B_boundary/B_l` time [`lane_delegate_latency`]
+/// charges), plus core power over the CPU glue units — so the CPU and
+/// delegate alternatives price identical host work identically, in
+/// energy exactly as in latency.  `INFINITY` when the branch holds no
+/// delegate region or the lane is unreachable.
+pub fn lane_delegate_energy(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    b: usize,
+    soc: &SocProfile,
+    lane: &AccLane,
+) -> f64 {
+    if !plan.branches[b].has_delegate || !lane.reachable {
+        return f64::INFINITY;
+    }
+    let bw = soc.mem_bw * CPU_BW_SHARE;
+    plan.branches[b]
+        .units
+        .iter()
+        .map(|&u| match &plan.unit_graph.units[u] {
+            Unit::Region(ri) => {
+                let f = plan.unit_graph.flops[u] as f64;
+                let bnd = flops::boundary_bytes(g, &p.regions[*ri]) as f64;
+                lane.power_w * (lane.dispatch_s + f / lane.effective_flops() + bnd / lane.mem_bw)
+            }
+            Unit::Cpu(id) => {
+                let f = plan.unit_graph.flops[u] as f64;
+                soc.p_core_w
+                    * (f / soc.cpu_flops_per_core).max(node_stream_bytes(g, *id) as f64 / bw)
+            }
+        })
+        .sum()
+}
+
+/// Total modelled energy of a placement plan, joules: every branch
+/// priced on its assigned device ([`cpu_energy`] or
+/// [`lane_delegate_energy`]) — the figure
+/// [`PlacePolicy::EnergyAware`] minimises at `alpha: 0.0`, and what
+/// the energy tests compare across policies.
+pub fn plan_energy(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    placed: &PlacementPlan,
+    soc: &SocProfile,
+) -> f64 {
+    (0..plan.branches.len())
+        .map(|b| match placed.assignment[b] {
+            Placement::CpuPool => cpu_energy(g, p, plan, b, soc),
+            Placement::Delegate(l) => lane_delegate_energy(g, p, plan, b, soc, &soc.lanes[l]),
+        })
+        .sum()
+}
+
 /// Host-visible staging bytes a delegated branch needs: the boundary
 /// tensors of its regions, which cross the host↔accelerator interface
 /// and must stay resident on the host while the delegate runs.
@@ -326,9 +401,12 @@ pub fn delegate_safe(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> b
 /// modelled busy time (ties: faster lane, then lower index), so a
 /// multi-queue SoC spreads delegated branches instead of piling them
 /// onto the fastest lane.  [`PlacePolicy::ForceCpu`] pins everything to
-/// the CPU pool (the bit-identical baseline).  The modelled latencies
-/// and staging bytes are recorded on the returned plan so executors
-/// and benches can report the decision basis.
+/// the CPU pool (the bit-identical baseline).
+/// [`PlacePolicy::EnergyAware`] runs the same algorithm on the blended
+/// score `alpha·latency + (1−alpha)·energy` — at `alpha: 1.0` the
+/// scores *are* the latencies, so it reproduces `Auto` exactly.  The
+/// modelled latencies and staging bytes are recorded on the returned
+/// plan so executors and benches can report the decision basis.
 pub fn assign(
     g: &Graph,
     p: &Partition,
@@ -336,6 +414,10 @@ pub fn assign(
     soc: &SocProfile,
     policy: PlacePolicy,
 ) -> PlacementPlan {
+    let (w_lat, w_en) = match policy {
+        PlacePolicy::EnergyAware { alpha } => (alpha, 1.0 - alpha),
+        PlacePolicy::Auto | PlacePolicy::ForceCpu => (1.0, 0.0),
+    };
     let nb = plan.branches.len();
     let mut out = PlacementPlan::blank(nb);
     let mut busy = vec![0.0f64; soc.lanes.len()];
@@ -344,30 +426,38 @@ pub fn assign(
         if !delegate_safe(g, p, plan, b) {
             continue;
         }
-        let mut best: Option<(usize, f64)> = None; // least-busy lane beating the CPU
+        let cpu_score = w_lat * out.cpu_latency_s[b] + w_en * cpu_energy(g, p, plan, b, soc);
+        // least-busy lane whose blended score beats the CPU's
+        let mut best: Option<(usize, f64, f64)> = None; // (lane, score, latency)
         let mut best_lat = f64::INFINITY; // best lane latency overall (reporting)
         for (l, lane) in soc.lanes.iter().enumerate() {
             let lat = lane_delegate_latency(g, p, plan, b, soc, lane);
             best_lat = best_lat.min(lat);
-            if lat >= out.cpu_latency_s[b] {
+            if !lat.is_finite() {
+                // unreachable lane (or no region): never a target, and
+                // 0·∞ would poison the blended score with a NaN
+                continue;
+            }
+            let score = w_lat * lat + w_en * lane_delegate_energy(g, p, plan, b, soc, lane);
+            if score >= cpu_score {
                 continue;
             }
             let better = match best {
                 None => true,
-                Some((bl, blat)) => {
-                    busy[l] < busy[bl] || (busy[l] == busy[bl] && lat < blat)
+                Some((bl, bscore, _)) => {
+                    busy[l] < busy[bl] || (busy[l] == busy[bl] && score < bscore)
                 }
             };
             if better {
-                best = Some((l, lat));
+                best = Some((l, score, lat));
             }
         }
-        out.delegate_latency_s[b] = best.map(|(_, lat)| lat).unwrap_or(best_lat);
-        if policy == PlacePolicy::Auto {
-            if let Some((l, lat)) = best {
+        out.delegate_latency_s[b] = best.map(|(_, _, lat)| lat).unwrap_or(best_lat);
+        if policy != PlacePolicy::ForceCpu {
+            if let Some((l, score, _)) = best {
                 out.assignment[b] = Placement::Delegate(l);
                 out.staging_bytes[b] = staging_bytes(g, p, plan, b);
-                busy[l] += lat;
+                busy[l] += score;
             }
         }
     }
@@ -514,6 +604,48 @@ mod tests {
             "higher dispatch cost must never delegate more"
         );
         assert_eq!(slow.num_delegated(), 0, "p30's lanes are unreachable");
+    }
+
+    #[test]
+    fn energy_aware_alpha_one_reproduces_auto() {
+        // at alpha 1.0 the blended scores ARE the latencies, so the
+        // whole decision trace (eligibility, balancing, tie-breaks)
+        // must match Auto bit for bit
+        for g in [
+            micro::fallback_heavy(4, 4, 128, 6),
+            micro::fallback_heavy_lanes(2, 2, 4, 128, 6),
+            micro::fallback_heavy(2, 3, 48, 2),
+        ] {
+            let soc = SocProfile::pixel6();
+            let p = partition(&g, &loose());
+            let plan = branch::plan(&g, &p, DEFAULT_BETA);
+            let auto_pl = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+            let ea = assign(&g, &p, &plan, &soc, PlacePolicy::EnergyAware { alpha: 1.0 });
+            assert_eq!(auto_pl.assignment, ea.assignment, "{}", g.name);
+            assert_eq!(auto_pl.delegate_latency_s, ea.delegate_latency_s, "{}", g.name);
+            assert_eq!(auto_pl.staging_bytes, ea.staging_bytes, "{}", g.name);
+        }
+    }
+
+    #[test]
+    fn energy_aware_zero_never_uses_more_energy() {
+        // pure-energy placement minimises per-branch energy greedily,
+        // so its plan energy can never exceed the latency-first plan's
+        for g in [
+            micro::fallback_heavy(4, 4, 128, 6),
+            micro::fallback_heavy(4, 3, 72, 6),
+            micro::fallback_heavy_lanes(2, 2, 4, 128, 6),
+        ] {
+            let soc = SocProfile::pixel6();
+            let p = partition(&g, &loose());
+            let plan = branch::plan(&g, &p, DEFAULT_BETA);
+            let auto_pl = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+            let ea0 = assign(&g, &p, &plan, &soc, PlacePolicy::EnergyAware { alpha: 0.0 });
+            let e_auto = plan_energy(&g, &p, &plan, &auto_pl, &soc);
+            let e_ea0 = plan_energy(&g, &p, &plan, &ea0, &soc);
+            assert!(e_ea0.is_finite() && e_auto.is_finite(), "{}", g.name);
+            assert!(e_ea0 <= e_auto, "{}: {e_ea0} > {e_auto}", g.name);
+        }
     }
 
     #[test]

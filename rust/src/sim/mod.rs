@@ -422,6 +422,77 @@ pub fn simulate(
     }
 }
 
+/// Build an [`exec::EnergyModel`](crate::exec::EnergyModel) for the
+/// real engine from the *same* per-branch timing terms [`simulate`]
+/// charges, so the executor's measured energy ledger and the simulator's
+/// closed form (`P_idle·T + P_core·core_seconds + P_acc·acc_busy`)
+/// agree term-by-term on static CPU-only runs of the same schedule.
+///
+/// Each branch appears exactly once across `schedules` (in one wave or
+/// one sequential slot), so its span/core contribution is well defined:
+/// * wave branch `b` at sorted slot `s`: span = [`branch_time_wave`]
+///   under that wave's thread split, core = `t·scale·threads·0.8` —
+///   identical to the accumulation inside [`simulate`]'s wave loop;
+/// * sequential branch: `(t, core_seconds)` from intra-op timing.
+///
+/// Terms are derived for the CPU fallback path (the engine charges them
+/// only for branches it actually runs on host cores); delegated
+/// branches draw lane energy through the engine's per-lane busy ledger
+/// instead, priced here via `lane_power_w`.
+#[allow(clippy::too_many_arguments)]
+pub fn energy_model_for(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    schedules: &[LayerSchedule],
+    fw: &FrameworkProfile,
+    soc: &SocProfile,
+    cfg: &SchedCfg,
+    fill: f64,
+) -> crate::exec::EnergyModel {
+    let n = plan.branches.len();
+    let mut span = vec![0.0; n];
+    let mut core = vec![0.0; n];
+    for ls in schedules {
+        for wave in &ls.waves {
+            if wave.is_empty() {
+                continue;
+            }
+            let mut cpu_branches: Vec<usize> = wave.to_vec();
+            cpu_branches.sort_by(|&a, &b| {
+                plan.branches[b].flops.cmp(&plan.branches[a].flops)
+            });
+            let threads_per_branch =
+                (cfg.max_threads / cpu_branches.len()).max(1);
+            for (slot, &b) in cpu_branches.iter().enumerate() {
+                let base = slot * threads_per_branch;
+                let scale = soc.core_scale[base.min(soc.cpu_cores - 1)];
+                let t = branch_time_wave(
+                    g, p, plan, fw, soc, b, scale, threads_per_branch, fill,
+                );
+                span[b] = t;
+                core[b] = t * scale * threads_per_branch as f64 * 0.8;
+            }
+        }
+        for &b in &ls.sequential {
+            let (t, cs) =
+                branch_time_intra_op(g, p, plan, fw, soc, b, cfg.max_threads, fill);
+            span[b] = t;
+            core[b] = cs;
+        }
+    }
+    crate::exec::EnergyModel {
+        p_idle_w: soc.p_idle_w,
+        p_core_w: soc.p_core_w,
+        lane_power_w: soc.lanes.iter().map(|l| l.power_w).collect(),
+        branch_span_s: span,
+        branch_core_s: core,
+        base_s: fw.graph_overhead_s,
+        sync_s: fw.sync_overhead_s,
+        idle: Default::default(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -545,6 +616,47 @@ mod tests {
             .map(|s| LayerSchedule { waves: vec![], sequential: s.all().collect() })
             .collect();
         assert!(schedule_peak_demand(&plan, &seq, &mems) <= peak);
+    }
+
+    #[test]
+    fn energy_model_for_matches_simulate_closed_form() {
+        let g = micro::parallel_chains(4, 60);
+        let (p, plan, mems, scheds) = setup(&g);
+        let soc = SocProfile::pixel6();
+        let cfg = SchedCfg::default();
+        let plx = baselines::parallax();
+        let act = activation_footprint(&g, &p, &plan, &plx);
+        let r = simulate(
+            &g, &p, &plan, &scheds, &mems, &plx, &soc, &cfg, Mode::CpuOnly, 1.0, 0, act,
+        );
+        let em = energy_model_for(&g, &p, &plan, &scheds, &plx, &soc, &cfg, 1.0);
+        // replay the schedule against the per-branch terms: the wave
+        // max + sync accumulation must reproduce simulate's totals
+        let mut span_total = 0.0;
+        for ls in &scheds {
+            for wave in &ls.waves {
+                if wave.is_empty() {
+                    continue;
+                }
+                let mx = wave
+                    .iter()
+                    .map(|&b| em.branch_span_s[b])
+                    .fold(0.0f64, f64::max);
+                span_total += mx + if wave.len() > 1 { em.sync_s } else { 0.0 };
+            }
+            for &b in &ls.sequential {
+                span_total += em.branch_span_s[b];
+            }
+        }
+        let core_total: f64 = em.branch_core_s.iter().sum();
+        let t_total = em.base_s + span_total;
+        assert!((t_total - r.latency_s).abs() / r.latency_s < 1e-9);
+        assert!(
+            (core_total - r.cpu_core_seconds).abs()
+                <= 1e-9 * r.cpu_core_seconds.max(1e-12)
+        );
+        let e = em.p_idle_w * t_total + em.p_core_w * core_total;
+        assert!((e - r.energy_j).abs() / r.energy_j < 1e-9);
     }
 
     #[test]

@@ -148,8 +148,18 @@ fn placed_replay_bit_identical_with_equal_leases() {
     let soc = parallax::device::SocProfile::pixel6();
     let p = partition(&g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX });
     let plan = branch::plan(&g, &p, DEFAULT_BETA);
-    let engine = Engine::new(&g, &p, &plan, None);
+    let mut engine = Engine::new(&g, &p, &plan, None);
     let s = schedules_for(&g, &p, &plan, 4);
+    engine.set_energy_model(parallax::sim::energy_model_for(
+        &g,
+        &p,
+        &plan,
+        &s,
+        &parallax::baselines::parallax(),
+        &soc,
+        &SchedCfg { max_threads: 4, margin: 0.4 },
+        1.0,
+    ));
 
     let auto = parallax::place::assign(&g, &p, &plan, &soc, parallax::place::PlacePolicy::Auto);
     assert!(auto.num_delegated() >= 1, "trunk should delegate on pixel6");
@@ -172,6 +182,15 @@ fn placed_replay_bit_identical_with_equal_leases() {
     );
     assert_eq!(st_fresh.delegate_jobs, st_replay.delegate_jobs);
     assert_eq!(st_fresh.cpu_branch_runs, st_replay.cpu_branch_runs);
+    // the energy ledger is charged from modelled per-branch terms on
+    // the dispatcher thread, so replay matches fresh bit for bit
+    assert!(st_fresh.energy_j > 0.0);
+    assert!(st_fresh.energy_lane_j > 0.0, "delegated run draws lane power");
+    assert_eq!(st_fresh.energy_j.to_bits(), st_replay.energy_j.to_bits());
+    assert_eq!(st_fresh.energy_idle_j.to_bits(), st_replay.energy_idle_j.to_bits());
+    assert_eq!(st_fresh.energy_cpu_j.to_bits(), st_replay.energy_cpu_j.to_bits());
+    assert_eq!(st_fresh.energy_lane_j.to_bits(), st_replay.energy_lane_j.to_bits());
+    assert_eq!(st_fresh.cpu_modelled_s.to_bits(), st_replay.cpu_modelled_s.to_bits());
     assert_eq!(
         gov_fresh.peak_reserved(),
         gov_replay.peak_reserved(),
@@ -254,8 +273,18 @@ fn standalone_replay_matches_engine_stats_exactly() {
     let g = micro::mixed();
     let p = cpu_only(&g);
     let plan = branch::plan(&g, &p, DEFAULT_BETA);
-    let engine = Engine::new(&g, &p, &plan, None);
+    let mut engine = Engine::new(&g, &p, &plan, None);
     let s = schedules_for(&g, &p, &plan, 4);
+    engine.set_energy_model(parallax::sim::energy_model_for(
+        &g,
+        &p,
+        &plan,
+        &s,
+        &parallax::baselines::parallax(),
+        &parallax::device::SocProfile::pixel6(),
+        &SchedCfg { max_threads: 4, margin: 0.4 },
+        1.0,
+    ));
     let captured = engine.capture(&s, &ShapeEnv::unresolved(), None);
     assert!(captured.is_standalone());
     assert!(captured.num_programs() > 0);
@@ -269,4 +298,12 @@ fn standalone_replay_matches_engine_stats_exactly() {
     assert_eq!(st_fresh.cpu_branch_runs, st.cpu_branch_runs);
     assert_eq!(st_fresh.skipped_fused, st.skipped_fused);
     assert_eq!(st_fresh.peak_arena_bytes, st.peak_arena_bytes);
+    // the capture carries the engine's energy model, so even the
+    // engine-free standalone replay reproduces the ledger bit for bit
+    assert!(st_fresh.energy_j > 0.0);
+    assert_eq!(st_fresh.energy_j.to_bits(), st.energy_j.to_bits());
+    assert_eq!(st_fresh.energy_idle_j.to_bits(), st.energy_idle_j.to_bits());
+    assert_eq!(st_fresh.energy_cpu_j.to_bits(), st.energy_cpu_j.to_bits());
+    assert_eq!(st_fresh.energy_lane_j.to_bits(), st.energy_lane_j.to_bits());
+    assert_eq!(st_fresh.cpu_modelled_s.to_bits(), st.cpu_modelled_s.to_bits());
 }

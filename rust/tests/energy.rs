@@ -1,0 +1,317 @@
+//! Energy-ledger integration tests (EXPERIMENTS.md §Energy).
+//!
+//! The executor's per-run energy accounting ([`parallax::exec::ExecStats`]
+//! `energy_*` fields) must agree with the simulator's Fig. 2 closed form
+//! (`P_idle·T + P_core·core_seconds + P_acc·acc_busy`) term by term when
+//! both price the same schedule on the same SoC, energy-aware placement
+//! ([`parallax::place::PlacePolicy::EnergyAware`]) must trade latency for
+//! strictly less modelled energy without changing outputs, and thermal
+//! throttling must re-place mid-stream with bit-identical outputs.
+
+use parallax::baselines;
+use parallax::branch::{self, BranchPlan, DEFAULT_BETA};
+use parallax::ctrl::SegmentedEngine;
+use parallax::device::{SocProfile, ThermalModel, ThermalStep};
+use parallax::exec::{Engine, IdleTime};
+use parallax::graph::Graph;
+use parallax::memory::{branch_memories, BranchMemory};
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel, Partition};
+use parallax::place::{self, PlacePolicy, PlacementPlan};
+use parallax::sched::{self, LayerSchedule, MemoryGovernor, SchedCfg};
+use parallax::sim::{self, Mode};
+use parallax::util::prop;
+
+fn cpu_only(g: &Graph) -> Partition {
+    partition(
+        g,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    )
+}
+
+fn delegable(g: &Graph) -> Partition {
+    partition(g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX })
+}
+
+fn setup(
+    g: &Graph,
+    p: &Partition,
+    threads: usize,
+) -> (BranchPlan, Vec<BranchMemory>, Vec<LayerSchedule>, SchedCfg) {
+    let plan = branch::plan(g, p, DEFAULT_BETA);
+    let mems = branch_memories(g, p, &plan);
+    let cfg = SchedCfg { max_threads: threads, margin: 0.4 };
+    let schedules = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    (plan, mems, schedules, cfg)
+}
+
+fn assert_close(a: f64, b: f64, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1e-18);
+    assert!(
+        (a - b).abs() / denom < 1e-9,
+        "{what}: exec {a} vs sim {b} (rel {})",
+        (a - b).abs() / denom
+    );
+}
+
+/// Tentpole check: the executor's accumulated ledger reproduces the
+/// simulator's closed form term by term on random static CPU-only DAGs
+/// — idle term from the modelled span, CPU term from core-seconds,
+/// lane term exactly zero.
+#[test]
+fn prop_exec_energy_matches_sim_closed_form_on_random_dags() {
+    let soc = SocProfile::pixel6();
+    let fw = baselines::parallax();
+    prop::check("exec energy == sim closed form", 25, |rng| {
+        let layers = rng.range(2, 8);
+        let width = rng.range(1, 5);
+        let g = micro::random_dag(rng, layers, width);
+        let p = cpu_only(&g);
+        let (plan, mems, schedules, cfg) = setup(&g, &p, 4);
+        let mut engine = Engine::new(&g, &p, &plan, None);
+        engine.set_energy_model(sim::energy_model_for(
+            &g, &p, &plan, &schedules, &fw, &soc, &cfg, 1.0,
+        ));
+        let (_, st) = engine.run(&schedules).unwrap();
+        let r = sim::simulate(
+            &g, &p, &plan, &schedules, &mems, &fw, &soc, &cfg, Mode::CpuOnly, 1.0, 0, 0,
+        );
+        assert!(st.energy_j > 0.0);
+        assert_close(st.cpu_modelled_s, r.cpu_core_seconds, "core seconds");
+        assert_close(st.energy_idle_j, soc.p_idle_w * r.latency_s, "idle term");
+        assert_close(st.energy_cpu_j, soc.p_core_w * r.cpu_core_seconds, "cpu term");
+        assert_eq!(st.energy_lane_j, 0.0, "no lanes on a CPU-only run");
+        assert_close(st.energy_j, r.energy_j, "total energy");
+        assert_close(
+            st.energy_j,
+            st.energy_idle_j + st.energy_cpu_j + st.energy_lane_j,
+            "decomposition sums to the total",
+        );
+    });
+}
+
+/// Monotonicity: delegating work moves energy from the CPU term into
+/// the lane term — a placed run draws lane power, a CPU-forced run
+/// draws none — and outputs stay bit-identical either way.
+#[test]
+fn delegation_moves_energy_from_cpu_term_to_lane_term() {
+    let g = micro::fallback_heavy(4, 3, 128, 6);
+    let soc = SocProfile::pixel6();
+    let p = delegable(&g);
+    let (plan, _, schedules, cfg) = setup(&g, &p, 4);
+    let mut engine = Engine::new(&g, &p, &plan, None);
+    engine.set_energy_model(sim::energy_model_for(
+        &g,
+        &p,
+        &plan,
+        &schedules,
+        &baselines::parallax(),
+        &soc,
+        &cfg,
+        1.0,
+    ));
+
+    let auto = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+    assert!(auto.num_delegated() >= 1, "trunk should delegate on pixel6");
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+
+    let (v_cpu, st_cpu) = engine.run_placed(&schedules, &forced, None).unwrap();
+    let (v_auto, st_auto) = engine.run_placed(&schedules, &auto, None).unwrap();
+    assert_eq!(
+        v_cpu.checksum(),
+        v_auto.checksum(),
+        "placement must never change what is computed"
+    );
+    assert_eq!(st_cpu.energy_lane_j, 0.0);
+    assert!(st_auto.energy_lane_j > 0.0, "delegated run must draw lane power");
+    assert!(
+        st_auto.energy_cpu_j < st_cpu.energy_cpu_j,
+        "delegation must move core-seconds off the host: {} !< {}",
+        st_auto.energy_cpu_j,
+        st_cpu.energy_cpu_j
+    );
+    for st in [&st_cpu, &st_auto] {
+        assert_close(
+            st.energy_j,
+            st.energy_idle_j + st.energy_cpu_j + st.energy_lane_j,
+            "decomposition sums to the total",
+        );
+    }
+}
+
+/// The `IdleTime::MeasuredWall` knob charges the idle term over the
+/// run's host wall clock instead of the modelled span.
+#[test]
+fn measured_wall_idle_time_uses_host_clock() {
+    let g = micro::parallel_chains(4, 8);
+    let p = cpu_only(&g);
+    let (plan, _, schedules, cfg) = setup(&g, &p, 4);
+    let soc = SocProfile::pixel6();
+    let mut em = sim::energy_model_for(
+        &g,
+        &p,
+        &plan,
+        &schedules,
+        &baselines::parallax(),
+        &soc,
+        &cfg,
+        1.0,
+    );
+    em.idle = IdleTime::MeasuredWall;
+    let mut engine = Engine::new(&g, &p, &plan, None);
+    engine.set_energy_model(em);
+    let (_, st) = engine.run(&schedules).unwrap();
+    assert!(st.wall_s > 0.0);
+    assert_eq!(
+        st.energy_idle_j.to_bits(),
+        (soc.p_idle_w * st.wall_s).to_bits(),
+        "measured idle term is priced over the reported wall clock"
+    );
+    assert!(st.energy_j > 0.0);
+}
+
+/// `EnergyAware { alpha: 1.0 }` is a pure-latency score — it must
+/// reproduce the `Auto` placement exactly.
+#[test]
+fn energy_aware_alpha_one_matches_auto() {
+    for g in [micro::fallback_heavy(4, 3, 72, 6), micro::mixed()] {
+        let p = delegable(&g);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let soc = SocProfile::pixel6();
+        let auto = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        let ea1 =
+            place::assign(&g, &p, &plan, &soc, PlacePolicy::EnergyAware { alpha: 1.0 });
+        assert_eq!(auto.assignment, ea1.assignment);
+    }
+}
+
+/// Acceptance case: on `fallback_heavy(4, 3, 72, 6)` the Pixel 6 TPU
+/// lane is *faster* than the CPU on the trunk but draws more energy, so
+/// `Auto` delegates while `EnergyAware { alpha: 0.0 }` keeps the trunk
+/// on the CPU — strictly less modelled energy, bit-identical outputs.
+#[test]
+fn energy_aware_zero_strictly_beats_auto_on_divergent_model() {
+    let g = micro::fallback_heavy(4, 3, 72, 6);
+    let soc = SocProfile::pixel6();
+    let p = delegable(&g);
+    let (plan, _, schedules, cfg) = setup(&g, &p, 4);
+
+    let auto = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+    let ea0 = place::assign(&g, &p, &plan, &soc, PlacePolicy::EnergyAware { alpha: 0.0 });
+    assert!(auto.num_delegated() >= 1, "Auto must take the faster lane");
+    assert_eq!(ea0.num_delegated(), 0, "alpha=0 must keep the costlier lane idle");
+
+    let e_auto = place::plan_energy(&g, &p, &plan, &auto, &soc);
+    let e_ea0 = place::plan_energy(&g, &p, &plan, &ea0, &soc);
+    assert!(e_auto.is_finite() && e_ea0.is_finite());
+    assert!(
+        e_ea0 < e_auto,
+        "EnergyAware(0) must strictly lower modelled energy: {e_ea0} !< {e_auto}"
+    );
+
+    let mut engine = Engine::new(&g, &p, &plan, None);
+    engine.set_energy_model(sim::energy_model_for(
+        &g,
+        &p,
+        &plan,
+        &schedules,
+        &baselines::parallax(),
+        &soc,
+        &cfg,
+        1.0,
+    ));
+    let (v_auto, st_auto) = engine.run_placed(&schedules, &auto, None).unwrap();
+    let (v_ea0, st_ea0) = engine.run_placed(&schedules, &ea0, None).unwrap();
+    assert_eq!(v_auto.checksum(), v_ea0.checksum(), "policies must agree bit-for-bit");
+    // the executor's ledger sees the same trade the placement model
+    // promised: the all-CPU run draws no lane power
+    assert!(st_auto.energy_lane_j > 0.0);
+    assert_eq!(st_ea0.energy_lane_j, 0.0);
+}
+
+/// Thermal throttling scenario: a stream of inferences heats the lane
+/// the trunk was placed on until its rate factor collapses; the
+/// segmented engine must re-place mid-stream (eventually back onto the
+/// CPU once every lane has throttled), keep every output bit-identical
+/// to a CPU-forced run, and keep every post-throttle lease inside the
+/// governor budget.
+#[test]
+fn thermal_throttling_replaces_mid_stream_bit_identically() {
+    let g = micro::fallback_heavy(4, 3, 128, 6);
+    let soc = SocProfile::pixel6();
+    let p = delegable(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let cfg = SchedCfg { max_threads: 4, margin: 0.4 };
+    const BUDGET: u64 = 1 << 30;
+
+    // calibrate: lane busy-seconds one inference accrues when nothing
+    // throttles (also pins down the CPU-forced reference checksum)
+    let probe = SegmentedEngine::with_thermal(
+        &engine,
+        cfg,
+        BUDGET,
+        &soc,
+        PlacePolicy::Auto,
+        ThermalModel::none(),
+        0.25,
+    );
+    assert!(probe.placement_snapshot().unwrap().num_delegated() >= 1);
+    let (v_probe, _) = probe.run(&[], None).unwrap();
+    let per_run: f64 = probe.lane_busy_s().iter().sum();
+    assert!(per_run > 0.0, "delegated stream must accrue lane busy time");
+    assert_eq!(probe.thermal_replacements(), 0, "none() model never re-places");
+
+    // threshold crossed mid-stream; past it the lane runs 1000x slower,
+    // so no lane that has done real work can keep the trunk
+    let model =
+        ThermalModel::new(vec![ThermalStep { busy_s: per_run * 2.5, rate_factor: 1e-3 }]);
+    let se = SegmentedEngine::with_thermal(
+        &engine,
+        cfg,
+        BUDGET,
+        &soc,
+        PlacePolicy::Auto,
+        model,
+        0.25,
+    );
+    let before = se.placement_snapshot().unwrap();
+    assert!(before.num_delegated() >= 1);
+
+    let gov = MemoryGovernor::new(BUDGET);
+    let mut checksums = Vec::new();
+    for _ in 0..8 {
+        let (v, _) = se.run(&[], Some(&gov)).unwrap();
+        checksums.push(v.checksum());
+        assert_eq!(gov.in_use(), 0, "every lease must be returned");
+        assert!(
+            gov.peak_reserved() <= gov.budget(),
+            "post-throttle leases must respect the governor budget"
+        );
+    }
+    assert!(
+        se.thermal_replacements() >= 1,
+        "the throttled lane must trigger a mid-stream re-placement"
+    );
+    let after = se.placement_snapshot().unwrap();
+    assert_ne!(before.assignment, after.assignment, "placement must have moved");
+    assert_eq!(
+        after.num_delegated(),
+        0,
+        "with every worked lane throttled 1000x the trunk must fall back to CPU"
+    );
+
+    // bit-identical across the whole stream — before, during, and after
+    // the re-placements — and equal to a CPU-forced reference
+    let forced = PlacementPlan::cpu_only(plan.branches.len());
+    let cpu_se = SegmentedEngine::with_placement(&engine, cfg, BUDGET, forced);
+    let (v_cpu, _) = cpu_se.run(&[], None).unwrap();
+    assert_eq!(v_probe.checksum(), v_cpu.checksum());
+    for (i, c) in checksums.iter().enumerate() {
+        assert_eq!(
+            *c,
+            v_cpu.checksum(),
+            "run {i} of the throttling stream must stay bit-identical"
+        );
+    }
+}

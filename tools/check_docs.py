@@ -14,7 +14,11 @@ Verifies, over the whole repo:
      in Cargo.toml;
   5. every backticked module path in ARCHITECTURE.md's paper-section ->
      module map names a real `rust/src/<module>` (the leading path
-     segment must exist as rust/src/<seg>/ or rust/src/<seg>.rs).
+     segment must exist as rust/src/<seg>/ or rust/src/<seg>.rs);
+  6. every `ExecStats::<field>` mention in EXPERIMENTS.md names a real
+     public field of `exec::ExecStats` (rust/src/exec/mod.rs) — the
+     §Energy table documents the per-run ledger by field name, so a
+     rename there must not silently orphan the docs.
 
 Exit code 0 = clean; 1 = dangling references (each printed).
 Run from the repo root: `python3 tools/check_docs.py`.
@@ -90,6 +94,50 @@ def module_map_rows(arch_text):
             continue
         tokens.extend(MODULE_TOKEN.findall(cells[2]))
     return tokens
+
+
+EXEC_STATS_REF = re.compile(r"\bExecStats::([a-z_][a-z0-9_]*)\b")
+PUB_FIELD = re.compile(r"^\s*pub\s+([a-z_][a-z0-9_]*)\s*:", re.MULTILINE)
+
+
+def exec_stats_fields():
+    """Public field names of `struct ExecStats` in rust/src/exec/mod.rs."""
+    path = os.path.join(ROOT, "rust", "src", "exec", "mod.rs")
+    if not os.path.exists(path):
+        return None
+    text = open(path, encoding="utf-8").read()
+    m = re.search(r"pub struct ExecStats\s*\{", text)
+    if not m:
+        return None
+    # body runs to the first closing brace at column start after the
+    # struct opens (ExecStats is a plain field struct, no nesting)
+    body = text[m.end():]
+    end = body.find("\n}")
+    if end >= 0:
+        body = body[:end]
+    return set(PUB_FIELD.findall(body))
+
+
+def check_exec_stats_refs(problems):
+    exp = os.path.join(ROOT, "EXPERIMENTS.md")
+    if not os.path.exists(exp):
+        return
+    refs = set(EXEC_STATS_REF.findall(open(exp, encoding="utf-8").read()))
+    if not refs:
+        return
+    fields = exec_stats_fields()
+    if fields is None:
+        problems.append(
+            "EXPERIMENTS.md names ExecStats fields but rust/src/exec/mod.rs "
+            "has no parseable `pub struct ExecStats`"
+        )
+        return
+    for field in sorted(refs):
+        if field not in fields:
+            problems.append(
+                f"EXPERIMENTS.md: ExecStats::{field} is not a pub field of "
+                f"exec::ExecStats (rust/src/exec/mod.rs)"
+            )
 
 
 def check_module_map(problems):
@@ -209,6 +257,9 @@ def main():
 
     # 5. ARCHITECTURE.md module-map rows must name real rust/src modules
     check_module_map(problems)
+
+    # 6. EXPERIMENTS.md ExecStats field mentions must exist in the struct
+    check_exec_stats_refs(problems)
 
     if problems:
         print("docs-integrity check FAILED:")
