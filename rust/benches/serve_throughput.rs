@@ -195,4 +195,67 @@ fn main() {
     b.record("isolated_mean_per_request", iso_wall * 1e9 / iso_resp.len() as f64);
     b.record("governed_mean_per_request", gov_wall * 1e9 / gov_resp.len() as f64);
     b.report();
+
+    // ---- multi-model: shared-ledger vs independent placement --------
+    // Two fallback-heavy tenants on pixel6.  Placed independently, both
+    // trunk onto the same (fastest) lane; the shared lane ledger spreads
+    // them.  Same closed-loop load either way.
+    let soc = SocProfile::pixel6();
+    let lanes = soc.lanes.len();
+    let heavy = || {
+        Pipeline::from_graph(
+            Framework::Parallax,
+            parallax::models::micro::fallback_heavy(4, 4, 128, 6),
+            &parallax::partition::CostModel {
+                min_ops: 1,
+                min_flops: 0,
+                max_bytes_per_flop: f64::MAX,
+            },
+            &soc,
+            Mode::Heterogeneous,
+            SchedCfg::default(),
+        )
+    };
+    const TENANTS: [(&str, u64); 2] = [("fh-a", 21), ("fh-b", 22)];
+
+    let mut indep = Server::new();
+    for (name, seed) in TENANTS {
+        let (placement, demand, exec) =
+            parallax::serve::placed_pipeline_executor(heavy(), seed);
+        println!(
+            "independent   {name}: lane jobs {:?}",
+            placement.lane_job_counts(lanes)
+        );
+        indep.register_with_demand(name, demand, exec);
+    }
+    let rep_i = indep.run_load(&["fh-a", "fh-b"], 160, 8, SEED).expect("independent load");
+    drop(indep);
+
+    let mut shared = Server::new();
+    for (name, seed) in TENANTS {
+        shared.register_placed(name, heavy(), seed);
+    }
+    for (name, placement) in shared.placements() {
+        println!(
+            "shared-ledger {name}: lane jobs {:?}",
+            placement.lane_job_counts(lanes)
+        );
+    }
+    let rep_s = shared.run_load(&["fh-a", "fh-b"], 160, 8, SEED).expect("shared load");
+    println!(
+        "multi-model mean/request: independent {:.3} ms, shared ledger {:.3} ms",
+        rep_i.wall_s * 1e3 / rep_i.responses.len() as f64,
+        rep_s.wall_s * 1e3 / rep_s.responses.len() as f64
+    );
+
+    let mut b = parallax::util::bench::Bench::new("serve_throughput multi");
+    b.record(
+        "independent_mean_per_request",
+        rep_i.wall_s * 1e9 / rep_i.responses.len() as f64,
+    );
+    b.record(
+        "shared_ledger_mean_per_request",
+        rep_s.wall_s * 1e9 / rep_s.responses.len() as f64,
+    );
+    b.report();
 }

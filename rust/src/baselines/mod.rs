@@ -234,6 +234,41 @@ impl Pipeline {
         })
     }
 
+    /// Build a pipeline around an arbitrary graph (micro-benchmark and
+    /// serving-test workloads) instead of a zoo [`ModelKind`].  The
+    /// caller picks the partition cost model; weight bytes are zero
+    /// (micro graphs synthesize their weights).  No capability gating:
+    /// this is the Parallax-style path for graphs that have no Table 3
+    /// cell of their own.
+    pub fn from_graph(
+        fw: Framework,
+        g: Graph,
+        cm: &CostModel,
+        soc: &SocProfile,
+        mode: Mode,
+        cfg: SchedCfg,
+    ) -> Self {
+        let p = partition(&g, cm);
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let profile = fw.profile();
+        let activation_bytes = activation_footprint(&g, &p, &plan, &profile);
+        Self {
+            framework: fw,
+            profile,
+            soc: soc.clone(),
+            mode,
+            weight_bytes: 0,
+            graph: g,
+            partition: p,
+            plan,
+            mems,
+            cfg,
+            activation_bytes,
+            governor: None,
+        }
+    }
+
     /// Attach a shared device-wide [`MemoryGovernor`] (builder style).
     pub fn with_governor(mut self, governor: Arc<MemoryGovernor>) -> Self {
         self.governor = Some(governor);
@@ -323,6 +358,16 @@ impl Pipeline {
 
     /// Run one inference with a dynamic-fill draw.
     pub fn run(&self, rng: &mut Rng, fill: f64) -> SimResult {
+        self.run_with_mode(rng, fill, self.mode)
+    }
+
+    /// [`Pipeline::run`] under an explicit execution mode, regardless
+    /// of how the pipeline was built.  The serving tier uses this for
+    /// the degrade path: a deadline-squeezed request on a
+    /// heterogeneous-placed model re-runs as `Mode::CpuOnly` without
+    /// cloning or re-partitioning the pipeline (same graph, partition,
+    /// schedule draw — only the delegate pricing changes).
+    pub fn run_with_mode(&self, rng: &mut Rng, fill: f64, mode: Mode) -> SimResult {
         let schedules = self.schedule(rng);
         simulate(
             &self.graph,
@@ -333,7 +378,7 @@ impl Pipeline {
             &self.profile,
             &self.soc,
             &self.cfg,
-            self.mode,
+            mode,
             fill,
             self.weight_bytes,
             self.activation_bytes,

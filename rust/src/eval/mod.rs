@@ -422,6 +422,91 @@ pub fn hetero() -> String {
     out
 }
 
+/// Cross-model serving placement (repo-specific, `crate::serve`): two
+/// fallback-heavy tenants on Pixel 6, placed *independently* (each
+/// tenant assigns as if it had the device alone — both trunk onto the
+/// same fastest lane) vs *jointly* through a server's shared
+/// [`LaneLedger`](crate::sched::LaneLedger) (the second tenant sees the
+/// first's lane load and takes the idle lane); then one tenant drops
+/// and the joint re-placement moves the survivor onto the freed lane.
+/// Pure modelling over the same placement engine the dispatcher swaps
+/// executors from, so every cell is deterministic
+/// (EXPERIMENTS.md §Serving).
+pub fn serving() -> String {
+    use crate::place::{self, PlacePolicy};
+
+    let soc = SocProfile::pixel6();
+    let lanes = soc.lanes.len();
+    let loose = CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX };
+    let heavy = || {
+        Pipeline::from_graph(
+            Framework::Parallax,
+            crate::models::micro::fallback_heavy(4, 4, 128, 6),
+            &loose,
+            &soc,
+            Mode::Heterogeneous,
+            SchedCfg::default(),
+        )
+    };
+    let fmt_counts = |counts: &[usize]| {
+        counts.iter().map(usize::to_string).collect::<Vec<_>>().join("+")
+    };
+    let collide =
+        |a: &[usize], b: &[usize]| a.iter().zip(b).any(|(&x, &y)| x > 0 && y > 0);
+
+    let mut out = String::from(
+        "Cross-model serving placement (Pixel 6, two fallback-heavy tenants): \
+         delegated jobs per lane\n",
+    );
+    out += &format!("{:<22} {:>10} {:>10}\n", "deployment", "tenant-a", "tenant-b");
+
+    let mut indep = Vec::new();
+    for name in ["tenant-a", "tenant-b"] {
+        let pipe = heavy();
+        let placed = place::assign(
+            &pipe.graph,
+            &pipe.partition,
+            &pipe.plan,
+            &pipe.soc,
+            PlacePolicy::Auto,
+        );
+        indep.push((name, placed.lane_job_counts(lanes)));
+    }
+    out += &format!(
+        "{:<22} {:>10} {:>10}  {}\n",
+        "independent assign",
+        fmt_counts(&indep[0].1),
+        fmt_counts(&indep[1].1),
+        if collide(&indep[0].1, &indep[1].1) { "COLLIDE" } else { "disjoint" },
+    );
+
+    let mut server = crate::serve::Server::new();
+    server.register_placed("tenant-a", heavy(), 7);
+    server.register_placed("tenant-b", heavy(), 8);
+    let shared: Vec<(String, Vec<usize>)> = server
+        .placements()
+        .into_iter()
+        .map(|(n, p)| (n, p.lane_job_counts(lanes)))
+        .collect();
+    out += &format!(
+        "{:<22} {:>10} {:>10}  {}\n",
+        "shared lane ledger",
+        fmt_counts(&shared[0].1),
+        fmt_counts(&shared[1].1),
+        if collide(&shared[0].1, &shared[1].1) { "COLLIDE" } else { "disjoint" },
+    );
+
+    server.drop_model("tenant-a").expect("registered above");
+    let after = server.placements();
+    out += &format!(
+        "{:<22} {:>10} {:>10}  survivor re-placed onto the freed lane\n",
+        "after drop(tenant-a)",
+        "-",
+        fmt_counts(&after[0].1.lane_job_counts(lanes)),
+    );
+    out
+}
+
 /// Dispatch by name (CLI + tests).
 pub fn run(which: &str) -> Option<String> {
     Some(match which {
@@ -433,6 +518,7 @@ pub fn run(which: &str) -> Option<String> {
         "fig2" => fig2(),
         "fig3" => fig3(),
         "hetero" => hetero(),
+        "serving" => serving(),
         "ablation-beta" => ablation_beta(),
         "ablation-margin" => ablation_margin(),
         "ablation-cost-model" => ablation_cost_model(),
@@ -440,9 +526,9 @@ pub fn run(which: &str) -> Option<String> {
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 11] = [
+pub const ALL_EXPERIMENTS: [&str; 12] = [
     "table3", "table4", "table5", "table6", "table7", "fig2", "fig3", "hetero",
-    "ablation-beta", "ablation-margin", "ablation-cost-model",
+    "serving", "ablation-beta", "ablation-margin", "ablation-cost-model",
 ];
 
 #[cfg(test)]
@@ -477,6 +563,18 @@ mod tests {
         // at least one (model, device) cell must delegate (the cell
         // format prints "<n>/<staging>KB/<acc>v<cpu>" when it does)
         assert!(t.contains("KB/"), "{t}");
+    }
+
+    #[test]
+    fn serving_experiment_tenants_disjoint_under_shared_ledger() {
+        let t = serving();
+        assert!(t.contains("independent assign"));
+        let shared = t
+            .lines()
+            .find(|l| l.starts_with("shared lane ledger"))
+            .expect("shared row present");
+        assert!(shared.contains("disjoint"), "{t}");
+        assert!(t.contains("after drop(tenant-a)"));
     }
 }
 

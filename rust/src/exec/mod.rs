@@ -497,6 +497,21 @@ impl<'a> Engine<'a> {
         self.run_placed_opts(schedules, placement, governor, true)
     }
 
+    /// CPU-forced run of the same schedules — the serving tier's
+    /// degrade path.  Identical to [`Engine::run_placed`] under an
+    /// all-CPU [`PlacementPlan::cpu_only`] placement, so its outputs
+    /// are bit-identical to both the classic [`Engine::run`] and any
+    /// delegated placement of the same schedules (the delegate workers
+    /// run the same host kernels).  A deadline-squeezed request served
+    /// this way returns exactly the bytes the placed path would have.
+    pub fn run_cpu_forced(
+        &self,
+        schedules: &[LayerSchedule],
+    ) -> anyhow::Result<(Values, ExecStats)> {
+        let forced = PlacementPlan::cpu_only(self.plan.branches.len());
+        self.run_placed(schedules, &forced, None)
+    }
+
     /// [`Engine::run_placed`] with the cross-layer overlap knob
     /// exposed.  `overlap: false` reproduces the barrier-join
     /// behaviour — every lane job merges at its own layer's end — the

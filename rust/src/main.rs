@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
-//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|all>
+//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|all>
 //! parallax inspect --model whisper-tiny        # graph/branch/layer stats
 //! parallax serve --requests 64 --concurrency 8 # governed serving demo
 //! parallax smoke                               # PJRT round-trip check
@@ -40,10 +40,11 @@ USAGE:
   parallax run     --model <slug> --device <name> [--mode cpu|het]
                    [--threads N] [--margin F] [--runs N] [--framework NAME]
                    [--config file.toml]
-  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|all>
+  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|all>
   parallax inspect --model <slug> [--device <name>]
   parallax serve   [--requests N] [--concurrency N] [--threads N]
-                   [--workers N] [--batch N] [--budget-mb N] [--config file.toml]
+                   [--workers N] [--batch N] [--budget-mb N]
+                   [--deadline-ms F] [--config file.toml]
   parallax smoke
 
 models:  yolov8n whisper-tiny swinv2-tiny clip-text distilbert
@@ -222,8 +223,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 model.slug()
             );
         } else {
-            // static models: device placement chosen at register time —
-            // delegated branches lease staging, CPU branches lease M_i
+            // static models: the *server* decides their placement —
+            // jointly, over the shared per-lane busy-time ledger, so
+            // tenants spread across lanes instead of colliding
             let pipe =
                 Pipeline::build(Framework::Parallax, model, &soc, Mode::Heterogeneous, sched_cfg)
                     .or_else(|_| {
@@ -231,24 +233,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     })
                     .expect("cpu supported")
                     .with_governor(governor.clone());
-            let (placement, demand, exec) = parallax::serve::placed_pipeline_executor(pipe, 7);
-            server.register_with_demand(model.slug(), demand, exec);
+            let placement = server.register_placed(model.slug(), pipe, 7);
             println!(
-                "registered {:<12} placement: {} delegated branch(es) on {} lane(s), \
-                 demand {:.2} MB (incl. {:.1} KB staging)",
+                "registered {:<12} server-placed: {} delegated branch(es) on {} lane(s), \
+                 staging {:.1} KB",
                 model.slug(),
                 placement.num_delegated(),
                 placement.num_lanes_used(),
-                demand as f64 / 1e6,
                 placement.total_staging_bytes() as f64 / 1e3
             );
         }
     }
+    for (name, p) in server.placements() {
+        println!(
+            "joint placement {name:<12} lane jobs {:?}",
+            p.lane_job_counts(soc.lanes.len())
+        );
+    }
+    let deadline_ms = args.get_f64("deadline-ms", 0.0);
+    let deadline_s = if deadline_ms > 0.0 { Some(deadline_ms / 1e3) } else { None };
     let names: Vec<&str> = models.iter().map(|m| m.slug()).collect();
-    let report = server.run_load(&names, n, conc, 11)?;
+    let report = server.run_load_slo(&names, n, conc, 11, deadline_s)?;
     println!(
         "served {n} requests at concurrency {conc}: {:.1} req/s (wall {:.2}s)",
         report.throughput_rps, report.wall_s
+    );
+    println!(
+        "outcomes: {} admitted / {} degraded-cpu / {} shed / {} dropped",
+        report.admitted, report.degraded, report.shed, report.dropped
     );
     for (model, s) in &report.latency {
         println!(

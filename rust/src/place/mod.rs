@@ -211,6 +211,28 @@ impl PlacementPlan {
     pub fn total_staging_bytes(&self) -> u64 {
         self.delegated().map(|b| self.staging_bytes[b]).sum()
     }
+
+    /// Modelled busy seconds this plan adds to each lane (sum of the
+    /// delegate latencies of the branches assigned there), padded to at
+    /// least `lanes` entries.  This is the per-tenant contribution the
+    /// serving ledger accumulates so that later placements see the
+    /// lanes other models already occupy (see
+    /// [`assign_with_loads`]).
+    pub fn lane_busy_s(&self, lanes: usize) -> Vec<f64> {
+        let width = self
+            .delegated()
+            .filter_map(|b| self.lane_of(b))
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0)
+            .max(lanes);
+        let mut busy = vec![0.0f64; width];
+        for b in self.delegated() {
+            busy[self.lane_of(b).expect("delegated branch has a lane")] +=
+                self.delegate_latency_s[b];
+        }
+        busy
+    }
 }
 
 /// Single-thread share of the SoC memory bandwidth a streaming CPU
@@ -414,6 +436,26 @@ pub fn assign(
     soc: &SocProfile,
     policy: PlacePolicy,
 ) -> PlacementPlan {
+    assign_with_loads(g, p, plan, soc, policy, &[])
+}
+
+/// [`assign`] against pre-existing per-lane loads: the busy-time
+/// accumulator starts from `loads[l]` instead of zero, so a model
+/// placed on a device other tenants already occupy is steered toward
+/// the lanes they left idle.  `loads` is indexed by lane (missing
+/// entries are zero) and expressed in the policy's score units —
+/// seconds under [`PlacePolicy::Auto`], blended score under
+/// [`PlacePolicy::EnergyAware`].  The serving tier feeds it from the
+/// other tenants' [`PlacementPlan::lane_busy_s`] sums; `assign` is the
+/// empty-device special case.
+pub fn assign_with_loads(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    soc: &SocProfile,
+    policy: PlacePolicy,
+    loads: &[f64],
+) -> PlacementPlan {
     let (w_lat, w_en) = match policy {
         PlacePolicy::EnergyAware { alpha } => (alpha, 1.0 - alpha),
         PlacePolicy::Auto | PlacePolicy::ForceCpu => (1.0, 0.0),
@@ -421,6 +463,9 @@ pub fn assign(
     let nb = plan.branches.len();
     let mut out = PlacementPlan::blank(nb);
     let mut busy = vec![0.0f64; soc.lanes.len()];
+    for (l, b) in busy.iter_mut().enumerate() {
+        *b = loads.get(l).copied().unwrap_or(0.0);
+    }
     for b in 0..nb {
         out.cpu_latency_s[b] = cpu_latency(g, p, plan, b, soc);
         if !delegate_safe(g, p, plan, b) {
@@ -588,6 +633,51 @@ mod tests {
         assert_eq!(placed.num_lanes_used(), 2, "busy-time balancing spreads lanes");
         let counts = placed.lane_job_counts(soc.lanes.len());
         assert_eq!(counts, vec![1, 1]);
+    }
+
+    #[test]
+    fn preloaded_lane_steers_single_trunk_away() {
+        // one heavy trunk, empty device: the fastest lane wins.  Same
+        // trunk with that lane pre-loaded (another tenant's busy time):
+        // placement must move to the idle lane — the serving ledger's
+        // whole premise.
+        let g = micro::fallback_heavy(4, 4, 128, 6);
+        let soc = SocProfile::pixel6();
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let empty = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert_eq!(empty.num_delegated(), 1, "single trunk delegates");
+        let home = empty.delegated().next().and_then(|b| empty.lane_of(b)).unwrap();
+        let mut loads = vec![0.0; soc.lanes.len()];
+        loads[home] = 1.0; // a whole second of tenant busy time
+        let steered = assign_with_loads(&g, &p, &plan, &soc, PlacePolicy::Auto, &loads);
+        assert_eq!(steered.num_delegated(), 1);
+        let away = steered.delegated().next().and_then(|b| steered.lane_of(b)).unwrap();
+        assert_ne!(away, home, "pre-loaded lane must lose the trunk");
+        // per-tenant busy contribution feeds back into the ledger
+        let busy = steered.lane_busy_s(soc.lanes.len());
+        assert_eq!(busy.len(), soc.lanes.len());
+        assert!(busy[away] > 0.0 && busy[home] == 0.0);
+        assert!((busy[away] - steered.delegate_latency_s[steered.delegated().next().unwrap()])
+            .abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn assign_is_assign_with_empty_loads() {
+        for g in [
+            micro::fallback_heavy(4, 4, 128, 6),
+            micro::fallback_heavy_lanes(2, 2, 4, 128, 6),
+        ] {
+            let soc = SocProfile::pixel6();
+            let p = partition(&g, &loose());
+            let plan = branch::plan(&g, &p, DEFAULT_BETA);
+            let a = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+            let b = assign_with_loads(&g, &p, &plan, &soc, PlacePolicy::Auto, &[]);
+            assert_eq!(a.assignment, b.assignment, "{}", g.name);
+            let c = assign_with_loads(&g, &p, &plan, &soc, PlacePolicy::Auto, &[0.0, 0.0]);
+            assert_eq!(a.assignment, c.assignment, "zero loads are no loads");
+        }
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Shared per-lane busy-time ledger — the serving tier's cross-model
+//! view of the accelerator lanes.
+//!
+//! The [`MemoryGovernor`](super::MemoryGovernor) answers "how many
+//! bytes are in flight"; this ledger answers the placement-side
+//! question: "how much modelled lane time have the *other* tenants
+//! already claimed?"  It tracks two quantities per lane:
+//!
+//! * **static load** — the per-request modelled busy seconds each
+//!   registered model's [`PlacementPlan`](crate::place::PlacementPlan)
+//!   puts on the lane (its
+//!   [`lane_busy_s`](crate::place::PlacementPlan::lane_busy_s) sum).
+//!   Rebuilt from scratch on every joint re-placement
+//!   (`register`/`drop`) and fed back into
+//!   [`assign_with_loads`](crate::place::assign_with_loads) so tenants
+//!   spread across lanes instead of piling onto the fastest one.
+//! * **outstanding work** — modelled service seconds of admitted but
+//!   not-yet-completed requests, the figure SLO admission compares a
+//!   request's deadline against (`outstanding + service ≤ deadline`).
+//!
+//! Outstanding time is held internally in integer nanoseconds so that
+//! admit/complete pairs cancel *exactly* — a drained server always
+//! reads back `0.0`, which the deterministic deadline tests pin.
+
+use std::sync::Mutex;
+
+/// Ledger state: lanes grow on demand (a server does not know its
+/// tenants' SoCs until they register).
+#[derive(Default)]
+struct Ledger {
+    /// Per-lane static busy seconds per request, summed over tenants.
+    static_s: Vec<f64>,
+    /// Per-lane outstanding admitted service, integer nanoseconds.
+    outstanding_ns: Vec<u64>,
+}
+
+impl Ledger {
+    fn ensure(&mut self, lanes: usize) {
+        if self.static_s.len() < lanes {
+            self.static_s.resize(lanes, 0.0);
+        }
+        if self.outstanding_ns.len() < lanes {
+            self.outstanding_ns.resize(lanes, 0);
+        }
+    }
+}
+
+/// Seconds → integer nanoseconds (saturating; negative and NaN clamp
+/// to zero, so a hostile service figure cannot corrupt the ledger).
+fn to_ns(s: f64) -> u64 {
+    if s.is_nan() {
+        return 0;
+    }
+    (s.max(0.0) * 1e9) as u64
+}
+
+/// Shared per-lane busy-time ledger (see module docs).  All methods
+/// take `&self`; the server holds it in an `Arc` next to the governor.
+#[derive(Default)]
+pub struct LaneLedger {
+    inner: Mutex<Ledger>,
+}
+
+impl LaneLedger {
+    /// Ledger sized for `lanes` lanes (it grows on demand anyway).
+    pub fn new(lanes: usize) -> Self {
+        let led = LaneLedger::default();
+        led.inner.lock().unwrap().ensure(lanes);
+        led
+    }
+
+    /// Number of lanes the ledger has seen so far.
+    pub fn num_lanes(&self) -> usize {
+        let st = self.inner.lock().unwrap();
+        st.static_s.len().max(st.outstanding_ns.len())
+    }
+
+    /// Clear the static per-request loads (start of a joint
+    /// re-placement pass); outstanding admitted work is untouched.
+    pub fn reset_static(&self) {
+        self.inner.lock().unwrap().static_s.iter_mut().for_each(|s| *s = 0.0);
+    }
+
+    /// Accumulate one tenant's per-lane busy seconds (its placement's
+    /// [`lane_busy_s`](crate::place::PlacementPlan::lane_busy_s)).
+    pub fn add_static(&self, per_lane_busy_s: &[f64]) {
+        let mut st = self.inner.lock().unwrap();
+        st.ensure(per_lane_busy_s.len());
+        for (slot, add) in st.static_s.iter_mut().zip(per_lane_busy_s) {
+            *slot += add;
+        }
+    }
+
+    /// Snapshot of the accumulated static loads — what the *next*
+    /// tenant's `assign_with_loads` call starts from.
+    pub fn static_loads(&self) -> Vec<f64> {
+        self.inner.lock().unwrap().static_s.clone()
+    }
+
+    /// Record an admitted request's modelled service time on a lane.
+    pub fn admit(&self, lane: usize, service_s: f64) {
+        let mut st = self.inner.lock().unwrap();
+        st.ensure(lane + 1);
+        st.outstanding_ns[lane] = st.outstanding_ns[lane].saturating_add(to_ns(service_s));
+    }
+
+    /// Pop a completed (or abandoned) request's service time.  Pass the
+    /// same figure that was admitted; the integer representation makes
+    /// the pair cancel exactly.
+    pub fn complete(&self, lane: usize, service_s: f64) {
+        let mut st = self.inner.lock().unwrap();
+        st.ensure(lane + 1);
+        st.outstanding_ns[lane] = st.outstanding_ns[lane].saturating_sub(to_ns(service_s));
+    }
+
+    /// Outstanding admitted service seconds on a lane — the queueing
+    /// estimate SLO admission adds the candidate's own service to.
+    pub fn outstanding(&self, lane: usize) -> f64 {
+        let st = self.inner.lock().unwrap();
+        st.outstanding_ns.get(lane).copied().unwrap_or(0) as f64 / 1e9
+    }
+
+    /// Total outstanding service seconds across all lanes.
+    pub fn outstanding_total(&self) -> f64 {
+        let st = self.inner.lock().unwrap();
+        st.outstanding_ns.iter().sum::<u64>() as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_complete_cancels_exactly() {
+        let led = LaneLedger::new(2);
+        for s in [1.0, 0.25, 0.1, 3.3e-3] {
+            led.admit(0, s);
+        }
+        assert!(led.outstanding(0) > 0.0);
+        for s in [1.0, 0.25, 0.1, 3.3e-3] {
+            led.complete(0, s);
+        }
+        assert_eq!(led.outstanding(0), 0.0, "drained ledger must read exactly zero");
+        assert_eq!(led.outstanding_total(), 0.0);
+    }
+
+    #[test]
+    fn static_loads_reset_and_accumulate() {
+        let led = LaneLedger::new(0);
+        led.add_static(&[0.5, 0.0]);
+        led.add_static(&[0.25, 1.0, 2.0]); // grows to 3 lanes
+        assert_eq!(led.static_loads(), vec![0.75, 1.0, 2.0]);
+        assert_eq!(led.num_lanes(), 3);
+        led.reset_static();
+        assert_eq!(led.static_loads(), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn complete_saturates_and_rejects_garbage() {
+        let led = LaneLedger::new(1);
+        led.complete(0, 5.0); // more than was ever admitted
+        assert_eq!(led.outstanding(0), 0.0);
+        led.admit(0, f64::NAN);
+        led.admit(0, -3.0);
+        assert_eq!(led.outstanding(0), 0.0, "NaN/negative service is ignored");
+        assert_eq!(led.outstanding(9), 0.0, "unknown lanes read zero");
+    }
+}

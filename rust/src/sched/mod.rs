@@ -35,8 +35,10 @@
 //! ```
 
 pub mod governor;
+pub mod lane_ledger;
 
 pub use governor::{GovernorStats, Lease, MemoryGovernor};
+pub use lane_ledger::LaneLedger;
 
 use crate::branch::{Branch, BranchPlan};
 use crate::memory::BranchMemory;

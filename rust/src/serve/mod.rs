@@ -20,6 +20,19 @@
 //! * **Micro-batching** — up to [`ServeCfg::max_batch`] queued requests
 //!   for the same model execute as one admission + one
 //!   [`ModelExecutor::execute_batch`] call, amortising dispatch.
+//! * **Server-wide placement** — tenants registered via
+//!   [`Server::register_placed`] are placed *jointly*: one shared
+//!   per-lane busy-time [`LaneLedger`] accumulates every tenant's
+//!   modelled lane seconds, each `register`/`drop` re-places all
+//!   placed tenants against it
+//!   ([`assign_with_loads`](crate::place::assign_with_loads)), and
+//!   executor swaps are generation-stamped so a worker mid-batch on
+//!   the old placement can never restore a stale executor.
+//! * **SLO admission** — deadline-tagged requests
+//!   ([`Server::submit_with_deadline`]) are admitted only when the
+//!   target lane's outstanding modelled work fits the deadline;
+//!   otherwise they degrade to the bit-identical CPU-forced path or
+//!   are shed with an explicit [`Outcome`] — never silently dropped.
 //!
 //! (Offline build: no tokio — the dispatcher is std-thread + condvar
 //! based, which for a single-host serving demo is equivalent.)
@@ -41,7 +54,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use crate::sched::MemoryGovernor;
+use crate::sched::{LaneLedger, MemoryGovernor};
 use crate::util::stats::{summarize, Summary};
 
 /// An inference request (synthetic payload: seed for the input draw).
@@ -50,7 +63,26 @@ pub struct Request {
     pub id: u64,
     pub model: String,
     pub seed: u64,
+    /// Optional SLO deadline, seconds from submission; `None` = best
+    /// effort (always admitted).
+    pub deadline_s: Option<f64>,
     pub submitted: Instant,
+}
+
+/// How the dispatcher resolved a request — every request gets an
+/// explicit outcome; nothing is silently dropped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served on the model's normal (placed) path.
+    Admitted,
+    /// The deadline could not be met on the placed lane; served on the
+    /// bit-identical CPU-forced path instead.
+    DegradedCpu,
+    /// The deadline is unmeetable even degraded: rejected without
+    /// executing (`checksum` 0, `batched` 0).
+    Shed,
+    /// The model was dropped while the request was queued.
+    Dropped,
 }
 
 /// A completed response.
@@ -64,8 +96,12 @@ pub struct Response {
     pub exec_s: f64,
     /// Checksum of outputs (determinism probe).
     pub checksum: f64,
-    /// Size of the micro-batch this request was served in (≥ 1).
+    /// Size of the micro-batch this request was served in (≥ 1; 0 for
+    /// requests that never executed: [`Outcome::Shed`] /
+    /// [`Outcome::Dropped`]).
     pub batched: usize,
+    /// SLO admission outcome.
+    pub outcome: Outcome,
 }
 
 /// Model executor trait — the server is generic over how a model runs
@@ -79,6 +115,20 @@ pub trait ModelExecutor: Send + 'static {
     /// input tensors) override this.
     fn execute_batch(&mut self, seeds: &[u64]) -> anyhow::Result<Vec<(f64, f64)>> {
         seeds.iter().map(|&s| self.execute(s)).collect()
+    }
+
+    /// Run one request on the degraded (CPU-forced) path.  The default
+    /// falls back to [`ModelExecutor::execute`]; placement-aware
+    /// executors override it with a CPU-only run that is bit-identical
+    /// in outputs (same host kernels, no delegate).
+    fn execute_degraded(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+        self.execute(seed)
+    }
+
+    /// Micro-batch of degraded requests; the default loops
+    /// [`ModelExecutor::execute_degraded`].
+    fn execute_batch_degraded(&mut self, seeds: &[u64]) -> anyhow::Result<Vec<(f64, f64)>> {
+        seeds.iter().map(|&s| self.execute_degraded(s)).collect()
     }
 }
 
@@ -246,6 +296,126 @@ pub fn captured_executor(
     Ok((demand, exec))
 }
 
+/// Modelled per-request service figures SLO admission compares a
+/// request's deadline against.  Derived automatically for tenants
+/// registered via [`Server::register_placed`]; tests and custom
+/// executors can pin exact figures with [`Server::register_with_slo`].
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    /// The busiest lane the model's placement targets (`None` = the
+    /// model runs CPU-only; no lane queueing applies).
+    pub lane: Option<usize>,
+    /// Modelled service seconds one request occupies that lane for.
+    pub lane_service_s: f64,
+    /// Modelled service seconds of the degraded CPU-forced path.
+    pub cpu_service_s: f64,
+}
+
+impl SloSpec {
+    /// Figures from a placement: the lane is the plan's busiest, its
+    /// service the modelled busy seconds the plan puts there, and the
+    /// CPU service the serial sum of the modelled per-branch CPU
+    /// latencies (worst case: no intra-request parallelism assumed).
+    pub fn from_placement(placement: &crate::place::PlacementPlan, lanes: usize) -> Self {
+        let busy = placement.lane_busy_s(lanes);
+        let lane = busy
+            .iter()
+            .enumerate()
+            .filter(|&(_, &b)| b > 0.0)
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("busy times are finite"))
+            .map(|(l, _)| l);
+        Self {
+            lane,
+            lane_service_s: lane.map(|l| busy[l]).unwrap_or(0.0),
+            cpu_service_s: placement.cpu_latency_s.iter().sum(),
+        }
+    }
+}
+
+/// Rebuild recipe for a [`Server::register_placed`] tenant: joint
+/// re-placement swaps executors, so the pipeline lives behind an `Arc`
+/// the fresh executor clones instead of re-building the model.
+struct PlacedSpec {
+    pipe: crate::baselines::Pipeline,
+    rng_seed: u64,
+}
+
+/// A placed tenant's current decision + its rebuild recipe.
+struct PlacedState {
+    spec: Arc<PlacedSpec>,
+    placement: crate::place::PlacementPlan,
+}
+
+/// Simulated executor for a placed tenant: the normal path prices the
+/// placement's mode, the degraded path re-prices the same request
+/// CPU-only (the simulator's analogue of the engine's bit-identical
+/// CPU-forced run).
+struct PlacedSimExecutor {
+    spec: Arc<PlacedSpec>,
+    mode: crate::sim::Mode,
+    rng: crate::util::rng::Rng,
+}
+
+impl ModelExecutor for PlacedSimExecutor {
+    fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+        let r = self.spec.pipe.run_with_mode(&mut self.rng, sim_fill(seed), self.mode);
+        Ok((r.latency_s, r.energy_j))
+    }
+
+    fn execute_degraded(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+        let r = self.spec.pipe.run_with_mode(
+            &mut self.rng,
+            sim_fill(seed),
+            crate::sim::Mode::CpuOnly,
+        );
+        Ok((r.latency_s, r.energy_j))
+    }
+}
+
+/// Real-engine executor with an explicit degraded path, for serving
+/// bit-identity tests: the normal path runs the placement via
+/// [`Engine::run_placed`](crate::exec::Engine::run_placed), the
+/// degraded path runs the same schedules CPU-forced via
+/// [`Engine::run_cpu_forced`](crate::exec::Engine::run_cpu_forced).
+/// Both synthesize identical inputs, so the checksums must agree bit
+/// for bit — the unreachable-lane placement property lifted to the
+/// serving layer.
+pub struct PlacedEngineExecutor {
+    g: crate::graph::Graph,
+    p: crate::partition::Partition,
+    plan: crate::branch::BranchPlan,
+    schedules: Vec<crate::sched::LayerSchedule>,
+    placement: crate::place::PlacementPlan,
+}
+
+impl PlacedEngineExecutor {
+    pub fn new(
+        g: crate::graph::Graph,
+        p: crate::partition::Partition,
+        plan: crate::branch::BranchPlan,
+        schedules: Vec<crate::sched::LayerSchedule>,
+        placement: crate::place::PlacementPlan,
+    ) -> Self {
+        Self { g, p, plan, schedules, placement }
+    }
+}
+
+impl ModelExecutor for PlacedEngineExecutor {
+    fn execute(&mut self, _seed: u64) -> anyhow::Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let engine = crate::exec::Engine::new(&self.g, &self.p, &self.plan, None);
+        let (values, _) = engine.run_placed(&self.schedules, &self.placement, None)?;
+        Ok((t0.elapsed().as_secs_f64(), values.checksum()))
+    }
+
+    fn execute_degraded(&mut self, _seed: u64) -> anyhow::Result<(f64, f64)> {
+        let t0 = Instant::now();
+        let engine = crate::exec::Engine::new(&self.g, &self.p, &self.plan, None);
+        let (values, _) = engine.run_cpu_forced(&self.schedules)?;
+        Ok((t0.elapsed().as_secs_f64(), values.checksum()))
+    }
+}
+
 /// Dispatcher tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeCfg {
@@ -264,6 +434,12 @@ impl Default for ServeCfg {
 struct QueuedJob {
     req: Request,
     reply: mpsc::Sender<anyhow::Result<Response>>,
+    /// Serve on the CPU-forced path (deadline-degraded admission).
+    degraded: bool,
+    /// `(lane, modelled service seconds)` charged to the lane ledger
+    /// at admission; popped when the batch completes or the queue is
+    /// drained, so a drained server's outstanding time reads zero.
+    lane_service: Option<(usize, f64)>,
 }
 
 /// How a model's per-batch lease is sized.
@@ -290,6 +466,22 @@ struct ModelEntry {
     /// submissions are rejected, queued ones get errors) but the
     /// dispatcher and every other model keep running.
     poisoned: bool,
+    /// Swap stamp: bumped whenever a joint re-placement (or a drop)
+    /// installs or retires this model's executor.  A worker records
+    /// the stamp when it takes the executor and only restores it if
+    /// the stamp is unchanged, so a stale executor can never serve
+    /// post-swap traffic — the generation idiom the segmented engine's
+    /// thermal re-placement uses for its plan cache.
+    generation: u64,
+    /// Dropped models keep their slot (worker slot indices stay
+    /// stable) but reject submissions and hold no executor or queue.
+    dropped: bool,
+    /// Modelled figures for SLO admission (placed or pinned); `None`
+    /// disables deadline handling for this model.
+    slo: Option<SloSpec>,
+    /// Present for [`Server::register_placed`] tenants: current
+    /// placement + the recipe joint re-placement rebuilds it from.
+    placed: Option<PlacedState>,
 }
 
 struct Dispatch {
@@ -303,6 +495,10 @@ struct Dispatch {
 
 struct Inner {
     governor: Arc<MemoryGovernor>,
+    /// Shared per-lane busy-time ledger: static tenant loads for joint
+    /// placement + outstanding admitted service for SLO admission.
+    /// Lock order is always dispatcher state → ledger, never reversed.
+    ledger: Arc<LaneLedger>,
     cfg: ServeCfg,
     state: Mutex<Dispatch>,
     work: Condvar,
@@ -312,7 +508,6 @@ struct Inner {
 pub struct Server {
     inner: Arc<Inner>,
     joins: Vec<std::thread::JoinHandle<()>>,
-    names: Vec<String>,
     next_id: AtomicU64,
 }
 
@@ -332,6 +527,7 @@ impl Server {
     pub fn with_config(cfg: ServeCfg, governor: Arc<MemoryGovernor>) -> Self {
         let inner = Arc::new(Inner {
             governor,
+            ledger: Arc::new(LaneLedger::new(0)),
             cfg,
             state: Mutex::new(Dispatch {
                 models: Vec::new(),
@@ -350,12 +546,17 @@ impl Server {
                     .expect("spawn serve worker")
             })
             .collect();
-        Self { inner, joins, names: Vec::new(), next_id: AtomicU64::new(0) }
+        Self { inner, joins, next_id: AtomicU64::new(0) }
     }
 
     /// The shared ledger this server admits against.
     pub fn governor(&self) -> &Arc<MemoryGovernor> {
         &self.inner.governor
+    }
+
+    /// The shared per-lane busy-time ledger (placement + admission).
+    pub fn lane_ledger(&self) -> &Arc<LaneLedger> {
+        &self.inner.ledger
     }
 
     /// Register a model with zero declared memory demand (stub/test
@@ -373,7 +574,7 @@ impl Server {
         demand_bytes: u64,
         exec: Box<dyn ModelExecutor>,
     ) {
-        self.register_entry(model, Demand::Fixed(demand_bytes), exec);
+        self.register_entry(model, Demand::Fixed(demand_bytes), None, exec);
     }
 
     /// Register a *dynamic* model (§3.4): the per-batch lease is
@@ -387,10 +588,30 @@ impl Server {
         demand: Box<dyn Fn(u64) -> u64 + Send + Sync>,
         exec: Box<dyn ModelExecutor>,
     ) {
-        self.register_entry(model, Demand::PerSeed(demand), exec);
+        self.register_entry(model, Demand::PerSeed(demand), None, exec);
     }
 
-    fn register_entry(&mut self, model: &str, demand: Demand, exec: Box<dyn ModelExecutor>) {
+    /// Register a model with pinned SLO figures — deadline-tagged
+    /// submissions for this model go through admission against the
+    /// shared lane ledger using exactly these modelled service times.
+    /// The deterministic deadline tests use this to pin arithmetic.
+    pub fn register_with_slo(
+        &mut self,
+        model: &str,
+        demand_bytes: u64,
+        slo: SloSpec,
+        exec: Box<dyn ModelExecutor>,
+    ) {
+        self.register_entry(model, Demand::Fixed(demand_bytes), Some(slo), exec);
+    }
+
+    fn register_entry(
+        &mut self,
+        model: &str,
+        demand: Demand,
+        slo: Option<SloSpec>,
+        exec: Box<dyn ModelExecutor>,
+    ) {
         let mut st = self.inner.state.lock().unwrap();
         let slot = st.models.len();
         st.models.push(ModelEntry {
@@ -399,23 +620,162 @@ impl Server {
             exec: Some(exec),
             queue: VecDeque::new(),
             poisoned: false,
+            generation: 0,
+            dropped: false,
+            slo,
+            placed: None,
         });
         st.index.insert(model.to_string(), slot);
         drop(st);
-        self.names.push(model.to_string());
         self.inner.work.notify_all();
     }
 
-    /// Registered model names, in registration (fairness-ring) order.
-    pub fn models(&self) -> Vec<&str> {
-        self.names.iter().map(String::as_str).collect()
+    /// Register a simulated pipeline as a *server-placed* tenant: the
+    /// server, not the caller, decides its lane placement — jointly
+    /// with every other placed tenant, against the shared
+    /// [`LaneLedger`]'s accumulated loads — and re-decides on every
+    /// later placed `register`/[`Server::drop_model`].  Executor swaps
+    /// are generation-stamped, so in-flight batches on the old
+    /// placement finish and their stale executor is retired, never
+    /// restored.  Returns this tenant's placement as decided right now
+    /// (later registrations may move it; see [`Server::placements`]).
+    pub fn register_placed(
+        &mut self,
+        model: &str,
+        pipe: crate::baselines::Pipeline,
+        rng_seed: u64,
+    ) -> crate::place::PlacementPlan {
+        let branches = pipe.plan.branches.len();
+        let spec = Arc::new(PlacedSpec { pipe, rng_seed });
+        let mut st = self.inner.state.lock().unwrap();
+        let slot = st.models.len();
+        st.models.push(ModelEntry {
+            name: model.to_string(),
+            demand: Arc::new(Demand::Fixed(0)),
+            exec: None,
+            queue: VecDeque::new(),
+            poisoned: false,
+            generation: 0,
+            dropped: false,
+            slo: None,
+            placed: Some(PlacedState {
+                spec,
+                placement: crate::place::PlacementPlan::cpu_only(branches),
+            }),
+        });
+        st.index.insert(model.to_string(), slot);
+        replace_all(&mut st, &self.inner.ledger);
+        let placement = st.models[slot]
+            .placed
+            .as_ref()
+            .expect("just registered placed")
+            .placement
+            .clone();
+        drop(st);
+        self.inner.work.notify_all();
+        placement
     }
 
-    /// Submit a request; returns a receiver for the response.
+    /// Drop a model: its queued requests are answered with
+    /// [`Outcome::Dropped`] (never silently lost), its slot stays (so
+    /// worker indices and submit errors stay stable), and every placed
+    /// tenant is jointly re-placed over the lane time the drop freed.
+    pub fn drop_model(&self, model: &str) -> anyhow::Result<()> {
+        let mut st = self.inner.state.lock().unwrap();
+        let &slot = st
+            .index
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        if st.models[slot].dropped {
+            anyhow::bail!("model {model} was dropped");
+        }
+        st.models[slot].dropped = true;
+        st.models[slot].generation += 1;
+        // a worker mid-batch holds the old executor; the bumped stamp
+        // makes it retire that executor instead of restoring it
+        let exec = st.models[slot].exec.take();
+        let drained: Vec<QueuedJob> = st.models[slot].queue.drain(..).collect();
+        for job in &drained {
+            if let Some((lane, svc)) = job.lane_service {
+                self.inner.ledger.complete(lane, svc);
+            }
+        }
+        replace_all(&mut st, &self.inner.ledger);
+        drop(st);
+        drop(exec);
+        for job in drained {
+            let _ = job.reply.send(Ok(Response {
+                id: job.req.id,
+                model: model.to_string(),
+                latency_s: job.req.submitted.elapsed().as_secs_f64(),
+                exec_s: 0.0,
+                checksum: 0.0,
+                batched: 0,
+                outcome: Outcome::Dropped,
+            }));
+        }
+        self.inner.work.notify_all();
+        Ok(())
+    }
+
+    /// Current placements of the live server-placed tenants, in
+    /// registration order.
+    pub fn placements(&self) -> Vec<(String, crate::place::PlacementPlan)> {
+        let st = self.inner.state.lock().unwrap();
+        st.models
+            .iter()
+            .filter(|m| !m.dropped)
+            .filter_map(|m| {
+                m.placed.as_ref().map(|p| (m.name.clone(), p.placement.clone()))
+            })
+            .collect()
+    }
+
+    /// Registered, not-dropped model names in registration (fairness-
+    /// ring) order.
+    pub fn models(&self) -> Vec<String> {
+        let st = self.inner.state.lock().unwrap();
+        st.models
+            .iter()
+            .filter(|m| !m.dropped)
+            .map(|m| m.name.clone())
+            .collect()
+    }
+
+    /// Whether `model` was registered and then dropped.
+    fn is_dropped(&self, model: &str) -> bool {
+        let st = self.inner.state.lock().unwrap();
+        st.index
+            .get(model)
+            .map_or(false, |&slot| st.models[slot].dropped)
+    }
+
+    /// Submit a best-effort request (no deadline; always admitted).
     pub fn submit(
         &self,
         model: &str,
         seed: u64,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
+        self.submit_with_deadline(model, seed, None)
+    }
+
+    /// Submit a request, optionally deadline-tagged.  Admission runs
+    /// under the dispatcher lock, in submission order, against the
+    /// shared lane ledger:
+    ///
+    /// * the lane's outstanding modelled work plus this request's lane
+    ///   service fits the deadline → **admitted** on the placed path;
+    /// * it doesn't, but the degraded CPU-forced service does →
+    ///   **degraded** ([`Outcome::DegradedCpu`], bit-identical output);
+    /// * even that misses → **shed** immediately: the receiver gets a
+    ///   [`Outcome::Shed`] response without executing.
+    ///
+    /// Models without an [`SloSpec`] ignore deadlines (always admit).
+    pub fn submit_with_deadline(
+        &self,
+        model: &str,
+        seed: u64,
+        deadline_s: Option<f64>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Response>>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
@@ -424,12 +784,59 @@ impl Server {
             .index
             .get(model)
             .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+        if st.models[slot].dropped {
+            anyhow::bail!("model {model} was dropped");
+        }
         if st.models[slot].poisoned {
             anyhow::bail!("model {model} disabled: its executor panicked");
         }
+        let mut degraded = false;
+        let mut lane_service = None;
+        if let Some(slo) = st.models[slot].slo {
+            match (deadline_s, slo.lane) {
+                (Some(d), Some(lane)) => {
+                    let eta = self.inner.ledger.outstanding(lane) + slo.lane_service_s;
+                    if eta <= d {
+                        lane_service = Some((lane, slo.lane_service_s));
+                    } else if slo.cpu_service_s <= d {
+                        degraded = true;
+                    } else {
+                        drop(st);
+                        let _ = reply.send(Ok(shed_response(id, model)));
+                        return Ok(rx);
+                    }
+                }
+                (Some(d), None) => {
+                    // CPU-only tenant: no lane queue, but an unmeetable
+                    // deadline is still shed rather than broken silently
+                    if slo.cpu_service_s > d {
+                        drop(st);
+                        let _ = reply.send(Ok(shed_response(id, model)));
+                        return Ok(rx);
+                    }
+                }
+                (None, Some(lane)) => {
+                    // best-effort requests still occupy the lane, so
+                    // later deadline-tagged ones see honest queueing
+                    lane_service = Some((lane, slo.lane_service_s));
+                }
+                (None, None) => {}
+            }
+        }
+        if let Some((lane, svc)) = lane_service {
+            self.inner.ledger.admit(lane, svc);
+        }
         st.models[slot].queue.push_back(QueuedJob {
-            req: Request { id, model: model.to_string(), seed, submitted: Instant::now() },
+            req: Request {
+                id,
+                model: model.to_string(),
+                seed,
+                deadline_s,
+                submitted: Instant::now(),
+            },
             reply,
+            degraded,
+            lane_service,
         });
         drop(st);
         self.inner.work.notify_one();
@@ -439,6 +846,17 @@ impl Server {
     /// Submit and wait.
     pub fn infer(&self, model: &str, seed: u64) -> anyhow::Result<Response> {
         let rx = self.submit(model, seed)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("dispatcher dropped reply"))?
+    }
+
+    /// Deadline-tagged submit-and-wait.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        seed: u64,
+        deadline_s: f64,
+    ) -> anyhow::Result<Response> {
+        let rx = self.submit_with_deadline(model, seed, Some(deadline_s))?;
         rx.recv().map_err(|_| anyhow::anyhow!("dispatcher dropped reply"))?
     }
 
@@ -452,12 +870,37 @@ impl Server {
         concurrency: usize,
         seed: u64,
     ) -> anyhow::Result<LoadReport> {
+        self.run_load_slo(models, n, concurrency, seed, None)
+    }
+
+    /// [`Server::run_load`] with every request deadline-tagged.  The
+    /// rotation skips models dropped mid-run (their slots are counted
+    /// in [`LoadReport::skipped`], not retried elsewhere) — a name that
+    /// was *never* registered is still a caller error.
+    pub fn run_load_slo(
+        &self,
+        models: &[&str],
+        n: usize,
+        concurrency: usize,
+        seed: u64,
+        deadline_s: Option<f64>,
+    ) -> anyhow::Result<LoadReport> {
         let t0 = Instant::now();
         let mut pending: Vec<(String, mpsc::Receiver<anyhow::Result<Response>>)> = Vec::new();
         let mut done: Vec<Response> = Vec::new();
+        let mut skipped = 0usize;
         for i in 0..n {
             let model = models[i % models.len()];
-            pending.push((model.to_string(), self.submit(model, seed ^ i as u64)?));
+            match self.submit_with_deadline(model, seed ^ i as u64, deadline_s) {
+                Ok(rx) => pending.push((model.to_string(), rx)),
+                // dropped tenants leave stale rotation slots behind;
+                // skip them instead of failing the whole load
+                Err(_) if self.is_dropped(model) => {
+                    skipped += 1;
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
             if pending.len() >= concurrency {
                 let (_, rx) = pending.remove(0);
                 done.push(rx.recv().map_err(|_| anyhow::anyhow!("dispatcher died"))??);
@@ -468,19 +911,91 @@ impl Server {
         }
         let wall = t0.elapsed().as_secs_f64();
         let mut by_model: HashMap<String, Vec<f64>> = HashMap::new();
+        let (mut admitted, mut degraded, mut shed, mut dropped) = (0, 0, 0, 0);
         for r in &done {
-            by_model.entry(r.model.clone()).or_default().push(r.latency_s);
+            match r.outcome {
+                Outcome::Admitted => admitted += 1,
+                Outcome::DegradedCpu => degraded += 1,
+                Outcome::Shed => shed += 1,
+                Outcome::Dropped => dropped += 1,
+            }
+            if matches!(r.outcome, Outcome::Admitted | Outcome::DegradedCpu) {
+                by_model.entry(r.model.clone()).or_default().push(r.latency_s);
+            }
         }
         Ok(LoadReport {
             wall_s: wall,
-            throughput_rps: n as f64 / wall,
+            throughput_rps: done.len() as f64 / wall,
             latency: by_model
                 .into_iter()
                 .map(|(m, xs)| (m, summarize(&xs).unwrap()))
                 .collect(),
             peak_reserved_bytes: self.inner.governor.peak_reserved(),
+            admitted,
+            degraded,
+            shed,
+            dropped,
+            skipped,
             responses: done,
         })
+    }
+}
+
+/// The response a shed request's receiver gets: explicit, immediate,
+/// never executed.
+fn shed_response(id: u64, model: &str) -> Response {
+    Response {
+        id,
+        model: model.to_string(),
+        latency_s: 0.0,
+        exec_s: 0.0,
+        checksum: 0.0,
+        batched: 0,
+        outcome: Outcome::Shed,
+    }
+}
+
+/// Joint re-placement over every live server-placed tenant, in
+/// registration order: rebuild the shared ledger's static lane loads
+/// from scratch, feeding each tenant's `assign_with_loads` call the
+/// loads the previous tenants accumulated.  Swaps in a fresh executor
+/// (generation-stamped) and refreshes the tenant's lease demand + SLO
+/// figures to match the new placement.  Caller holds the state lock.
+fn replace_all(st: &mut Dispatch, ledger: &LaneLedger) {
+    ledger.reset_static();
+    for slot in 0..st.models.len() {
+        if st.models[slot].dropped || st.models[slot].placed.is_none() {
+            continue;
+        }
+        let spec = st.models[slot].placed.as_ref().expect("checked above").spec.clone();
+        let pipe = &spec.pipe;
+        let placement = crate::place::assign_with_loads(
+            &pipe.graph,
+            &pipe.partition,
+            &pipe.plan,
+            &pipe.soc,
+            crate::place::PlacePolicy::Auto,
+            &ledger.static_loads(),
+        );
+        ledger.add_static(&placement.lane_busy_s(pipe.soc.lanes.len()));
+        let demand = pipe.peak_placed_demand(&placement);
+        let slo = SloSpec::from_placement(&placement, pipe.soc.lanes.len());
+        let mode = if placement.num_delegated() == 0 {
+            crate::sim::Mode::CpuOnly
+        } else {
+            pipe.mode
+        };
+        let exec: Box<dyn ModelExecutor> = Box::new(PlacedSimExecutor {
+            spec: spec.clone(),
+            mode,
+            rng: crate::util::rng::Rng::new(spec.rng_seed),
+        });
+        let entry = &mut st.models[slot];
+        entry.demand = Arc::new(Demand::Fixed(demand));
+        entry.slo = Some(slo);
+        entry.exec = Some(exec);
+        entry.generation += 1;
+        entry.placed.as_mut().expect("checked above").placement = placement;
     }
 }
 
@@ -536,13 +1051,25 @@ fn worker_loop(inner: &Inner) {
         };
         st.rr = (slot + 1) % n.max(1);
         let mut exec = st.models[slot].exec.take().expect("picked available executor");
+        // stamp recorded at take: a joint re-placement or drop bumps it,
+        // and this worker then retires the stale executor on return
+        let gen = st.models[slot].generation;
         let mut jobs: Vec<QueuedJob> = Vec::new();
         while jobs.len() < inner.cfg.max_batch.max(1) {
+            // degraded (CPU-forced) and normal requests never share a
+            // batch: one execute call serves one path
+            if let Some(first) = jobs.first() {
+                match st.models[slot].queue.front() {
+                    Some(next) if next.degraded == first.degraded => {}
+                    _ => break,
+                }
+            }
             match st.models[slot].queue.pop_front() {
                 Some(j) => jobs.push(j),
                 None => break,
             }
         }
+        let degraded = jobs.first().map(|j| j.degraded).unwrap_or(false);
         let demand_src = st.models[slot].demand.clone();
         let name = st.models[slot].name.clone();
         drop(st);
@@ -558,10 +1085,22 @@ fn worker_loop(inner: &Inner) {
         let lease = inner.governor.acquire(demand);
         let seeds: Vec<u64> = jobs.iter().map(|j| j.req.seed).collect();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            exec.execute_batch(&seeds)
+            if degraded {
+                exec.execute_batch_degraded(&seeds)
+            } else {
+                exec.execute_batch(&seeds)
+            }
         }));
         // memory is free before anyone can observe the response
         drop(lease);
+
+        // pop the batch's admitted lane charges: whatever the executor
+        // did, these requests no longer occupy the lane
+        for job in &jobs {
+            if let Some((lane, svc)) = job.lane_service {
+                inner.ledger.complete(lane, svc);
+            }
+        }
 
         let batch = jobs.len();
         let mut poisoned = false;
@@ -575,6 +1114,7 @@ fn worker_loop(inner: &Inner) {
                         exec_s,
                         checksum,
                         batched: batch,
+                        outcome: if degraded { Outcome::DegradedCpu } else { Outcome::Admitted },
                     };
                     let _ = job.reply.send(Ok(resp));
                 }
@@ -612,19 +1152,37 @@ fn worker_loop(inner: &Inner) {
         if poisoned {
             // the executor's state is unknown: retire it (off-lock, in
             // case its Drop misbehaves too), disable the model, and
-            // fail whatever was already queued for it
+            // fail whatever was already queued for it — unless a swap
+            // already installed a fresh executor (stamp moved on), in
+            // which case the panic died with the old generation
             drop(exec);
             st = inner.state.lock().unwrap();
-            st.models[slot].poisoned = true;
-            let err_name = st.models[slot].name.clone();
-            for job in st.models[slot].queue.drain(..) {
-                let _ = job.reply.send(Err(anyhow::anyhow!(
-                    "model {err_name} disabled: its executor panicked"
-                )));
+            if st.models[slot].generation == gen {
+                st.models[slot].poisoned = true;
+                let err_name = st.models[slot].name.clone();
+                let stale: Vec<QueuedJob> = st.models[slot].queue.drain(..).collect();
+                for job in &stale {
+                    if let Some((lane, svc)) = job.lane_service {
+                        inner.ledger.complete(lane, svc);
+                    }
+                }
+                for job in stale {
+                    let _ = job.reply.send(Err(anyhow::anyhow!(
+                        "model {err_name} disabled: its executor panicked"
+                    )));
+                }
             }
         } else {
             st = inner.state.lock().unwrap();
-            st.models[slot].exec = Some(exec);
+            if st.models[slot].generation == gen {
+                st.models[slot].exec = Some(exec);
+            } else {
+                // re-placement swapped executors mid-batch: retire the
+                // stale one off-lock, never restore it
+                drop(st);
+                drop(exec);
+                st = inner.state.lock().unwrap();
+            }
             if !st.models[slot].queue.is_empty() {
                 // more backlog for this model: wake a sibling worker
                 inner.work.notify_one();
@@ -638,9 +1196,22 @@ fn worker_loop(inner: &Inner) {
 pub struct LoadReport {
     pub wall_s: f64,
     pub throughput_rps: f64,
+    /// Latency summaries over *executed* responses only
+    /// ([`Outcome::Admitted`] / [`Outcome::DegradedCpu`]).
     pub latency: HashMap<String, Summary>,
     /// Governor high-water mark observed by the end of the run.
     pub peak_reserved_bytes: u64,
+    /// Requests served on the normal placed path.
+    pub admitted: usize,
+    /// Requests degraded to the CPU-forced path to make their deadline.
+    pub degraded: usize,
+    /// Requests shed at admission (deadline unmeetable, not executed).
+    pub shed: usize,
+    /// Queued requests answered with [`Outcome::Dropped`] because their
+    /// model was dropped mid-run.
+    pub dropped: usize,
+    /// Submissions skipped because the rotation hit a dropped model.
+    pub skipped: usize,
     pub responses: Vec<Response>,
 }
 
@@ -948,6 +1519,138 @@ mod tests {
                 "demand must cover branch {b} staging"
             );
         }
+    }
+
+    /// Executor that reports which path served it: positive checksums
+    /// for the normal path, negative for the degraded (CPU-forced) one.
+    struct PathProbe(Arc<Gate>);
+
+    impl ModelExecutor for PathProbe {
+        fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+            self.0.wait();
+            Ok((0.0, 1.0 + seed as f64))
+        }
+        fn execute_degraded(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+            self.0.wait();
+            Ok((0.0, -(1.0 + seed as f64)))
+        }
+    }
+
+    #[test]
+    fn slo_admission_is_deterministic_under_backlog() {
+        // pinned figures: lane service 1.0 s, degraded CPU 0.25 s.  The
+        // gate holds every admitted request outstanding, so the ledger
+        // arithmetic below is exact, not timing-dependent.
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 1 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        s.register_with_slo(
+            "m",
+            0,
+            SloSpec { lane: Some(0), lane_service_s: 1.0, cpu_service_s: 0.25 },
+            Box::new(PathProbe(gate.clone())),
+        );
+        // eta 1.0 ≤ 10.0 → admitted (outstanding 1.0)
+        let r1 = s.submit_with_deadline("m", 0, Some(10.0)).unwrap();
+        // eta 2.0 > 1.5, cpu 0.25 ≤ 1.5 → degraded (no lane charge)
+        let r2 = s.submit_with_deadline("m", 1, Some(1.5)).unwrap();
+        // eta 2.0 ≤ 2.5 → admitted (outstanding 2.0)
+        let r3 = s.submit_with_deadline("m", 2, Some(2.5)).unwrap();
+        // eta 3.0 > 0.1 and cpu 0.25 > 0.1 → shed, replied immediately
+        let r4 = s.submit_with_deadline("m", 3, Some(0.1)).unwrap();
+        let shed = r4.recv().unwrap().unwrap();
+        assert_eq!(shed.outcome, Outcome::Shed);
+        assert_eq!(shed.batched, 0);
+        assert_eq!(shed.checksum, 0.0, "shed requests never execute");
+        gate.open();
+        let a1 = r1.recv().unwrap().unwrap();
+        let d2 = r2.recv().unwrap().unwrap();
+        let a3 = r3.recv().unwrap().unwrap();
+        assert_eq!(a1.outcome, Outcome::Admitted);
+        assert!(a1.checksum > 0.0, "normal path served it");
+        assert_eq!(d2.outcome, Outcome::DegradedCpu);
+        assert!(d2.checksum < 0.0, "degraded path served it");
+        assert_eq!(a3.outcome, Outcome::Admitted);
+        assert_eq!(
+            s.lane_ledger().outstanding(0),
+            0.0,
+            "drained server's lane ledger must read exactly zero"
+        );
+    }
+
+    #[test]
+    fn load_report_counts_outcomes_exactly() {
+        let gov = Arc::new(MemoryGovernor::unlimited());
+        let mut s = Server::with_config(ServeCfg { workers: 2, max_batch: 2 }, gov);
+        s.register_with_slo(
+            "t",
+            0,
+            SloSpec { lane: Some(0), lane_service_s: 5.0, cpu_service_s: 5.0 },
+            stub(1),
+        );
+        // deadline 0.5 < both services: every request shed
+        let rep = s.run_load_slo(&["t"], 8, 4, 1, Some(0.5)).unwrap();
+        assert_eq!((rep.admitted, rep.degraded, rep.shed, rep.dropped), (0, 0, 8, 0));
+        assert_eq!(rep.responses.len(), 8);
+        assert!(rep.latency.is_empty(), "shed requests carry no latency");
+        // lane path (5.0) misses a 1.0 deadline but the cheap CPU
+        // fallback (0.25) makes it: every request degrades
+        s.register_with_slo(
+            "u",
+            0,
+            SloSpec { lane: Some(1), lane_service_s: 5.0, cpu_service_s: 0.25 },
+            stub(1),
+        );
+        let rep = s.run_load_slo(&["u"], 8, 4, 1, Some(1.0)).unwrap();
+        assert_eq!((rep.admitted, rep.degraded, rep.shed, rep.dropped), (0, 8, 0, 0));
+        // loose deadline, tiny lane service: everything admitted
+        s.register_with_slo(
+            "v",
+            0,
+            SloSpec { lane: Some(2), lane_service_s: 1e-3, cpu_service_s: 1e-3 },
+            stub(1),
+        );
+        let rep = s.run_load_slo(&["v"], 8, 4, 1, Some(10.0)).unwrap();
+        assert_eq!((rep.admitted, rep.degraded, rep.shed, rep.dropped), (8, 0, 0, 0));
+        assert_eq!(s.lane_ledger().outstanding_total(), 0.0);
+    }
+
+    #[test]
+    fn drop_model_answers_queue_and_rejects_new() {
+        // single worker parked on a gated model: the victim's queue
+        // builds, then the drop must answer every queued request with
+        // an explicit Dropped outcome and reject new submissions.
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 2 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        let g = gate.clone();
+        s.register(
+            "hold",
+            Box::new(FnExecutor(move |seed| {
+                g.wait();
+                Ok((0.0, seed as f64))
+            })),
+        );
+        s.register("victim", stub(1));
+        let busy = s.submit("hold", 0).unwrap();
+        let queued: Vec<_> = (0..3).map(|i| s.submit("victim", i).unwrap()).collect();
+        s.drop_model("victim").unwrap();
+        for rx in queued {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.outcome, Outcome::Dropped);
+            assert_eq!(resp.batched, 0);
+        }
+        let err = s.submit("victim", 9).unwrap_err().to_string();
+        assert!(err.contains("dropped"), "got: {err}");
+        assert!(s.drop_model("victim").is_err(), "double drop is an error");
+        assert!(s.drop_model("ghost").is_err(), "unknown model is an error");
+        assert_eq!(s.models(), vec!["hold".to_string()]);
+        gate.open();
+        busy.recv().unwrap().unwrap();
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Multi-model serving: server-wide lane-aware placement + SLO
+//! admission, pinned deterministically.
+//!
+//! Invariants:
+//! * two fallback-heavy tenants never trunk onto the same lane while a
+//!   second reachable lane is idle — the shared ledger's whole point
+//! * dropping a tenant re-places the survivors; the freed (faster)
+//!   lane is reclaimed
+//! * degraded-to-CPU responses are bit-identical to normally-placed
+//!   ones, across random DAGs and lane knockouts
+//! * deadline admission is modelled-ledger arithmetic, so outcomes are
+//!   exact counts, not timing-dependent ones
+
+use parallax::baselines::{Framework, Pipeline};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::SocProfile;
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel};
+use parallax::place::{self, PlacePolicy};
+use parallax::sched::{self, SchedCfg};
+use parallax::serve::{Outcome, PlacedEngineExecutor, Server, SloSpec};
+use parallax::sim::Mode;
+use parallax::util::prop;
+
+fn loose() -> CostModel {
+    CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX }
+}
+
+/// One delegate-eligible matmul trunk + GELU fallback chains: the
+/// profile where pixel6's two lanes both beat the CPU, so a second
+/// tenant always has somewhere cheaper than colliding.
+fn heavy_pipe(soc: &SocProfile) -> Pipeline {
+    Pipeline::from_graph(
+        Framework::Parallax,
+        micro::fallback_heavy(4, 4, 128, 6),
+        &loose(),
+        soc,
+        Mode::Heterogeneous,
+        SchedCfg::default(),
+    )
+}
+
+#[test]
+fn tenants_spread_across_lanes_and_reclaim_on_drop() {
+    let soc = SocProfile::pixel6();
+    let lanes = soc.lanes.len();
+    assert!(lanes >= 2, "test needs a multi-lane profile");
+
+    // what a tenant picks with the device to itself: its home lane
+    let solo = heavy_pipe(&soc);
+    let alone =
+        place::assign(&solo.graph, &solo.partition, &solo.plan, &solo.soc, PlacePolicy::Auto);
+    assert_eq!(alone.num_delegated(), 1, "one trunk delegates");
+    let home = alone.delegated().next().and_then(|b| alone.lane_of(b)).unwrap();
+
+    let mut s = Server::new();
+    let pa = s.register_placed("ma", heavy_pipe(&soc), 7);
+    assert_eq!(
+        pa.lane_job_counts(lanes)[home],
+        1,
+        "sole tenant lands on its home lane"
+    );
+    s.register_placed("mb", heavy_pipe(&soc), 8);
+
+    let placements = s.placements();
+    assert_eq!(placements.len(), 2);
+    let ca = placements[0].1.lane_job_counts(lanes);
+    let cb = placements[1].1.lane_job_counts(lanes);
+    assert_eq!(ca.iter().sum::<usize>(), 1, "ma still delegates its trunk");
+    assert_eq!(cb.iter().sum::<usize>(), 1, "mb still delegates its trunk");
+    assert_eq!(ca[home], 1, "first tenant keeps the home lane");
+    assert_eq!(
+        cb[home], 0,
+        "second tenant must not collide on the loaded lane while \
+         another reachable lane is idle: ca={ca:?} cb={cb:?}"
+    );
+
+    // both tenants serve through the shared dispatcher
+    for (m, seed) in [("ma", 1u64), ("mb", 2)] {
+        let r = s.infer(m, seed).unwrap();
+        assert_eq!(r.outcome, Outcome::Admitted);
+        assert!(r.checksum.is_finite());
+    }
+    assert_eq!(s.lane_ledger().outstanding_total(), 0.0);
+
+    // dropping ma frees the home lane; the joint re-placement must
+    // move the survivor onto it
+    s.drop_model("ma").unwrap();
+    let after = s.placements();
+    assert_eq!(after.len(), 1);
+    assert_eq!(after[0].0, "mb");
+    let cb_after = after[0].1.lane_job_counts(lanes);
+    assert_eq!(cb_after[home], 1, "survivor reclaims the freed home lane");
+    assert_eq!(cb_after, alone.lane_job_counts(lanes), "survivor now places like a sole tenant");
+
+    // the survivor's swapped-in executor still serves
+    let r = s.infer("mb", 3).unwrap();
+    assert_eq!(r.outcome, Outcome::Admitted);
+    assert!(s.infer("ma", 4).is_err(), "dropped tenant rejects new work");
+}
+
+#[test]
+fn prop_degraded_cpu_is_bit_identical_to_placed_path() {
+    // Across random DAGs and random lane knockouts, a request degraded
+    // to the CPU-forced path must produce the same checksum as the
+    // normally-placed path — degradation changes *where*, never *what*.
+    prop::check("serve degraded bit-identity", 10, |rng| {
+        let g = match rng.range(0, 3) {
+            0 => micro::fallback_heavy(rng.range(2, 5), rng.range(2, 4), 32, 3),
+            1 => micro::fallback_heavy_lanes(2, rng.range(2, 4), 2, 32, 3),
+            _ => micro::random_dag(rng, rng.range(2, 8), rng.range(1, 5)),
+        };
+        let mut soc = SocProfile::pixel6();
+        for lane in &mut soc.lanes {
+            if rng.chance(0.4) {
+                lane.reachable = false;
+            }
+        }
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg { max_threads: rng.range(1, 5), margin: 0.4 };
+        let schedules = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let placement = place::assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+
+        let mut s = Server::new();
+        s.register(
+            "placed",
+            Box::new(PlacedEngineExecutor::new(
+                g.clone(),
+                p.clone(),
+                plan.clone(),
+                schedules.clone(),
+                placement.clone(),
+            )),
+        );
+        // pinned SLO that can never make the lane but always makes the
+        // CPU: every deadline-tagged request degrades
+        s.register_with_slo(
+            "degraded",
+            0,
+            SloSpec { lane: Some(0), lane_service_s: f64::INFINITY, cpu_service_s: 0.0 },
+            Box::new(PlacedEngineExecutor::new(g, p, plan, schedules, placement)),
+        );
+        for seed in [1u64, 2] {
+            let a = s.infer("placed", seed).unwrap();
+            assert_eq!(a.outcome, Outcome::Admitted);
+            let b = s.infer_with_deadline("degraded", seed, 1.0).unwrap();
+            assert_eq!(b.outcome, Outcome::DegradedCpu);
+            assert_eq!(
+                a.checksum, b.checksum,
+                "degraded CPU path changed results (seed {seed})"
+            );
+        }
+    });
+}
+
+#[test]
+fn deadline_admission_counts_are_exact_for_placed_tenants() {
+    // Admission is arithmetic over modelled figures, so with fixed
+    // seeds the LoadReport counts are exact — no sleeps, no tolerance.
+    let soc = SocProfile::pixel6();
+    let mut s = Server::new();
+    let placement = s.register_placed("m", heavy_pipe(&soc), 3);
+    assert_eq!(placement.num_delegated(), 1);
+
+    // loose deadline: modelled lane seconds are tiny next to 1e9, so
+    // every request is admitted on the placed path
+    let rep = s.run_load_slo(&["m"], 12, 3, 5, Some(1e9)).unwrap();
+    assert_eq!(
+        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped),
+        (12, 0, 0, 0, 0)
+    );
+    assert_eq!(rep.responses.len(), 12);
+
+    // impossible deadline: even the degraded CPU path misses zero
+    // seconds, so every request is shed — explicitly, never silently
+    let rep = s.run_load_slo(&["m"], 12, 3, 5, Some(0.0)).unwrap();
+    assert_eq!(
+        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped),
+        (0, 0, 12, 0, 0)
+    );
+    assert_eq!(rep.responses.len(), 12, "shed requests still get responses");
+    assert!(rep.responses.iter().all(|r| r.outcome == Outcome::Shed && r.batched == 0));
+    assert!(rep.latency.is_empty(), "nothing executed, nothing timed");
+    assert_eq!(s.lane_ledger().outstanding_total(), 0.0, "ledger drains to exactly zero");
+}

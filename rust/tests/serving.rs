@@ -147,3 +147,35 @@ fn skewed_load_cannot_starve_minority_model() {
     assert_eq!(report.latency["clip-text"].n, 24);
     assert!(gov.stats().in_use == 0);
 }
+
+#[test]
+fn dropped_model_leaves_no_stale_rotation_slot() {
+    // Regression: run_load's round-robin used to fail outright when a
+    // rotation slot pointed at a dropped model.  Dropped slots must be
+    // skipped (and counted), while a never-registered name stays a
+    // caller error.
+    let gov = Arc::new(MemoryGovernor::unlimited());
+    let mut server = Server::with_config(ServeCfg { workers: 2, max_batch: 2 }, gov);
+    for (i, &model) in MODELS.iter().enumerate().take(2) {
+        let probe = Arc::new(MemoryGovernor::unlimited());
+        server.register(model.slug(), executor(pipeline(model, &probe), 50 + i as u64));
+    }
+    let names = [MODELS[0].slug(), MODELS[1].slug()];
+    let before = server.run_load(&names, 8, 4, 11).unwrap();
+    assert_eq!(before.responses.len(), 8);
+    assert_eq!(before.skipped, 0);
+
+    server.drop_model(names[1]).unwrap();
+    // same rotation, half the slots now dropped: the load must still
+    // complete, serving only the survivor
+    let after = server.run_load(&names, 10, 4, 12).unwrap();
+    assert_eq!(after.responses.len(), 5, "survivor's share completes");
+    assert_eq!(after.skipped, 5, "dropped model's slots are skipped, not errors");
+    assert!(after.latency.contains_key(names[0]));
+    assert!(!after.latency.contains_key(names[1]), "no phantom latencies");
+
+    let err = server.infer(names[1], 1).unwrap_err().to_string();
+    assert!(err.contains("dropped"), "got: {err}");
+    // unknown names are not 'dropped': still a hard error
+    assert!(server.run_load(&["never-registered"], 4, 2, 1).is_err());
+}

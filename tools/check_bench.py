@@ -39,6 +39,9 @@ GUARDED = {
     "coordinator hot paths",
     "captured replay",
     "serve_throughput",
+    # multi-tenant shared-ledger vs independent-placement deployments
+    # (PR 8): guards the joint-placement serving hot path
+    "serve_throughput multi",
     # energy is a deterministic model quantity, not a host timing — the
     # fig2 measured group should reproduce almost exactly across hosts
     "fig2 energy measured",
