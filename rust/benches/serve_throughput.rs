@@ -20,10 +20,12 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use parallax::baselines::{Framework, Pipeline};
-use parallax::device::SocProfile;
+use parallax::device::{LinkModel, RemoteLane, SocProfile};
 use parallax::models::ModelKind;
-use parallax::sched::{MemoryGovernor, SchedCfg};
-use parallax::serve::{pipeline_executor, ModelExecutor, Response, ServeCfg, Server};
+use parallax::sched::{self, MemoryGovernor, SchedCfg};
+use parallax::serve::{
+    pipeline_executor, ModelExecutor, PlacedEngineExecutor, Response, ServeCfg, Server, SloSpec,
+};
 use parallax::sim::Mode;
 use parallax::util::stats::summarize;
 
@@ -256,6 +258,81 @@ fn main() {
     b.record(
         "shared_ledger_mean_per_request",
         rep_s.wall_s * 1e9 / rep_s.responses.len() as f64,
+    );
+    b.report();
+
+    // ---- remote spill: device–edge tier vs degraded-CPU fallback ----
+    // One fallback-heavy tenant whose SLO the local lane can never meet
+    // (modelled lane service 1.0 s vs a 0.5 s deadline).  With an edge
+    // server registered, the backlog spills over the link; without one,
+    // the same backlog degrades to the CPU-forced path.  Same deadline,
+    // same seeds, every request resolved explicitly either way (ISSUE
+    // 9) — the record compares the two fallback tiers' mean ns/request.
+    let soc_r = SocProfile::pixel6().with_remote(&RemoteLane::edge_server());
+    let rl = soc_r.remote_lane().expect("profile carries a remote lane");
+    let g = parallax::models::micro::fallback_heavy(4, 3, 64, 4);
+    let p = parallax::partition::partition(
+        &g,
+        &parallax::partition::CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+    );
+    let plan = parallax::branch::plan(&g, &p, parallax::branch::DEFAULT_BETA);
+    let mems = parallax::memory::branch_memories(&g, &p, &plan);
+    let s = sched::schedule(&plan, &mems, 1 << 34, &SchedCfg::default());
+    let mut spill = parallax::place::PlacementPlan::cpu_only(plan.branches.len());
+    for b in 0..plan.branches.len() {
+        if parallax::place::delegate_safe(&g, &p, &plan, b) {
+            spill.assignment[b] = parallax::place::Placement::Delegate(rl);
+            spill.staging_bytes[b] = parallax::place::transfer_bytes(&g, &p, &plan, b);
+            spill.delegate_latency_s[b] =
+                parallax::place::lane_delegate_latency(&g, &p, &plan, b, &soc_r, &soc_r.lanes[rl]);
+        }
+    }
+    let cpu_exec = || {
+        PlacedEngineExecutor::new(
+            g.clone(),
+            p.clone(),
+            plan.clone(),
+            s.clone(),
+            parallax::place::PlacementPlan::cpu_only(plan.branches.len()),
+        )
+    };
+    let base_slo =
+        SloSpec { lane: Some(0), lane_service_s: 1.0, cpu_service_s: 0.002, remote: None };
+    let flags: Vec<bool> = soc_r.lanes.iter().map(|l| l.remote).collect();
+    const NR: usize = 48;
+
+    let mut remote_srv = Server::new();
+    remote_srv.register_with_slo(
+        "fh",
+        0,
+        base_slo.with_remote(rl, 0.01),
+        Box::new(cpu_exec().with_remote(flags, LinkModel::reliable(SEED), spill)),
+    );
+    let rep_r = remote_srv.run_load_slo(&["fh"], NR, 8, SEED, Some(0.5)).expect("remote load");
+    drop(remote_srv);
+
+    let mut local_srv = Server::new();
+    local_srv.register_with_slo("fh", 0, base_slo, Box::new(cpu_exec()));
+    let rep_l = local_srv.run_load_slo(&["fh"], NR, 8, SEED, Some(0.5)).expect("degraded load");
+
+    println!(
+        "\nremote spill tier: {} spilled ({:.3} ms/req) vs {} degraded-cpu ({:.3} ms/req)",
+        rep_r.spilled,
+        rep_r.wall_s * 1e3 / rep_r.responses.len() as f64,
+        rep_l.degraded,
+        rep_l.wall_s * 1e3 / rep_l.responses.len() as f64
+    );
+    assert_eq!(rep_r.spilled, NR, "SLO ladder arithmetic: every request spills");
+    assert_eq!(rep_l.degraded, NR, "without a remote lane the backlog degrades");
+
+    let mut b = parallax::util::bench::Bench::new("serve_throughput remote");
+    b.record(
+        "spilled_mean_per_request",
+        rep_r.wall_s * 1e9 / rep_r.responses.len() as f64,
+    );
+    b.record(
+        "degraded_mean_per_request",
+        rep_l.wall_s * 1e9 / rep_l.responses.len() as f64,
     );
     b.report();
 }

@@ -11,6 +11,9 @@
 
 use crate::util::rng::Rng;
 
+pub mod remote;
+pub use remote::{LinkModel, RemoteLane};
+
 /// One accelerator queue ("lane") of a SoC: the TPU/NPU, the GPU, a
 /// DSP.  Mobile SoCs expose several such queues simultaneously; each
 /// lane has its own sustained rate, dispatch latency, transfer
@@ -40,6 +43,13 @@ pub struct AccLane {
     /// visibility).  Unreachable lanes are modelling-only: placement
     /// (`crate::place`) must never delegate to them.
     pub reachable: bool,
+    /// Whether this lane is a device–edge spill tier ([`RemoteLane`])
+    /// rather than an on-die queue: its `dispatch_s`/`mem_bw` are
+    /// uplink latency and link bandwidth, its transfers cross a lossy
+    /// link (`LinkModel`), and its staging bytes are *transfer* bytes.
+    /// Stock profiles never set this; attach one via
+    /// [`SocProfile::with_remote`].
+    pub remote: bool,
 }
 
 impl AccLane {
@@ -117,6 +127,7 @@ impl SocProfile {
                     mem_bw: 51.2e9,
                     power_w: 2.4,
                     reachable: true,
+                    remote: false,
                 },
                 AccLane {
                     // Mali-G78 via the GPU delegate: slower sustained
@@ -129,6 +140,7 @@ impl SocProfile {
                     mem_bw: 51.2e9,
                     power_w: 1.6,
                     reachable: true,
+                    remote: false,
                 },
             ],
         }
@@ -165,6 +177,7 @@ impl SocProfile {
                 mem_bw: 34.1e9,
                 power_w: 3.1,
                 reachable: false,
+                remote: false,
             }],
         }
     }
@@ -195,6 +208,7 @@ impl SocProfile {
                     mem_bw: 51.2e9,
                     power_w: 2.0,
                     reachable: true,
+                    remote: false,
                 },
                 AccLane {
                     // Mali-G610 GPU delegate as the second queue.
@@ -205,6 +219,7 @@ impl SocProfile {
                     mem_bw: 51.2e9,
                     power_w: 1.4,
                     reachable: true,
+                    remote: false,
                 },
             ],
         }

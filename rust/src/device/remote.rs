@@ -1,0 +1,242 @@
+//! Device–edge spill tier: the remote lane and its link-fault model.
+//!
+//! Intra-DP-style device–edge splitting (PAPERS.md) modelled as one
+//! more [`AccLane`]: a [`RemoteLane`] is an edge server reached over a
+//! wireless link, whose Appendix-B terms are the *uplink latency*
+//! (lane dispatch), the *link bandwidth* (lane transfer bandwidth) and
+//! the *server-side rate* (lane compute rate).  Because the shape is
+//! identical, `place::lane_delegate_latency` prices it with the same
+//! closed form as an on-die lane, and the executor runs its jobs
+//! through the same persistent lane-worker threads — the edge server
+//! executes the same host kernels, so remote outputs are bit-identical
+//! to CPU-forced runs by construction (ARCHITECTURE.md §Device–edge
+//! tier lifecycle).
+//!
+//! What an on-die lane does not have is an unreliable interconnect:
+//! [`LinkModel`] is a deterministic, seeded fault model evaluated per
+//! transfer index — multiplicative jitter on the modelled transfer
+//! time, i.i.d. drop probability, and periodic partition (outage)
+//! windows.  It is *stateless per index*, so fault outcomes depend
+//! only on `(seed, transfer index)` and never on thread timing:
+//! injected faults replay bit-identically (`rust/tests/remote.rs`).
+
+use super::{AccLane, SocProfile};
+
+/// An edge server reached over a wireless/LAN link, expressed in the
+/// same Appendix-B terms as an on-die accelerator lane.
+#[derive(Clone, Debug)]
+pub struct RemoteLane {
+    /// Lane name for tables ("edge", "wifi-server", ...).
+    pub name: &'static str,
+    /// One-way uplink latency per delegate invocation, seconds — the
+    /// remote analogue of [`AccLane::dispatch_s`].
+    pub uplink_latency_s: f64,
+    /// Link bandwidth, bytes/s — the remote analogue of
+    /// [`AccLane::mem_bw`]; boundary tensors cross this instead of the
+    /// on-die interconnect.
+    pub link_bw: f64,
+    /// Server-side peak compute rate, FLOP/s.
+    pub server_flops: f64,
+    /// Sustained fraction of server peak the offloaded regions reach.
+    pub server_utilization: f64,
+    /// Device-side radio/NIC active power while transfers and remote
+    /// compute are in flight, watts (the *device* pays this, not the
+    /// server).
+    pub power_w: f64,
+}
+
+impl RemoteLane {
+    /// A Wi-Fi-class edge server: ~4 ms uplink, ~40 MB/s link, an
+    /// order of magnitude more sustained compute than the device TPU.
+    pub fn edge_server() -> Self {
+        Self {
+            name: "edge",
+            uplink_latency_s: 4.0e-3,
+            link_bw: 40.0e6,
+            server_flops: 60.0e12,
+            server_utilization: 0.35,
+            power_w: 0.9,
+        }
+    }
+
+    /// The lane view placement prices: uplink latency as dispatch,
+    /// link bandwidth as transfer bandwidth, server rate as compute.
+    pub fn to_acc_lane(&self) -> AccLane {
+        AccLane {
+            name: self.name,
+            flops: self.server_flops,
+            utilization: self.server_utilization,
+            dispatch_s: self.uplink_latency_s,
+            mem_bw: self.link_bw,
+            power_w: self.power_w,
+            reachable: true,
+            remote: true,
+        }
+    }
+}
+
+/// Deterministic, seeded link-fault model for a [`RemoteLane`].
+///
+/// Evaluated per *transfer index* (the dispatcher numbers remote
+/// transfers in dispatch order, which is schedule order and therefore
+/// deterministic): each index hashes with the seed into a jitter
+/// factor and a drop verdict, and periodic partition windows of
+/// `partition_len` indices every `partition_every` model link outages.
+/// Statelessness per index is the whole point — outcomes never depend
+/// on wall-clock timing or thread interleaving, so a faulty run
+/// replays bit-identically from the same seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkModel {
+    /// Fault-schedule seed.
+    pub seed: u64,
+    /// Multiplicative jitter amplitude on the modelled transfer time:
+    /// each transfer's time scales by a factor in
+    /// `[1 - jitter_frac, 1 + jitter_frac]`.
+    pub jitter_frac: f64,
+    /// I.i.d. per-transfer drop probability in `[0, 1]`.
+    pub drop_p: f64,
+    /// Partition-schedule period in transfer indices; 0 disables
+    /// partition windows.
+    pub partition_every: u64,
+    /// Transfers dropped at the start of each period (the outage
+    /// window length); must be < `partition_every` when enabled.
+    pub partition_len: u64,
+}
+
+impl LinkModel {
+    /// A fault-free link (jitter and drops all zero) — remote runs
+    /// behave like one more on-die lane.
+    pub fn reliable(seed: u64) -> Self {
+        Self { seed, jitter_frac: 0.0, drop_p: 0.0, partition_every: 0, partition_len: 0 }
+    }
+
+    /// A link with i.i.d. drops at probability `drop_p` and mild
+    /// (±10%) transfer jitter.
+    pub fn lossy(seed: u64, drop_p: f64) -> Self {
+        Self { seed, jitter_frac: 0.10, drop_p, partition_every: 0, partition_len: 0 }
+    }
+
+    /// SplitMix64-style hash of `(seed, idx)` — one u64 per transfer.
+    fn mix(&self, idx: u64) -> u64 {
+        let mut z = self
+            .seed
+            .wrapping_add(idx.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform draw in [0, 1) for transfer `idx`.
+    fn unit(&self, idx: u64) -> f64 {
+        (self.mix(idx) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Multiplicative jitter factor for transfer `idx`, in
+    /// `[1 - jitter_frac, 1 + jitter_frac]`.
+    pub fn jitter(&self, idx: u64) -> f64 {
+        1.0 + self.jitter_frac * (2.0 * self.unit(idx) - 1.0)
+    }
+
+    /// Whether transfer `idx` is dropped — inside a partition window,
+    /// or by the i.i.d. drop draw.  A dropped transfer is retried once
+    /// at the *next* index; a second drop is a persistent fault and
+    /// the job falls back to the bit-identical CPU path (never a
+    /// silent drop).
+    pub fn dropped(&self, idx: u64) -> bool {
+        if self.partition_every > 0 && idx % self.partition_every < self.partition_len {
+            return true;
+        }
+        // decorrelate the drop draw from the jitter draw
+        self.drop_p > 0.0 && self.unit(idx ^ 0x5DEE_CE66) < self.drop_p
+    }
+}
+
+impl SocProfile {
+    /// This profile with `remote` appended as one more lane — the
+    /// device–edge spill tier.  Stock profiles never carry a remote
+    /// lane (their lane counts are test-pinned); opting in is always
+    /// explicit.  The returned lane's index is `lanes.len() - 1`, also
+    /// exposed as [`SocProfile::remote_lane`].
+    pub fn with_remote(&self, remote: &RemoteLane) -> SocProfile {
+        let mut soc = self.clone();
+        soc.lanes.push(remote.to_acc_lane());
+        soc
+    }
+
+    /// Index of this profile's remote lane, if one was attached via
+    /// [`SocProfile::with_remote`].
+    pub fn remote_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(|l| l.remote)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remote_lane_maps_link_terms_onto_acc_lane() {
+        let r = RemoteLane::edge_server();
+        let lane = r.to_acc_lane();
+        assert!(lane.remote && lane.reachable);
+        assert_eq!(lane.dispatch_s, r.uplink_latency_s);
+        assert_eq!(lane.mem_bw, r.link_bw);
+        assert_eq!(lane.effective_flops(), r.server_flops * r.server_utilization);
+    }
+
+    #[test]
+    fn with_remote_appends_without_touching_stock_lanes() {
+        let base = SocProfile::pixel6();
+        let soc = base.with_remote(&RemoteLane::edge_server());
+        assert_eq!(soc.lanes.len(), base.lanes.len() + 1);
+        assert_eq!(soc.remote_lane(), Some(base.lanes.len()));
+        assert_eq!(base.remote_lane(), None, "stock profiles carry no remote lane");
+        // the scalar compatibility mirror still tracks lanes[0]
+        assert_eq!(soc.acc_flops, soc.lanes[0].flops);
+        assert_eq!(soc.available_lanes().count(), base.available_lanes().count() + 1);
+    }
+
+    #[test]
+    fn link_model_is_deterministic_per_index() {
+        let a = LinkModel::lossy(42, 0.3);
+        let b = LinkModel::lossy(42, 0.3);
+        for idx in 0..256 {
+            assert_eq!(a.dropped(idx), b.dropped(idx));
+            assert_eq!(a.jitter(idx).to_bits(), b.jitter(idx).to_bits());
+        }
+        let c = LinkModel::lossy(43, 0.3);
+        assert!((0..256).any(|i| a.dropped(i) != c.dropped(i)), "seed must matter");
+    }
+
+    #[test]
+    fn reliable_link_never_drops_or_jitters() {
+        let l = LinkModel::reliable(7);
+        for idx in 0..512 {
+            assert!(!l.dropped(idx));
+            assert_eq!(l.jitter(idx), 1.0);
+        }
+    }
+
+    #[test]
+    fn partition_windows_drop_exactly_the_scheduled_indices() {
+        let l = LinkModel {
+            seed: 1,
+            jitter_frac: 0.0,
+            drop_p: 0.0,
+            partition_every: 8,
+            partition_len: 3,
+        };
+        for idx in 0..64u64 {
+            assert_eq!(l.dropped(idx), idx % 8 < 3, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn lossy_drop_rate_tracks_probability() {
+        let l = LinkModel::lossy(99, 0.25);
+        let n = 4096u64;
+        let drops = (0..n).filter(|&i| l.dropped(i)).count() as f64 / n as f64;
+        assert!((drops - 0.25).abs() < 0.05, "empirical drop rate {drops}");
+    }
+}

@@ -507,6 +507,190 @@ pub fn serving() -> String {
     out
 }
 
+/// Spill placement for the remote experiment: every delegate-safe
+/// branch forced onto the SoC's remote lane, priced by the Appendix-B
+/// closed form on the link's terms (uplink dispatch, link bandwidth,
+/// server rate) with [`transfer_bytes`](crate::place::transfer_bytes)
+/// as the staged I/O.
+fn spill_placement(
+    g: &crate::graph::Graph,
+    p: &crate::partition::Partition,
+    plan: &branch::BranchPlan,
+    soc: &SocProfile,
+) -> crate::place::PlacementPlan {
+    let rl = soc.remote_lane().expect("remote-capable soc");
+    let lane = &soc.lanes[rl];
+    let mut pl = crate::place::PlacementPlan::cpu_only(plan.branches.len());
+    for b in 0..plan.branches.len() {
+        let lat = crate::place::lane_delegate_latency(g, p, plan, b, soc, lane);
+        if lat.is_finite() {
+            pl.assignment[b] = crate::place::Placement::Delegate(rl);
+            pl.staging_bytes[b] = crate::place::transfer_bytes(g, p, plan, b);
+            pl.delegate_latency_s[b] = lat;
+        }
+    }
+    pl
+}
+
+/// Device–edge remote spill (repo-specific, `crate::device::remote` +
+/// `crate::serve`): two deterministic sections.
+///
+/// *Link sweep* — a fallback-heavy pipeline spilled onto the Pixel 6's
+/// edge-server lane under progressively worse seeded
+/// [`LinkModel`](crate::device::LinkModel)s.  Every row re-runs the
+/// same transfer schedule, so the jobs/retries/byte columns are exact;
+/// the `err%` column is the modelled-link error — measured jittered
+/// remote busy seconds (`ExecStats::remote_busy_s`) against the
+/// un-jittered Appendix-B sum — 0.0% on the reliable link by
+/// construction, and negative once drops push branches back onto the
+/// host.  The checksum column compares every run against the same
+/// engine CPU-forced: remote execution uses the host kernels, so it is
+/// bit-identical whatever the link does.
+///
+/// *Spill ladder* — a fixed backlog of deadline-tagged requests
+/// through [`Server::register_with_slo`](crate::serve::Server) with a
+/// real-engine spill executor, one deadline tier per admission
+/// outcome.  Tier arithmetic is chosen so the decision is invariant to
+/// queue drain timing, making the `Outcome::Spilled` counts exact.
+pub fn remote() -> String {
+    use crate::device::{LinkModel, RemoteLane};
+    use crate::serve::{Outcome, PlacedEngineExecutor, Server, SloSpec};
+
+    let soc = SocProfile::pixel6().with_remote(&RemoteLane::edge_server());
+    let loose = CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX };
+    let cfg = SchedCfg::default();
+    let pipe = Pipeline::from_graph(
+        Framework::Parallax,
+        crate::models::micro::fallback_heavy(4, 3, 128, 6),
+        &loose,
+        &soc,
+        Mode::Heterogeneous,
+        cfg,
+    );
+    let schedules = crate::sched::schedule(&pipe.plan, &pipe.mems, 1 << 34, &cfg);
+    let spill = spill_placement(&pipe.graph, &pipe.partition, &pipe.plan, &pipe.soc);
+    let flags: Vec<bool> = soc.lanes.iter().map(|l| l.remote).collect();
+    let modelled_s: f64 = spill.delegated().map(|b| spill.delegate_latency_s[b]).sum();
+
+    let mut out = String::from(
+        "Remote spill: Pixel 6 + edge-server lane, fallback-heavy tenant\n\n\
+         Link sweep (spill placement under seeded links; checksum vs \
+         CPU-forced)\n",
+    );
+    out += &format!(
+        "{:<16} {:>5} {:>7} {:>8} {:>8} {:>9} {:>9} {:>7}  {}\n",
+        "link", "jobs", "retries", "up KB", "down KB", "busy ms", "model ms", "err%",
+        "bit-identical",
+    );
+    let engine = crate::exec::Engine::new(&pipe.graph, &pipe.partition, &pipe.plan, None);
+    let (cpu_values, _) = engine.run_cpu_forced(&schedules).expect("host execution");
+    let cpu_checksum = cpu_values.checksum();
+    let links = [
+        ("reliable", LinkModel::reliable(SEED)),
+        (
+            "jitter 5%",
+            LinkModel { seed: SEED, jitter_frac: 0.05, ..LinkModel::reliable(SEED) },
+        ),
+        (
+            "jitter 25%",
+            LinkModel { seed: SEED, jitter_frac: 0.25, ..LinkModel::reliable(SEED) },
+        ),
+        ("lossy 20%", LinkModel::lossy(SEED, 0.20)),
+        (
+            "partitioned",
+            LinkModel {
+                seed: SEED,
+                jitter_frac: 0.10,
+                partition_every: 3,
+                partition_len: 1,
+                ..LinkModel::reliable(SEED)
+            },
+        ),
+    ];
+    for (name, link) in links {
+        let mut engine =
+            crate::exec::Engine::new(&pipe.graph, &pipe.partition, &pipe.plan, None);
+        engine.set_remote(flags.clone(), link);
+        let (values, st) = engine.run_placed(&schedules, &spill, None).expect("spill run");
+        // busy seconds accumulate in dispatch order, the modelled sum
+        // in branch order — same terms on a reliable link, so snap the
+        // ulp-level reassociation noise to an exact zero
+        let err = (st.remote_busy_s - modelled_s) / modelled_s * 100.0;
+        let err = if err.abs() < 1e-9 { 0.0 } else { err };
+        out += &format!(
+            "{:<16} {:>5} {:>7} {:>8.1} {:>8.1} {:>9.3} {:>9.3} {:>7.1}  {}\n",
+            name,
+            st.delegate_jobs,
+            st.link_retries,
+            st.uplink_bytes as f64 / 1e3,
+            st.downlink_bytes as f64 / 1e3,
+            st.remote_busy_s * 1e3,
+            modelled_s * 1e3,
+            err,
+            if values.checksum() == cpu_checksum { "yes" } else { "NO" },
+        );
+    }
+
+    const BACKLOG: usize = 12;
+    out += &format!(
+        "\nSpill ladder ({BACKLOG}-request backlog, pinned SLO: lane 1.0s / \
+         cpu 0.002s / remote 0.01s)\n",
+    );
+    out += &format!(
+        "{:<22} {:>9} {:>9} {:>9} {:>5}\n",
+        "deadline", "admitted", "spilled", "degraded", "shed",
+    );
+    let mut server = Server::new();
+    let slo = SloSpec {
+        lane: Some(0),
+        lane_service_s: 1.0,
+        cpu_service_s: 0.002,
+        remote: None,
+    }
+    .with_remote(soc.remote_lane().expect("remote lane appended"), 0.01);
+    let exec = PlacedEngineExecutor::new(
+        pipe.graph.clone(),
+        pipe.partition.clone(),
+        pipe.plan.clone(),
+        schedules.clone(),
+        crate::place::PlacementPlan::cpu_only(pipe.plan.branches.len()),
+    )
+    .with_remote(flags.clone(), LinkModel::reliable(SEED), spill.clone());
+    server.register_with_slo("edge-tenant", 0, slo, Box::new(exec));
+    // each tier's arithmetic is invariant to drain timing: the local
+    // lane eta is always >= 1.0s, the remote eta never exceeds
+    // BACKLOG * 0.01s, and the CPU path is a plain threshold check
+    for (label, d) in [
+        ("100.0 (admit)", 100.0),
+        ("0.5 (spill)", 0.5),
+        ("0.005 (degrade)", 0.005),
+        ("0.001 (shed)", 0.001),
+    ] {
+        let r = server
+            .run_load_slo(&["edge-tenant"], BACKLOG, BACKLOG, SEED, Some(d))
+            .expect("load run");
+        debug_assert_eq!(
+            r.admitted + r.degraded + r.shed + r.dropped + r.skipped + r.spilled,
+            BACKLOG,
+        );
+        let spilled_ok = r
+            .responses
+            .iter()
+            .filter(|x| x.outcome == Outcome::Spilled)
+            .all(|x| x.checksum == cpu_checksum);
+        out += &format!(
+            "{:<22} {:>9} {:>9} {:>9} {:>5}{}\n",
+            label,
+            r.admitted,
+            r.spilled,
+            r.degraded,
+            r.shed,
+            if spilled_ok { "" } else { "  CHECKSUM MISMATCH" },
+        );
+    }
+    out
+}
+
 /// Dispatch by name (CLI + tests).
 pub fn run(which: &str) -> Option<String> {
     Some(match which {
@@ -519,6 +703,7 @@ pub fn run(which: &str) -> Option<String> {
         "fig3" => fig3(),
         "hetero" => hetero(),
         "serving" => serving(),
+        "remote" => remote(),
         "ablation-beta" => ablation_beta(),
         "ablation-margin" => ablation_margin(),
         "ablation-cost-model" => ablation_cost_model(),
@@ -526,9 +711,9 @@ pub fn run(which: &str) -> Option<String> {
     })
 }
 
-pub const ALL_EXPERIMENTS: [&str; 12] = [
+pub const ALL_EXPERIMENTS: [&str; 13] = [
     "table3", "table4", "table5", "table6", "table7", "fig2", "fig3", "hetero",
-    "serving", "ablation-beta", "ablation-margin", "ablation-cost-model",
+    "serving", "remote", "ablation-beta", "ablation-margin", "ablation-cost-model",
 ];
 
 #[cfg(test)]
@@ -563,6 +748,33 @@ mod tests {
         // at least one (model, device) cell must delegate (the cell
         // format prints "<n>/<staging>KB/<acc>v<cpu>" when it does)
         assert!(t.contains("KB/"), "{t}");
+    }
+
+    #[test]
+    fn remote_experiment_pins_link_parity_and_spill_ladder() {
+        let t = remote();
+        // every link row — including the lossy and partitioned ones —
+        // must report bit-identical outputs vs the CPU-forced run
+        assert!(!t.contains("NO"), "{t}");
+        assert!(!t.contains("CHECKSUM MISMATCH"), "{t}");
+        // the reliable link's modelled-link error is exactly zero
+        let reliable = t.lines().find(|l| l.starts_with("reliable")).expect("reliable row");
+        assert!(reliable.trim_end().ends_with("0.0  yes"), "{t}");
+        // ladder tiers resolve to exactly one outcome class each
+        for (label, col) in [
+            ("100.0 (admit)", 1),
+            ("0.5 (spill)", 2),
+            ("0.005 (degrade)", 3),
+            ("0.001 (shed)", 4),
+        ] {
+            let row = t.lines().find(|l| l.starts_with(label)).expect("ladder row");
+            let cells: Vec<&str> = row.split_whitespace().collect();
+            // cells: [deadline, "(tier)", admitted, spilled, degraded, shed]
+            for (i, c) in cells[2..].iter().enumerate() {
+                let want = if i + 1 == col { "12" } else { "0" };
+                assert_eq!(*c, want, "tier {label}: {t}");
+            }
+        }
     }
 
     #[test]

@@ -122,6 +122,29 @@ pub struct ExecStats {
     /// Accelerator term: Σ over lanes of `lane_power_w[l] ·` that
     /// lane's accumulated modelled busy seconds.
     pub energy_lane_j: f64,
+    /// Device→edge bytes sent over remote links this run.  Every
+    /// uplink attempt is charged — including the wasted first attempt
+    /// of a retried transfer — so a lossy link shows more uplink
+    /// traffic for the same work.  Zero unless [`Engine::set_remote`]
+    /// marked a lane remote.
+    pub uplink_bytes: u64,
+    /// Edge→device bytes: the byte sizes of every tensor a remote
+    /// lane job merged back into the value store (charged once per
+    /// *completed* job; faulted jobs that fell back to the CPU never
+    /// produce downlink traffic).
+    pub downlink_bytes: u64,
+    /// Modelled remote-lane busy seconds after per-transfer
+    /// [`LinkModel`](crate::device::LinkModel) jitter.  The
+    /// un-jittered figure is the placement plan's modelled delegate
+    /// latency; `eval remote` reports the gap between the two as the
+    /// modelled-link error column.
+    pub remote_busy_s: f64,
+    /// Remote transfers that rolled a link drop and were retried once
+    /// at the next transfer index.  A second drop is a persistent
+    /// fault: the job runs inline on the bit-identical CPU path
+    /// instead (counted in [`ExecStats::cpu_branch_runs`]) — never a
+    /// silent drop.
+    pub link_retries: usize,
 }
 
 /// Per-run energy accounting model (Fig. 2): power draws plus the
@@ -222,6 +245,18 @@ pub struct Engine<'a> {
     /// Optional energy ledger (Fig. 2): when set, every run charges
     /// the modelled idle/cpu/lane energy terms into its [`ExecStats`].
     energy: Option<EnergyModel>,
+    /// Optional device–edge tier: which lanes are remote and the
+    /// seeded link-fault model their transfers roll against.
+    remote: Option<RemoteCfg>,
+}
+
+/// Remote-lane runtime configuration: per-lane remote flags (indexed
+/// like `SocProfile::lanes`) plus the deterministic
+/// [`LinkModel`](crate::device::LinkModel) every remote transfer rolls
+/// against.
+struct RemoteCfg {
+    lanes: Vec<bool>,
+    link: crate::device::LinkModel,
 }
 
 impl<'a> Engine<'a> {
@@ -300,6 +335,7 @@ impl<'a> Engine<'a> {
             weights: WeightBank::default(),
             prog_weights: Mutex::new(HashMap::new()),
             energy: None,
+            remote: None,
         }
     }
 
@@ -315,6 +351,21 @@ impl<'a> Engine<'a> {
     /// The attached [`EnergyModel`], if any.
     pub fn energy_model(&self) -> Option<&EnergyModel> {
         self.energy.as_ref()
+    }
+
+    /// Mark which lanes are device–edge remote lanes (indexed like
+    /// `SocProfile::lanes`, e.g. `soc.lanes.iter().map(|l|
+    /// l.remote)`) and attach the seeded
+    /// [`LinkModel`](crate::device::LinkModel) their transfers roll
+    /// against.  Remote lane jobs charge uplink/downlink bytes and
+    /// jittered remote busy seconds into [`ExecStats`], and a dropped
+    /// transfer retries once, then falls back to the bit-identical
+    /// inline CPU path.  Without this call, a remote-placed run
+    /// treats the remote lane like one more on-die lane (fault-free,
+    /// no transfer accounting).  Call before the engine is shared,
+    /// like [`Engine::set_energy_model`].
+    pub fn set_remote(&mut self, remote_lanes: Vec<bool>, link: crate::device::LinkModel) {
+        self.remote = Some(RemoteCfg { lanes: remote_lanes, link });
     }
 
     /// Combined §3.3 peak demand of a wave's CPU branches (delegate
@@ -673,6 +724,10 @@ impl<'a> Engine<'a> {
             acc_modelled_s: lanes.modelled_s,
             delegate_stalls: lanes.stalls,
             lane_gaps: lanes.gaps,
+            uplink_bytes: lanes.uplink_bytes,
+            downlink_bytes: lanes.downlink_bytes,
+            remote_busy_s: lanes.remote_busy_s,
+            link_retries: lanes.link_retries,
             wall_s,
             ..ExecStats::default()
         };
@@ -807,6 +862,9 @@ impl<'a> Engine<'a> {
             }
             drop(res_tx);
             let mut st = LaneSt::new(nb, num_lanes);
+            if let Some(rc) = &self.remote {
+                st.remote = rc.lanes.clone();
+            }
             for ls in schedules {
                 // Dispatch this layer's *ready* lane jobs first so they
                 // overlap the CPU waves below (and, with `overlap`, the
@@ -823,7 +881,7 @@ impl<'a> Engine<'a> {
                         deferred.push((b, lane));
                         continue;
                     }
-                    dispatch_job(&mut st, &job_tx, b, lane)?;
+                    self.dispatch_lane_job(&mut st, &job_tx, b, lane, pl, values, env, c, cp)?;
                 }
                 for wave in &ls.waves {
                     let cpu: Vec<usize> =
@@ -849,7 +907,7 @@ impl<'a> Engine<'a> {
                     // merge the pending inputs, then hand off (the mpsc
                     // send orders the store reads after the merges)
                     st.settle_deps(&preds_del[b], &res_rx, values, pl)?;
-                    dispatch_job(&mut st, &job_tx, b, lane)?;
+                    self.dispatch_lane_job(&mut st, &job_tx, b, lane, pl, values, env, c, cp)?;
                 }
                 if !overlap {
                     // barrier-join ablation: every lane job merges at
@@ -860,6 +918,59 @@ impl<'a> Engine<'a> {
             st.drain(&res_rx, values, pl)?;
             Ok(st.totals)
         })
+    }
+
+    /// Hand one lane job to its worker, routing remote lanes through
+    /// the link-fault model first.  A remote transfer draws the next
+    /// transfer index (dispatcher-thread counter, so indices follow
+    /// dispatch order — schedule order — and fault outcomes replay
+    /// bit-identically); a dropped transfer retries once at the next
+    /// index, and a second drop is a persistent fault: the job runs
+    /// *inline* on the bit-identical CPU path (dependency-safe — both
+    /// dispatch sites settle the job's delegated predecessors first,
+    /// and its CPU predecessors live in earlier, completed layers).
+    /// Transfer stats are charged here, on the dispatcher thread, so
+    /// f64 accumulation order is deterministic.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_lane_job(
+        &self,
+        st: &mut LaneSt,
+        job_tx: &[Option<std::sync::mpsc::Sender<usize>>],
+        b: usize,
+        lane: usize,
+        pl: &PlacementPlan,
+        values: &Values,
+        env: &ShapeEnv,
+        c: &Counters,
+        cp: Option<&CapturedPlan>,
+    ) -> anyhow::Result<()> {
+        if st.remote.get(lane).copied().unwrap_or(false) {
+            let link = &self
+                .remote
+                .as_ref()
+                .expect("remote lane flags without a link model")
+                .link;
+            let first = st.next_transfer();
+            st.totals.uplink_bytes += pl.staging_bytes[b];
+            let idx = if link.dropped(first) {
+                // retry once: the wasted first uplink stays charged,
+                // then the transfer goes out again at the next index
+                let retry = st.next_transfer();
+                st.totals.link_retries += 1;
+                st.totals.uplink_bytes += pl.staging_bytes[b];
+                if link.dropped(retry) {
+                    // persistent link fault: the job never reaches
+                    // the edge server — run the branch inline on the
+                    // bit-identical CPU path, never drop it silently
+                    return self.run_sequential(b, values, env, c, cp);
+                }
+                retry
+            } else {
+                first
+            };
+            st.totals.remote_busy_s += pl.delegate_latency_s[b] * link.jitter(idx);
+        }
+        dispatch_job(st, job_tx, b, lane)
     }
 
     /// Run one parallel wave of CPU branches on scoped threads and
@@ -1198,6 +1309,16 @@ struct LaneTotals {
     /// Per-lane modelled busy seconds (energy ledger's `acc_busy`
     /// term, split by lane; empty on CPU-only runs).
     busy_s: Vec<f64>,
+    /// Device→edge bytes, every uplink attempt charged (see
+    /// [`ExecStats::uplink_bytes`]).
+    uplink_bytes: u64,
+    /// Edge→device bytes of merged remote job outputs.
+    downlink_bytes: u64,
+    /// Jittered modelled remote busy seconds (dispatcher-side
+    /// accumulation — deterministic order).
+    remote_busy_s: f64,
+    /// Remote transfers retried after a first-attempt link drop.
+    link_retries: usize,
 }
 
 /// Dispatcher-side lane bookkeeping: which jobs are still in flight,
@@ -1215,6 +1336,13 @@ struct LaneSt {
     inflight: Vec<usize>,
     /// Lanes that have received at least one job.
     ran: Vec<bool>,
+    /// Which lanes are device–edge remote lanes (empty when the
+    /// engine carries no remote config — every lane then on-die).
+    remote: Vec<bool>,
+    /// Next remote transfer index — increments in dispatch order, the
+    /// deterministic coordinate the [`crate::device::LinkModel`]
+    /// fault schedule is evaluated at.
+    transfer_idx: u64,
     totals: LaneTotals,
 }
 
@@ -1225,11 +1353,20 @@ impl LaneSt {
             pending_n: 0,
             inflight: vec![0; num_lanes],
             ran: vec![false; num_lanes],
+            remote: Vec::new(),
+            transfer_idx: 0,
             totals: LaneTotals {
                 busy_s: vec![0.0; num_lanes],
                 ..LaneTotals::default()
             },
         }
+    }
+
+    /// Draw the next remote transfer index.
+    fn next_transfer(&mut self) -> u64 {
+        let i = self.transfer_idx;
+        self.transfer_idx += 1;
+        i
     }
 
     /// Record a dispatch (the caller sends the job right after).
@@ -1252,7 +1389,14 @@ impl LaneSt {
         values: &Values,
         pl: &PlacementPlan,
     ) -> anyhow::Result<()> {
-        for (t, v) in msg.out? {
+        let out = msg.out?;
+        if self.remote.get(msg.lane).copied().unwrap_or(false) {
+            // downlink: the job's outputs come back over the link
+            // (u64 adds commute, so absorb order cannot perturb it)
+            self.totals.downlink_bytes +=
+                out.iter().map(|(_, v)| v.byte_size() as u64).sum::<u64>();
+        }
+        for (t, v) in out {
             values.insert_arc(t, v);
         }
         self.pending[msg.branch] = false;
@@ -1676,6 +1820,144 @@ mod tests {
             "overlap may only remove idle-lane gaps ({} > {})",
             st_overlap.lane_gaps,
             st_barrier.lane_gaps
+        );
+    }
+
+    /// Force every delegate-safe branch onto the soc's remote lane —
+    /// the spill-everything placement the remote fault tests run.
+    fn remote_all(
+        g: &Graph,
+        p: &Partition,
+        plan: &BranchPlan,
+        soc: &crate::device::SocProfile,
+    ) -> crate::place::PlacementPlan {
+        let rl = soc.remote_lane().expect("soc must carry a remote lane");
+        let mut pl = crate::place::PlacementPlan::cpu_only(plan.branches.len());
+        for b in 0..plan.branches.len() {
+            let lat =
+                crate::place::lane_delegate_latency(g, p, plan, b, soc, &soc.lanes[rl]);
+            if !lat.is_finite() {
+                continue;
+            }
+            pl.assignment[b] = crate::place::Placement::Delegate(rl);
+            pl.staging_bytes[b] = crate::place::transfer_bytes(g, p, plan, b);
+            pl.delegate_latency_s[b] = lat;
+        }
+        assert!(pl.num_delegated() >= 1, "expected delegate-safe branches");
+        pl
+    }
+
+    #[test]
+    fn retried_remote_transfers_stay_bit_identical_and_charge_the_link() {
+        let g = crate::models::micro::fallback_heavy(4, 3, 128, 6);
+        let soc = crate::device::SocProfile::pixel6()
+            .with_remote(&crate::device::RemoteLane::edge_server());
+        let p = partition(
+            &g,
+            &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let s = schedules(&g, &p, &plan, 4);
+        let pl = remote_all(&g, &p, &plan, &soc);
+        let engine_cpu = Engine::new(&g, &p, &plan, None);
+        let (v_cpu, _) = engine_cpu.run_cpu_forced(&s).unwrap();
+        // every first attempt lands in a partition window, every
+        // retry clears it: all jobs reach the server, all retried
+        let mut engine = Engine::new(&g, &p, &plan, None);
+        engine.set_remote(
+            soc.lanes.iter().map(|l| l.remote).collect(),
+            crate::device::LinkModel {
+                seed: 9,
+                jitter_frac: 0.25,
+                drop_p: 0.0,
+                partition_every: 2,
+                partition_len: 1,
+            },
+        );
+        let (v, st) = engine.run_placed(&s, &pl, None).unwrap();
+        assert_eq!(
+            v_cpu.checksum(),
+            v.checksum(),
+            "remote lane must not change results"
+        );
+        assert_eq!(st.delegate_jobs, pl.num_delegated());
+        assert_eq!(st.link_retries, pl.num_delegated(), "every transfer retried once");
+        let staged: u64 = (0..plan.branches.len())
+            .filter(|&b| pl.is_delegated(b))
+            .map(|b| pl.staging_bytes[b])
+            .sum();
+        assert_eq!(st.uplink_bytes, 2 * staged, "wasted first attempts charged");
+        assert!(st.downlink_bytes > 0);
+        assert!(st.remote_busy_s > 0.0);
+    }
+
+    #[test]
+    fn dead_link_falls_back_to_cpu_bit_identically_never_silently() {
+        let g = crate::models::micro::fallback_heavy(4, 3, 128, 6);
+        let soc = crate::device::SocProfile::pixel6()
+            .with_remote(&crate::device::RemoteLane::edge_server());
+        let p = partition(
+            &g,
+            &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let s = schedules(&g, &p, &plan, 4);
+        let pl = remote_all(&g, &p, &plan, &soc);
+        let engine_cpu = Engine::new(&g, &p, &plan, None);
+        let (v_cpu, st_cpu) = engine_cpu.run_cpu_forced(&s).unwrap();
+        // a permanent partition: every transfer (and every retry) drops
+        let mut engine = Engine::new(&g, &p, &plan, None);
+        engine.set_remote(
+            soc.lanes.iter().map(|l| l.remote).collect(),
+            crate::device::LinkModel {
+                seed: 1,
+                jitter_frac: 0.0,
+                drop_p: 0.0,
+                partition_every: 2,
+                partition_len: 2,
+            },
+        );
+        let (v, st) = engine.run_placed(&s, &pl, None).unwrap();
+        assert_eq!(
+            v_cpu.checksum(),
+            v.checksum(),
+            "persistent-fault fallback must be bit-identical to CPU-forced"
+        );
+        assert_eq!(st.delegate_jobs, 0, "nothing ever reached the edge server");
+        assert_eq!(st.link_retries, pl.num_delegated(), "each job retried once first");
+        assert_eq!(st.cpu_branch_runs, st_cpu.cpu_branch_runs, "every branch still ran");
+        assert_eq!(st.downlink_bytes, 0);
+        assert_eq!(st.remote_busy_s, 0.0);
+        assert!(st.uplink_bytes > 0, "the failed attempts still burned uplink");
+    }
+
+    #[test]
+    fn lossy_remote_runs_repeat_transfer_stats_bitwise() {
+        let g = crate::models::micro::fallback_heavy(4, 3, 128, 6);
+        let soc = crate::device::SocProfile::pixel6()
+            .with_remote(&crate::device::RemoteLane::edge_server());
+        let p = partition(
+            &g,
+            &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX },
+        );
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let s = schedules(&g, &p, &plan, 4);
+        let pl = remote_all(&g, &p, &plan, &soc);
+        let mut engine = Engine::new(&g, &p, &plan, None);
+        engine.set_remote(
+            soc.lanes.iter().map(|l| l.remote).collect(),
+            crate::device::LinkModel::lossy(2026, 0.2),
+        );
+        let (v1, st1) = engine.run_placed(&s, &pl, None).unwrap();
+        let (v2, st2) = engine.run_placed(&s, &pl, None).unwrap();
+        assert_eq!(v1.checksum(), v2.checksum());
+        assert_eq!(st1.uplink_bytes, st2.uplink_bytes);
+        assert_eq!(st1.downlink_bytes, st2.downlink_bytes);
+        assert_eq!(st1.link_retries, st2.link_retries);
+        assert_eq!(
+            st1.remote_busy_s.to_bits(),
+            st2.remote_busy_s.to_bits(),
+            "jittered remote busy time must accumulate deterministically"
         );
     }
 }

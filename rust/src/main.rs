@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
-//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|all>
+//! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|remote|all>
 //! parallax inspect --model whisper-tiny        # graph/branch/layer stats
 //! parallax serve --requests 64 --concurrency 8 # governed serving demo
+//! parallax serve --remote --deadline-ms 5      # + device–edge spill lane
 //! parallax smoke                               # PJRT round-trip check
 //! ```
 
@@ -40,11 +41,13 @@ USAGE:
   parallax run     --model <slug> --device <name> [--mode cpu|het]
                    [--threads N] [--margin F] [--runs N] [--framework NAME]
                    [--config file.toml]
-  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|all>
+  parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|remote|all>
   parallax inspect --model <slug> [--device <name>]
   parallax serve   [--requests N] [--concurrency N] [--threads N]
                    [--workers N] [--batch N] [--budget-mb N]
-                   [--deadline-ms F] [--config file.toml]
+                   [--deadline-ms F] [--remote] [--uplink-ms F]
+                   [--link-bw-mbps F] [--drop-p F] [--link-seed N]
+                   [--config file.toml]
   parallax smoke
 
 models:  yolov8n whisper-tiny swinv2-tiny clip-text distilbert
@@ -198,7 +201,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     cfg.serve.workers = args.get_usize("workers", cfg.serve.workers);
     cfg.serve.max_batch = args.get_usize("batch", cfg.serve.max_batch);
     cfg.serve.budget_mb = args.get_usize("budget-mb", cfg.serve.budget_mb);
-    let soc = SocProfile::pixel6();
+    // --remote appends a device–edge spill lane: deadline-tagged
+    // requests the local lanes would miss try the edge server (priced
+    // on the uplink/bandwidth/server-rate link terms) before degrading
+    // to the CPU path — Outcome::Spilled in the tally below
+    let soc = if args.flag("remote") {
+        let mut rl = parallax::device::RemoteLane::edge_server();
+        rl.uplink_latency_s = args.get_f64("uplink-ms", rl.uplink_latency_s * 1e3) / 1e3;
+        rl.link_bw = args.get_f64("link-bw-mbps", rl.link_bw / 1e6) * 1e6;
+        let link = parallax::device::LinkModel::lossy(
+            args.get_u64("link-seed", 2026),
+            args.get_f64("drop-p", 0.0),
+        );
+        // deterministic preview of the seeded fault schedule the
+        // engine-level spill path replays (eval remote / tests/remote.rs)
+        let window = 256u64;
+        let drops = (0..window).filter(|&i| link.dropped(i)).count();
+        println!(
+            "remote lane: {} (uplink {:.1} ms, link {:.0} MB/s, server {:.0} GFLOP/s \
+             sustained) — seeded link drops {}/{} of the next transfers",
+            rl.name,
+            rl.uplink_latency_s * 1e3,
+            rl.link_bw / 1e6,
+            rl.server_flops * rl.server_utilization / 1e9,
+            drops,
+            window,
+        );
+        SocProfile::pixel6().with_remote(&rl)
+    } else {
+        SocProfile::pixel6()
+    };
     let sched_cfg = cfg.sched;
 
     let governor = std::sync::Arc::new(parallax::sched::MemoryGovernor::new(
@@ -259,8 +291,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         report.throughput_rps, report.wall_s
     );
     println!(
-        "outcomes: {} admitted / {} degraded-cpu / {} shed / {} dropped",
-        report.admitted, report.degraded, report.shed, report.dropped
+        "outcomes: {} admitted / {} spilled / {} degraded-cpu / {} shed / {} dropped",
+        report.admitted, report.spilled, report.degraded, report.shed, report.dropped
     );
     for (model, s) in &report.latency {
         println!(

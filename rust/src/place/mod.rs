@@ -36,6 +36,17 @@
 //! rates, so placement can never target hardware the runtime cannot
 //! reach.
 //!
+//! A [`RemoteLane`](crate::device::RemoteLane) attached via
+//! [`SocProfile::with_remote`](crate::device::SocProfile::with_remote)
+//! is priced by the *same* closed form — its Appendix-B terms are the
+//! uplink latency (`dispatch_s`), the link bandwidth (`mem_bw`) and
+//! the server-side rate (`flops · utilization`) — so a device–edge
+//! spill tier needs no new pricing code.  What changes is bookkeeping:
+//! for remote-assigned branches, [`transfer_bytes`] replace
+//! [`staging_bytes`] (same boundary tensors, crossing the link), and
+//! dynamic work still never delegates — [`delegate_safe`] gates the
+//! remote lane exactly as it gates on-die ones.
+//!
 //! The plan also prices what delegation *costs the host*: each
 //! delegated branch needs host-visible staging buffers for delegate
 //! I/O (the region boundary tensors that cross the host↔accelerator
@@ -278,7 +289,11 @@ pub fn cpu_latency(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize, soc: &
 /// comparison is never biased by the glue.  `INFINITY` when the branch
 /// holds no delegate region **or the lane is unreachable** — the
 /// runtime must never be told to delegate to hardware it cannot drive,
-/// however fast the lane's modelled rates are.
+/// however fast the lane's modelled rates are.  Remote lanes price
+/// through the same form with their link terms substituted: uplink
+/// latency as `L_l`, link bandwidth as `B_l`, server rate as
+/// `R_l·util_l` (boundary bytes cross the link instead of the on-die
+/// interconnect).
 pub fn lane_delegate_latency(
     g: &Graph,
     p: &Partition,
@@ -402,6 +417,17 @@ pub fn staging_bytes(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> u
         .sum()
 }
 
+/// Transfer bytes of a branch spilled to a remote lane
+/// ([`RemoteLane`](crate::device::RemoteLane)): the same region
+/// boundary tensors [`staging_bytes`] prices, crossing the device–edge
+/// link instead of the on-die interconnect — for a remote-assigned
+/// branch, transfer bytes *replace* staging bytes (the host holds the
+/// transfer buffers from dispatch until the downlinked outputs merge,
+/// so the governor lease accounting is byte-for-byte unchanged).
+pub fn transfer_bytes(g: &Graph, p: &Partition, plan: &BranchPlan, b: usize) -> u64 {
+    staging_bytes(g, p, plan, b)
+}
+
 /// Can this branch execute on a delegate lane at all?  Requires a
 /// delegate region and forbids `OpClass::Dynamic` operators and dynamic
 /// shapes anywhere in the branch (NNAPI-style static requirement —
@@ -501,7 +527,15 @@ pub fn assign_with_loads(
         if policy != PlacePolicy::ForceCpu {
             if let Some((l, score, _)) = best {
                 out.assignment[b] = Placement::Delegate(l);
-                out.staging_bytes[b] = staging_bytes(g, p, plan, b);
+                // remote lanes hold *transfer* bytes over the link
+                // instead of on-die staging — same boundary tensors,
+                // same host-resident lease, so the governor accounting
+                // is identical either way
+                out.staging_bytes[b] = if soc.lanes[l].remote {
+                    transfer_bytes(g, p, plan, b)
+                } else {
+                    staging_bytes(g, p, plan, b)
+                };
                 busy[l] += score;
             }
         }
@@ -735,6 +769,97 @@ mod tests {
             let e_ea0 = plan_energy(&g, &p, &plan, &ea0, &soc);
             assert!(e_ea0.is_finite() && e_auto.is_finite(), "{}", g.name);
             assert!(e_ea0 <= e_auto, "{}: {e_ea0} > {e_auto}", g.name);
+        }
+    }
+
+    #[test]
+    fn remote_lane_prices_through_the_same_closed_form() {
+        // a remote lane is AccLane-shaped by construction: the generic
+        // pricing must equal the hand-computed Appendix-B form with
+        // uplink/link/server terms substituted, and transfer bytes must
+        // equal the staging bytes the lease accounting already prices
+        let g = micro::fallback_heavy(4, 4, 128, 6);
+        let base = SocProfile::pixel6();
+        let remote = crate::device::RemoteLane::edge_server();
+        let soc = base.with_remote(&remote);
+        let rl = soc.remote_lane().expect("remote lane attached");
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let b = (0..plan.branches.len())
+            .find(|&b| plan.branches[b].has_delegate)
+            .expect("trunk branch");
+        let lat = lane_delegate_latency(&g, &p, &plan, b, &soc, &soc.lanes[rl]);
+        assert!(lat.is_finite() && lat > remote.uplink_latency_s);
+        // hand-computed: one region unit + CPU glue
+        let glue: f64 = plan.branches[b]
+            .units
+            .iter()
+            .filter_map(|&u| match &plan.unit_graph.units[u] {
+                Unit::Cpu(id) => {
+                    let f = plan.unit_graph.flops[u] as f64;
+                    Some((f / soc.cpu_flops_per_core).max(
+                        node_stream_bytes(&g, *id) as f64 / (soc.mem_bw * CPU_BW_SHARE),
+                    ))
+                }
+                Unit::Region(_) => None,
+            })
+            .sum();
+        let region_f: f64 = plan.branches[b]
+            .units
+            .iter()
+            .filter(|&&u| matches!(plan.unit_graph.units[u], Unit::Region(_)))
+            .map(|&u| plan.unit_graph.flops[u] as f64)
+            .sum();
+        let bytes = staging_bytes(&g, &p, &plan, b) as f64;
+        let expect = remote.uplink_latency_s
+            + region_f / (remote.server_flops * remote.server_utilization)
+            + bytes / remote.link_bw
+            + glue;
+        assert!((lat - expect).abs() < 1e-12, "priced {lat}, expected {expect}");
+        assert_eq!(
+            transfer_bytes(&g, &p, &plan, b),
+            staging_bytes(&g, &p, &plan, b),
+            "transfer bytes replace staging bytes byte-for-byte"
+        );
+    }
+
+    #[test]
+    fn knocked_out_local_lanes_spill_to_remote_but_dynamic_stays_cpu() {
+        // all on-die lanes unreachable: the remote lane is the only
+        // target left, and Auto takes it for the heavy static trunk —
+        // while dynamic branches stay CPU exactly as on-die rules say
+        let mut base = SocProfile::pixel6();
+        for lane in &mut base.lanes {
+            lane.reachable = false;
+        }
+        let soc = base.with_remote(&crate::device::RemoteLane::edge_server());
+        let rl = soc.remote_lane().unwrap();
+        let g = micro::fallback_heavy(6, 24, 448, 4);
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let placed = assign(&g, &p, &plan, &soc, PlacePolicy::Auto);
+        assert!(placed.num_delegated() >= 1, "trunk must spill to the edge");
+        for b in placed.delegated() {
+            assert_eq!(placed.lane_of(b), Some(rl), "only the remote lane is reachable");
+            assert_eq!(
+                placed.staging_bytes[b],
+                transfer_bytes(&g, &p, &plan, b),
+                "remote assignment records transfer bytes"
+            );
+            for id in plan.branch_nodes(&g, &p, b) {
+                assert_ne!(g.node(id).kind.class(), OpClass::Dynamic);
+            }
+        }
+        // dynamic work never delegates, remote lane or not
+        let gd = micro::mixed();
+        let pd = partition(&gd, &loose());
+        let pland = branch::plan(&gd, &pd, DEFAULT_BETA);
+        let placedd = assign(&gd, &pd, &pland, &soc, PlacePolicy::Auto);
+        for b in placedd.delegated() {
+            for id in pland.branch_nodes(&gd, &pd, b) {
+                assert_ne!(gd.node(id).kind.class(), OpClass::Dynamic);
+                assert!(!gd.node_has_dynamic_shape(id));
+            }
         }
     }
 

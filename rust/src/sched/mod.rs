@@ -280,7 +280,12 @@ pub fn placed_layer_demand(
 /// merge at the final drain).  `out[i]` is the staging of every job
 /// whose dispatch→merge span covers layer `i`; feed it to
 /// [`placed_layer_demand`] so multi-lane offload with overlap still
-/// can't smuggle memory past the §3.3 budget.
+/// can't smuggle memory past the §3.3 budget.  Remote lanes
+/// (`crate::device::RemoteLane`) fold in identically: their
+/// `staging_bytes` are the link transfer bytes
+/// ([`transfer_bytes`](crate::place::transfer_bytes)), staged
+/// host-side from uplink dispatch until the downlink merges — so
+/// device–edge spills stay inside the governor lease too.
 pub fn placed_inflight_staging(
     plan: &BranchPlan,
     placement: &crate::place::PlacementPlan,

@@ -31,8 +31,12 @@
 //! * **SLO admission** — deadline-tagged requests
 //!   ([`Server::submit_with_deadline`]) are admitted only when the
 //!   target lane's outstanding modelled work fits the deadline;
-//!   otherwise they degrade to the bit-identical CPU-forced path or
-//!   are shed with an explicit [`Outcome`] — never silently dropped.
+//!   otherwise they spill to the device–edge remote lane when the
+//!   model's [`SloSpec`] carries one and its queue fits the deadline
+//!   ([`Outcome::Spilled`]), degrade to the bit-identical CPU-forced
+//!   path, or are shed with an explicit [`Outcome`] — never silently
+//!   dropped.  A persistent link fault mid-spill resolves to
+//!   [`Outcome::DegradedCpu`] (see [`ModelExecutor::execute_spilled`]).
 //!
 //! (Offline build: no tokio — the dispatcher is std-thread + condvar
 //! based, which for a single-host serving demo is equivalent.)
@@ -78,6 +82,11 @@ pub enum Outcome {
     /// The deadline could not be met on the placed lane; served on the
     /// bit-identical CPU-forced path instead.
     DegradedCpu,
+    /// The deadline could not be met on the placed lane but fit the
+    /// device–edge remote lane's queue; served over the link
+    /// (bit-identical outputs — the edge server runs the same host
+    /// kernels).
+    Spilled,
     /// The deadline is unmeetable even degraded: rejected without
     /// executing (`checksum` 0, `batched` 0).
     Shed,
@@ -129,6 +138,17 @@ pub trait ModelExecutor: Send + 'static {
     /// [`ModelExecutor::execute_degraded`].
     fn execute_batch_degraded(&mut self, seeds: &[u64]) -> anyhow::Result<Vec<(f64, f64)>> {
         seeds.iter().map(|&s| self.execute_degraded(s)).collect()
+    }
+
+    /// Run one request on the device–edge remote spill path.
+    /// `Ok(None)` means a persistent link fault kept the request off
+    /// the edge server entirely — the dispatcher then serves it via
+    /// [`ModelExecutor::execute_degraded`] and answers
+    /// [`Outcome::DegradedCpu`], so an injected link drop always
+    /// resolves to an explicit outcome, never a silent loss.  The
+    /// default has no link to fault and simply executes normally.
+    fn execute_spilled(&mut self, seed: u64) -> anyhow::Result<Option<(f64, f64)>> {
+        self.execute(seed).map(Some)
     }
 }
 
@@ -309,6 +329,11 @@ pub struct SloSpec {
     pub lane_service_s: f64,
     /// Modelled service seconds of the degraded CPU-forced path.
     pub cpu_service_s: f64,
+    /// Device–edge spill option: `(remote lane index, modelled remote
+    /// service seconds)`.  A deadline the local lane misses tries this
+    /// lane's queue before degrading or shedding ([`Outcome::Spilled`]);
+    /// `None` disables spilling for this model.
+    pub remote: Option<(usize, f64)>,
 }
 
 impl SloSpec {
@@ -328,7 +353,17 @@ impl SloSpec {
             lane,
             lane_service_s: lane.map(|l| busy[l]).unwrap_or(0.0),
             cpu_service_s: placement.cpu_latency_s.iter().sum(),
+            remote: None,
         }
+    }
+
+    /// This spec with a device–edge spill option: requests whose
+    /// deadline the local lane misses may fall back to remote `lane`
+    /// at `service_s` modelled seconds before degrading (see
+    /// [`Server::submit_with_deadline`]).
+    pub fn with_remote(mut self, lane: usize, service_s: f64) -> Self {
+        self.remote = Some((lane, service_s));
+        self
     }
 }
 
@@ -386,6 +421,11 @@ pub struct PlacedEngineExecutor {
     plan: crate::branch::BranchPlan,
     schedules: Vec<crate::sched::LayerSchedule>,
     placement: crate::place::PlacementPlan,
+    /// Device–edge spill path: per-lane remote flags, link-fault
+    /// model, and the spill placement (delegate-safe branches on the
+    /// remote lane).  `None` = no remote tier; `execute_spilled`
+    /// falls back to the normal path.
+    remote: Option<(Vec<bool>, crate::device::LinkModel, crate::place::PlacementPlan)>,
 }
 
 impl PlacedEngineExecutor {
@@ -396,7 +436,24 @@ impl PlacedEngineExecutor {
         schedules: Vec<crate::sched::LayerSchedule>,
         placement: crate::place::PlacementPlan,
     ) -> Self {
-        Self { g, p, plan, schedules, placement }
+        Self { g, p, plan, schedules, placement, remote: None }
+    }
+
+    /// This executor with a device–edge spill path:
+    /// [`ModelExecutor::execute_spilled`] runs `spill` — a placement
+    /// onto the remote lane — under `link`, with the link seed mixed
+    /// with the request seed so per-request fault outcomes are
+    /// deterministic yet independent.  A request whose every transfer
+    /// faults persistently reports `Ok(None)` and is re-served on the
+    /// degraded CPU path by the dispatcher.
+    pub fn with_remote(
+        mut self,
+        remote_lanes: Vec<bool>,
+        link: crate::device::LinkModel,
+        spill: crate::place::PlacementPlan,
+    ) -> Self {
+        self.remote = Some((remote_lanes, link, spill));
+        self
     }
 }
 
@@ -413,6 +470,27 @@ impl ModelExecutor for PlacedEngineExecutor {
         let engine = crate::exec::Engine::new(&self.g, &self.p, &self.plan, None);
         let (values, _) = engine.run_cpu_forced(&self.schedules)?;
         Ok((t0.elapsed().as_secs_f64(), values.checksum()))
+    }
+
+    fn execute_spilled(&mut self, seed: u64) -> anyhow::Result<Option<(f64, f64)>> {
+        let Some((lanes, link, spill)) = &self.remote else {
+            return self.execute(seed).map(Some);
+        };
+        let t0 = Instant::now();
+        let mut engine = crate::exec::Engine::new(&self.g, &self.p, &self.plan, None);
+        // mix the request seed into the link seed: each request rolls
+        // an independent — still deterministic — fault schedule
+        let link = crate::device::LinkModel { seed: link.seed ^ seed, ..link.clone() };
+        engine.set_remote(lanes.clone(), link);
+        let (values, stats) = engine.run_placed(&self.schedules, spill, None)?;
+        if stats.delegate_jobs == 0 && spill.num_delegated() > 0 {
+            // total link outage: every transfer faulted persistently
+            // and the run already fell back branch-by-branch to the
+            // bit-identical CPU path — report the request as degraded
+            // service, not remote
+            return Ok(None);
+        }
+        Ok(Some((t0.elapsed().as_secs_f64(), values.checksum())))
     }
 }
 
@@ -436,6 +514,10 @@ struct QueuedJob {
     reply: mpsc::Sender<anyhow::Result<Response>>,
     /// Serve on the CPU-forced path (deadline-degraded admission).
     degraded: bool,
+    /// Serve on the device–edge remote spill path
+    /// ([`ModelExecutor::execute_spilled`]); `lane_service` then holds
+    /// the remote lane's ledger charge.
+    spilled: bool,
     /// `(lane, modelled service seconds)` charged to the lane ledger
     /// at admission; popped when the batch completes or the queue is
     /// drained, so a drained server's outstanding time reads zero.
@@ -765,8 +847,13 @@ impl Server {
     ///
     /// * the lane's outstanding modelled work plus this request's lane
     ///   service fits the deadline → **admitted** on the placed path;
-    /// * it doesn't, but the degraded CPU-forced service does →
-    ///   **degraded** ([`Outcome::DegradedCpu`], bit-identical output);
+    /// * it doesn't, but the [`SloSpec::remote`] lane's outstanding
+    ///   work plus the remote service does → **spilled** to the
+    ///   device–edge lane ([`Outcome::Spilled`], bit-identical output;
+    ///   the remote charge goes on the same shared ledger);
+    /// * that misses too (or no remote lane), but the degraded
+    ///   CPU-forced service fits → **degraded**
+    ///   ([`Outcome::DegradedCpu`], bit-identical output);
     /// * even that misses → **shed** immediately: the receiver gets a
     ///   [`Outcome::Shed`] response without executing.
     ///
@@ -791,13 +878,25 @@ impl Server {
             anyhow::bail!("model {model} disabled: its executor panicked");
         }
         let mut degraded = false;
+        let mut spilled = false;
         let mut lane_service = None;
         if let Some(slo) = st.models[slot].slo {
+            // the device–edge escape hatch both deadline arms share: a
+            // deadline the local path misses tries the remote lane's
+            // queue before degrading or shedding
+            let try_remote = |d: f64| {
+                slo.remote.filter(|&(rl, rs)| {
+                    self.inner.ledger.outstanding(rl) + rs <= d
+                })
+            };
             match (deadline_s, slo.lane) {
                 (Some(d), Some(lane)) => {
                     let eta = self.inner.ledger.outstanding(lane) + slo.lane_service_s;
                     if eta <= d {
                         lane_service = Some((lane, slo.lane_service_s));
+                    } else if let Some((rl, rs)) = try_remote(d) {
+                        lane_service = Some((rl, rs));
+                        spilled = true;
                     } else if slo.cpu_service_s <= d {
                         degraded = true;
                     } else {
@@ -808,11 +907,17 @@ impl Server {
                 }
                 (Some(d), None) => {
                     // CPU-only tenant: no lane queue, but an unmeetable
-                    // deadline is still shed rather than broken silently
+                    // deadline tries the remote lane, then is shed
+                    // rather than broken silently
                     if slo.cpu_service_s > d {
-                        drop(st);
-                        let _ = reply.send(Ok(shed_response(id, model)));
-                        return Ok(rx);
+                        if let Some((rl, rs)) = try_remote(d) {
+                            lane_service = Some((rl, rs));
+                            spilled = true;
+                        } else {
+                            drop(st);
+                            let _ = reply.send(Ok(shed_response(id, model)));
+                            return Ok(rx);
+                        }
                     }
                 }
                 (None, Some(lane)) => {
@@ -836,6 +941,7 @@ impl Server {
             },
             reply,
             degraded,
+            spilled,
             lane_service,
         });
         drop(st);
@@ -911,15 +1017,20 @@ impl Server {
         }
         let wall = t0.elapsed().as_secs_f64();
         let mut by_model: HashMap<String, Vec<f64>> = HashMap::new();
-        let (mut admitted, mut degraded, mut shed, mut dropped) = (0, 0, 0, 0);
+        let (mut admitted, mut degraded, mut shed, mut dropped, mut spilled) =
+            (0, 0, 0, 0, 0);
         for r in &done {
             match r.outcome {
                 Outcome::Admitted => admitted += 1,
                 Outcome::DegradedCpu => degraded += 1,
+                Outcome::Spilled => spilled += 1,
                 Outcome::Shed => shed += 1,
                 Outcome::Dropped => dropped += 1,
             }
-            if matches!(r.outcome, Outcome::Admitted | Outcome::DegradedCpu) {
+            if matches!(
+                r.outcome,
+                Outcome::Admitted | Outcome::DegradedCpu | Outcome::Spilled
+            ) {
                 by_model.entry(r.model.clone()).or_default().push(r.latency_s);
             }
         }
@@ -936,6 +1047,7 @@ impl Server {
             shed,
             dropped,
             skipped,
+            spilled,
             responses: done,
         })
     }
@@ -979,7 +1091,31 @@ fn replace_all(st: &mut Dispatch, ledger: &LaneLedger) {
         );
         ledger.add_static(&placement.lane_busy_s(pipe.soc.lanes.len()));
         let demand = pipe.peak_placed_demand(&placement);
-        let slo = SloSpec::from_placement(&placement, pipe.soc.lanes.len());
+        let mut slo = SloSpec::from_placement(&placement, pipe.soc.lanes.len());
+        // tenants on a remote-capable SoC get the device–edge spill
+        // option: remote service = modelled serial latency of every
+        // delegate-safe branch over the link (Appendix-B closed form
+        // on the remote lane's terms)
+        if let Some(rl) = pipe.soc.remote_lane() {
+            if slo.lane != Some(rl) {
+                let svc: f64 = (0..pipe.plan.branches.len())
+                    .map(|b| {
+                        crate::place::lane_delegate_latency(
+                            &pipe.graph,
+                            &pipe.partition,
+                            &pipe.plan,
+                            b,
+                            &pipe.soc,
+                            &pipe.soc.lanes[rl],
+                        )
+                    })
+                    .filter(|l| l.is_finite())
+                    .sum();
+                if svc > 0.0 {
+                    slo = slo.with_remote(rl, svc);
+                }
+            }
+        }
         let mode = if placement.num_delegated() == 0 {
             crate::sim::Mode::CpuOnly
         } else {
@@ -1056,11 +1192,14 @@ fn worker_loop(inner: &Inner) {
         let gen = st.models[slot].generation;
         let mut jobs: Vec<QueuedJob> = Vec::new();
         while jobs.len() < inner.cfg.max_batch.max(1) {
-            // degraded (CPU-forced) and normal requests never share a
-            // batch: one execute call serves one path
+            // degraded (CPU-forced), spilled (remote) and normal
+            // requests never share a batch: one execute call serves
+            // one path
             if let Some(first) = jobs.first() {
                 match st.models[slot].queue.front() {
-                    Some(next) if next.degraded == first.degraded => {}
+                    Some(next)
+                        if (next.degraded, next.spilled)
+                            == (first.degraded, first.spilled) => {}
                     _ => break,
                 }
             }
@@ -1070,6 +1209,7 @@ fn worker_loop(inner: &Inner) {
             }
         }
         let degraded = jobs.first().map(|j| j.degraded).unwrap_or(false);
+        let spilled = jobs.first().map(|j| j.spilled).unwrap_or(false);
         let demand_src = st.models[slot].demand.clone();
         let name = st.models[slot].name.clone();
         drop(st);
@@ -1085,10 +1225,30 @@ fn worker_loop(inner: &Inner) {
         let lease = inner.governor.acquire(demand);
         let seeds: Vec<u64> = jobs.iter().map(|j| j.req.seed).collect();
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            if degraded {
-                exec.execute_batch_degraded(&seeds)
+            if spilled {
+                // remote spills execute per request: every transfer
+                // rolls its own link faults, so outcomes can differ
+                // within one batch.  A persistent fault (`Ok(None)`)
+                // re-serves that request on the bit-identical degraded
+                // CPU path — an injected drop always resolves to an
+                // explicit outcome.
+                seeds
+                    .iter()
+                    .map(|&s| match exec.execute_spilled(s)? {
+                        Some((t, c)) => Ok((t, c, Outcome::Spilled)),
+                        None => exec
+                            .execute_degraded(s)
+                            .map(|(t, c)| (t, c, Outcome::DegradedCpu)),
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()
+            } else if degraded {
+                exec.execute_batch_degraded(&seeds).map(|rs| {
+                    rs.into_iter().map(|(t, c)| (t, c, Outcome::DegradedCpu)).collect()
+                })
             } else {
-                exec.execute_batch(&seeds)
+                exec.execute_batch(&seeds).map(|rs| {
+                    rs.into_iter().map(|(t, c)| (t, c, Outcome::Admitted)).collect()
+                })
             }
         }));
         // memory is free before anyone can observe the response
@@ -1106,7 +1266,7 @@ fn worker_loop(inner: &Inner) {
         let mut poisoned = false;
         match outcome {
             Ok(Ok(results)) if results.len() == jobs.len() => {
-                for (job, (exec_s, checksum)) in jobs.into_iter().zip(results) {
+                for (job, (exec_s, checksum, served)) in jobs.into_iter().zip(results) {
                     let resp = Response {
                         id: job.req.id,
                         model: name.clone(),
@@ -1114,7 +1274,7 @@ fn worker_loop(inner: &Inner) {
                         exec_s,
                         checksum,
                         batched: batch,
-                        outcome: if degraded { Outcome::DegradedCpu } else { Outcome::Admitted },
+                        outcome: served,
                     };
                     let _ = job.reply.send(Ok(resp));
                 }
@@ -1197,7 +1357,8 @@ pub struct LoadReport {
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// Latency summaries over *executed* responses only
-    /// ([`Outcome::Admitted`] / [`Outcome::DegradedCpu`]).
+    /// ([`Outcome::Admitted`] / [`Outcome::DegradedCpu`] /
+    /// [`Outcome::Spilled`]).
     pub latency: HashMap<String, Summary>,
     /// Governor high-water mark observed by the end of the run.
     pub peak_reserved_bytes: u64,
@@ -1212,6 +1373,12 @@ pub struct LoadReport {
     pub dropped: usize,
     /// Submissions skipped because the rotation hit a dropped model.
     pub skipped: usize,
+    /// Requests spilled to the device–edge remote lane
+    /// ([`Outcome::Spilled`]).  The accounting invariant every
+    /// outcome-counting test pins:
+    /// `admitted + degraded + shed + dropped + skipped + spilled`
+    /// equals the number of submissions attempted.
+    pub spilled: usize,
     pub responses: Vec<Response>,
 }
 
@@ -1534,6 +1701,10 @@ mod tests {
             self.0.wait();
             Ok((0.0, -(1.0 + seed as f64)))
         }
+        fn execute_spilled(&mut self, seed: u64) -> anyhow::Result<Option<(f64, f64)>> {
+            self.0.wait();
+            Ok(Some((0.0, 1000.0 + seed as f64)))
+        }
     }
 
     #[test]
@@ -1549,7 +1720,7 @@ mod tests {
         s.register_with_slo(
             "m",
             0,
-            SloSpec { lane: Some(0), lane_service_s: 1.0, cpu_service_s: 0.25 },
+            SloSpec { lane: Some(0), lane_service_s: 1.0, cpu_service_s: 0.25, remote: None },
             Box::new(PathProbe(gate.clone())),
         );
         // eta 1.0 ≤ 10.0 → admitted (outstanding 1.0)
@@ -1587,7 +1758,7 @@ mod tests {
         s.register_with_slo(
             "t",
             0,
-            SloSpec { lane: Some(0), lane_service_s: 5.0, cpu_service_s: 5.0 },
+            SloSpec { lane: Some(0), lane_service_s: 5.0, cpu_service_s: 5.0, remote: None },
             stub(1),
         );
         // deadline 0.5 < both services: every request shed
@@ -1600,7 +1771,7 @@ mod tests {
         s.register_with_slo(
             "u",
             0,
-            SloSpec { lane: Some(1), lane_service_s: 5.0, cpu_service_s: 0.25 },
+            SloSpec { lane: Some(1), lane_service_s: 5.0, cpu_service_s: 0.25, remote: None },
             stub(1),
         );
         let rep = s.run_load_slo(&["u"], 8, 4, 1, Some(1.0)).unwrap();
@@ -1609,11 +1780,140 @@ mod tests {
         s.register_with_slo(
             "v",
             0,
-            SloSpec { lane: Some(2), lane_service_s: 1e-3, cpu_service_s: 1e-3 },
+            SloSpec { lane: Some(2), lane_service_s: 1e-3, cpu_service_s: 1e-3, remote: None },
             stub(1),
         );
         let rep = s.run_load_slo(&["v"], 8, 4, 1, Some(10.0)).unwrap();
         assert_eq!((rep.admitted, rep.degraded, rep.shed, rep.dropped), (8, 0, 0, 0));
+        assert_eq!(s.lane_ledger().outstanding_total(), 0.0);
+        // local lane (5.0) misses the 1.0 deadline; the remote lane
+        // (1 ms) makes it: every request spills, none shed/degraded
+        s.register_with_slo(
+            "w",
+            0,
+            SloSpec {
+                lane: Some(3),
+                lane_service_s: 5.0,
+                cpu_service_s: 5.0,
+                remote: Some((4, 1e-3)),
+            },
+            stub(1),
+        );
+        let rep = s.run_load_slo(&["w"], 8, 4, 1, Some(1.0)).unwrap();
+        assert_eq!(
+            (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.spilled),
+            (0, 0, 0, 0, 8)
+        );
+        assert_eq!(
+            rep.admitted + rep.degraded + rep.shed + rep.dropped + rep.skipped
+                + rep.spilled,
+            8,
+            "outcome accounting must partition the submissions"
+        );
+        assert!(rep.latency.contains_key("w"), "spilled requests carry latency");
+        assert_eq!(s.lane_ledger().outstanding_total(), 0.0);
+    }
+
+    #[test]
+    fn spill_admission_is_deterministic_under_backlog() {
+        // pinned figures: local lane 1.0 s, remote 0.5 s, CPU 0.25 s.
+        // The gate holds admitted work outstanding so the ledger
+        // arithmetic is exact: admit → spill → degrade → shed, in
+        // submission order.
+        let gate = Gate::new();
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 1 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        s.register_with_slo(
+            "m",
+            0,
+            SloSpec {
+                lane: Some(0),
+                lane_service_s: 1.0,
+                cpu_service_s: 0.25,
+                remote: Some((1, 0.5)),
+            },
+            Box::new(PathProbe(gate.clone())),
+        );
+        // lane eta 1.0 ≤ 10.0 → admitted (lane 0 outstanding 1.0)
+        let r1 = s.submit_with_deadline("m", 0, Some(10.0)).unwrap();
+        // lane eta 2.0 > 1.5; remote eta 0.5 ≤ 1.5 → spilled (lane 1
+        // outstanding 0.5)
+        let r2 = s.submit_with_deadline("m", 1, Some(1.5)).unwrap();
+        // lane eta 2.0 > 0.6; remote eta 1.0 > 0.6; cpu 0.25 ≤ 0.6 →
+        // degraded (no ledger charge)
+        let r3 = s.submit_with_deadline("m", 2, Some(0.6)).unwrap();
+        // every path misses 0.1 → shed immediately
+        let r4 = s.submit_with_deadline("m", 3, Some(0.1)).unwrap();
+        let shed = r4.recv().unwrap().unwrap();
+        assert_eq!(shed.outcome, Outcome::Shed);
+        gate.open();
+        let a1 = r1.recv().unwrap().unwrap();
+        let sp2 = r2.recv().unwrap().unwrap();
+        let d3 = r3.recv().unwrap().unwrap();
+        assert_eq!(a1.outcome, Outcome::Admitted);
+        assert_eq!(a1.checksum, 1.0, "normal path served it");
+        assert_eq!(sp2.outcome, Outcome::Spilled);
+        assert_eq!(sp2.checksum, 1002.0, "spilled path served it");
+        assert_eq!(d3.outcome, Outcome::DegradedCpu);
+        assert_eq!(d3.checksum, -3.0, "degraded path served it");
+        assert_eq!(s.lane_ledger().outstanding(0), 0.0);
+        assert_eq!(
+            s.lane_ledger().outstanding(1),
+            0.0,
+            "remote lane charges must drain to exactly zero"
+        );
+    }
+
+    #[test]
+    fn spill_link_fault_resolves_to_degraded_never_silent() {
+        // executor whose remote path persistently faults on odd seeds
+        // (`Ok(None)`): those requests must come back DegradedCpu —
+        // explicit outcomes for every injected drop, nothing lost.
+        struct FaultyLink;
+        impl ModelExecutor for FaultyLink {
+            fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+                Ok((0.0, 1.0 + seed as f64))
+            }
+            fn execute_degraded(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+                Ok((0.0, -(1.0 + seed as f64)))
+            }
+            fn execute_spilled(&mut self, seed: u64) -> anyhow::Result<Option<(f64, f64)>> {
+                if seed % 2 == 1 {
+                    return Ok(None);
+                }
+                Ok(Some((0.0, 1000.0 + seed as f64)))
+            }
+        }
+        let mut s = Server::with_config(
+            ServeCfg { workers: 1, max_batch: 4 },
+            Arc::new(MemoryGovernor::unlimited()),
+        );
+        s.register_with_slo(
+            "m",
+            0,
+            SloSpec {
+                lane: Some(0),
+                lane_service_s: 10.0,
+                cpu_service_s: 0.1,
+                remote: Some((1, 1e-3)),
+            },
+            Box::new(FaultyLink),
+        );
+        let rxs: Vec<_> =
+            (0..4).map(|i| s.submit_with_deadline("m", i, Some(1.0)).unwrap()).collect();
+        let resps: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        for (seed, r) in resps.iter().enumerate() {
+            if seed % 2 == 1 {
+                assert_eq!(r.outcome, Outcome::DegradedCpu, "faulted spill degrades");
+                assert_eq!(r.checksum, -(1.0 + seed as f64), "degraded path served it");
+            } else {
+                assert_eq!(r.outcome, Outcome::Spilled);
+                assert_eq!(r.checksum, 1000.0 + seed as f64, "remote path served it");
+            }
+        }
         assert_eq!(s.lane_ledger().outstanding_total(), 0.0);
     }
 

@@ -140,7 +140,12 @@ fn prop_degraded_cpu_is_bit_identical_to_placed_path() {
         s.register_with_slo(
             "degraded",
             0,
-            SloSpec { lane: Some(0), lane_service_s: f64::INFINITY, cpu_service_s: 0.0 },
+            SloSpec {
+                lane: Some(0),
+                lane_service_s: f64::INFINITY,
+                cpu_service_s: 0.0,
+                remote: None,
+            },
             Box::new(PlacedEngineExecutor::new(g, p, plan, schedules, placement)),
         );
         for seed in [1u64, 2] {
@@ -169,17 +174,27 @@ fn deadline_admission_counts_are_exact_for_placed_tenants() {
     // every request is admitted on the placed path
     let rep = s.run_load_slo(&["m"], 12, 3, 5, Some(1e9)).unwrap();
     assert_eq!(
-        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped),
-        (12, 0, 0, 0, 0)
+        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped, rep.spilled),
+        (12, 0, 0, 0, 0, 0)
     );
     assert_eq!(rep.responses.len(), 12);
+    // the LoadReport accounting invariant: every submission resolves to
+    // exactly one outcome class, never silently
+    assert_eq!(
+        rep.admitted + rep.degraded + rep.shed + rep.dropped + rep.skipped + rep.spilled,
+        12
+    );
 
     // impossible deadline: even the degraded CPU path misses zero
     // seconds, so every request is shed — explicitly, never silently
     let rep = s.run_load_slo(&["m"], 12, 3, 5, Some(0.0)).unwrap();
     assert_eq!(
-        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped),
-        (0, 0, 12, 0, 0)
+        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped, rep.spilled),
+        (0, 0, 12, 0, 0, 0)
+    );
+    assert_eq!(
+        rep.admitted + rep.degraded + rep.shed + rep.dropped + rep.skipped + rep.spilled,
+        12
     );
     assert_eq!(rep.responses.len(), 12, "shed requests still get responses");
     assert!(rep.responses.iter().all(|r| r.outcome == Outcome::Shed && r.batched == 0));

@@ -1,0 +1,270 @@
+//! Device–edge remote spill tier: the deterministic remote-parity
+//! suite.
+//!
+//! The remote lane executes the same host kernels as the CPU pool, so
+//! whatever the link does — jitter, drops, retries, full partitions —
+//! outputs must stay bit-identical to a CPU-forced run of the same
+//! schedules.  Pins:
+//! * spilled (fault-free link), retried-after-fault, and CPU-forced
+//!   runs are checksum-bit-identical per seed, over random DAGs ×
+//!   random seeded loss schedules × lane knockouts
+//! * every remote transfer resolves explicitly: dispatched after at
+//!   most one retry, or inline on the CPU — never a silent drop
+//!   (`cpu_branch_runs + delegate_jobs` is conserved vs CPU-forced)
+//! * the same seed replays the same fault schedule bitwise
+//!   (`ExecStats` transfer fields compare equal to the bit)
+//! * governor leases stay within budget while remote transfers are in
+//!   flight, and drain to zero afterwards
+//! * at the serving layer, a fixed backlog resolves to *exact*
+//!   `Outcome::Spilled` counts, the `LoadReport` accounting invariant
+//!   holds, and the shared lane ledger drains to exactly 0.0
+
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::device::{LinkModel, RemoteLane, SocProfile};
+use parallax::exec::Engine;
+use parallax::graph::Graph;
+use parallax::memory::branch_memories;
+use parallax::models::micro;
+use parallax::partition::{partition, CostModel, Partition};
+use parallax::place::{self, Placement, PlacementPlan};
+use parallax::sched::{self, MemoryGovernor, SchedCfg};
+use parallax::serve::{Outcome, PlacedEngineExecutor, Server, SloSpec};
+use parallax::util::prop;
+
+fn loose() -> CostModel {
+    CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX }
+}
+
+/// Every delegate-safe branch forced onto the SoC's remote lane,
+/// priced by the Appendix-B closed form on the link's terms — the
+/// spill placement `serve` hands `execute_spilled`, built directly so
+/// the suite exercises the remote path even on graphs the Auto policy
+/// would keep local.
+fn spill_all(
+    g: &Graph,
+    p: &Partition,
+    plan: &branch::BranchPlan,
+    soc: &SocProfile,
+) -> PlacementPlan {
+    let rl = soc.remote_lane().expect("profile carries a remote lane");
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    for b in 0..plan.branches.len() {
+        if place::delegate_safe(g, p, plan, b) {
+            pl.assignment[b] = Placement::Delegate(rl);
+            pl.staging_bytes[b] = place::transfer_bytes(g, p, plan, b);
+            pl.delegate_latency_s[b] =
+                place::lane_delegate_latency(g, p, plan, b, soc, &soc.lanes[rl]);
+        }
+    }
+    pl
+}
+
+fn remote_flags(soc: &SocProfile) -> Vec<bool> {
+    soc.lanes.iter().map(|l| l.remote).collect()
+}
+
+#[test]
+fn prop_spilled_and_fault_retried_runs_match_cpu_forced_per_seed() {
+    prop::check("remote spill parity", 25, |rng| {
+        // random DAG family × lane knockouts × seeded loss schedule
+        let g = match rng.range(0, 3) {
+            0 => micro::fallback_heavy(rng.range(2, 5), rng.range(2, 4), 32, rng.range(2, 5)),
+            1 => micro::fallback_heavy_lanes(2, rng.range(2, 4), 2, 32, 3),
+            _ => micro::random_dag(rng, rng.range(2, 7), rng.range(1, 5)),
+        };
+        let socs = [SocProfile::pixel6, SocProfile::p30_pro, SocProfile::redmi_k50];
+        let mut soc = socs[rng.range(0, 3)]();
+        // knocked-out local lanes must not matter: the spill placement
+        // targets only the (always reachable) remote lane
+        for lane in &mut soc.lanes {
+            if rng.chance(0.4) {
+                lane.reachable = false;
+            }
+        }
+        let soc = soc.with_remote(&RemoteLane::edge_server());
+        let p = partition(&g, &loose());
+        let plan = branch::plan(&g, &p, DEFAULT_BETA);
+        let spill = spill_all(&g, &p, &plan, &soc);
+        if spill.num_delegated() == 0 {
+            return; // nothing delegate-safe in this draw
+        }
+        let mems = branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg { max_threads: rng.range(1, 4), margin: 0.4 };
+        let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let flags = remote_flags(&soc);
+
+        let engine = Engine::new(&g, &p, &plan, None);
+        let forced = PlacementPlan::cpu_only(plan.branches.len());
+        let (v_cpu, st_cpu) = engine.run_placed(&s, &forced, None).unwrap();
+
+        // spilled over a fault-free link: all remote, bit-identical
+        let mut e1 = Engine::new(&g, &p, &plan, None);
+        e1.set_remote(flags.clone(), LinkModel::reliable(rng.next_u64()));
+        let (v1, st1) = e1.run_placed(&s, &spill, None).unwrap();
+        assert_eq!(v_cpu.checksum(), v1.checksum(), "spilled run diverged");
+        assert_eq!(st1.delegate_jobs, spill.num_delegated());
+        assert_eq!(st1.link_retries, 0, "reliable link never retries");
+        assert!(st1.downlink_bytes > 0, "remote outputs cross the link back");
+
+        // a random seeded loss schedule: drops retry once, persistent
+        // faults fall back inline to the CPU — still bit-identical
+        let link = LinkModel {
+            seed: rng.next_u64(),
+            jitter_frac: rng.f64() * 0.3,
+            drop_p: rng.f64() * 0.5,
+            partition_every: if rng.chance(0.4) { rng.range_u64(2, 6) } else { 0 },
+            partition_len: 1,
+        };
+        let mut e2 = Engine::new(&g, &p, &plan, None);
+        e2.set_remote(flags.clone(), link.clone());
+        let (v2, st2) = e2.run_placed(&s, &spill, None).unwrap();
+        assert_eq!(v_cpu.checksum(), v2.checksum(), "faulty-link run diverged");
+        // no silent drops: every branch ran exactly once, remotely or
+        // on the host
+        assert_eq!(
+            st2.cpu_branch_runs + st2.delegate_jobs,
+            st_cpu.cpu_branch_runs,
+            "a remote transfer resolved silently"
+        );
+        assert!(st2.delegate_jobs <= spill.num_delegated());
+
+        // same seed → the fault schedule replays bitwise
+        let mut e3 = Engine::new(&g, &p, &plan, None);
+        e3.set_remote(flags.clone(), link.clone());
+        let (v3, st3) = e3.run_placed(&s, &spill, None).unwrap();
+        assert_eq!(v2.checksum().to_bits(), v3.checksum().to_bits());
+        assert_eq!(st2.delegate_jobs, st3.delegate_jobs);
+        assert_eq!(st2.link_retries, st3.link_retries);
+        assert_eq!(st2.uplink_bytes, st3.uplink_bytes);
+        assert_eq!(st2.downlink_bytes, st3.downlink_bytes);
+        assert_eq!(st2.remote_busy_s.to_bits(), st3.remote_busy_s.to_bits());
+    });
+}
+
+#[test]
+fn dead_link_resolves_every_job_to_the_cpu_never_silently() {
+    // partition window covers every transfer index: first attempt and
+    // retry both drop, so every job must fall back inline — outputs
+    // still bit-identical, stats showing the whole story
+    let g = micro::fallback_heavy(4, 3, 48, 4);
+    let soc = SocProfile::pixel6().with_remote(&RemoteLane::edge_server());
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let spill = spill_all(&g, &p, &plan, &soc);
+    assert!(spill.num_delegated() >= 1);
+    let mems = branch_memories(&g, &p, &plan);
+    let cfg = SchedCfg { max_threads: 2, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+
+    let engine = Engine::new(&g, &p, &plan, None);
+    let (v_cpu, st_cpu) =
+        engine.run_placed(&s, &PlacementPlan::cpu_only(plan.branches.len()), None).unwrap();
+    let mut e = Engine::new(&g, &p, &plan, None);
+    e.set_remote(
+        remote_flags(&soc),
+        LinkModel { seed: 5, jitter_frac: 0.1, drop_p: 0.0, partition_every: 2, partition_len: 2 },
+    );
+    let (v, st) = e.run_placed(&s, &spill, None).unwrap();
+    assert_eq!(v_cpu.checksum(), v.checksum(), "dead-link fallback diverged");
+    assert_eq!(st.delegate_jobs, 0, "nothing crossed a fully partitioned link");
+    assert_eq!(st.link_retries, spill.num_delegated(), "each job retried exactly once");
+    assert_eq!(st.cpu_branch_runs, st_cpu.cpu_branch_runs, "every job resolved on the host");
+    assert_eq!(st.downlink_bytes, 0);
+    assert!(st.uplink_bytes > 0, "wasted attempts are still charged");
+}
+
+#[test]
+fn prop_governor_leases_hold_while_remote_transfers_in_flight() {
+    // remote staging (transfer bytes) folds into the same layer leases
+    // as on-die staging: whatever the budget and the loss schedule,
+    // the ledger never exceeds it (short of a degraded-serial grant)
+    // and always drains to zero
+    let g = micro::fallback_pipeline(3, 2, 3, 48, 3);
+    let soc = SocProfile::pixel6().with_remote(&RemoteLane::edge_server());
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let spill = spill_all(&g, &p, &plan, &soc);
+    assert!(spill.num_delegated() >= 3, "one trunk per stage must spill");
+    let mems = branch_memories(&g, &p, &plan);
+    let cfg = SchedCfg { max_threads: 3, margin: 0.4 };
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    let flags = remote_flags(&soc);
+    prop::check("remote staging within budget", 15, |rng| {
+        let budget = rng.range_u64(1, 1 << 22);
+        let gov = MemoryGovernor::new(budget);
+        let mut e = Engine::new(&g, &p, &plan, None);
+        e.set_remote(flags.clone(), LinkModel::lossy(rng.next_u64(), 0.25));
+        let (v, _) = e.run_placed(&s, &spill, Some(&gov)).unwrap();
+        assert!(v.all_finite());
+        assert_eq!(gov.in_use(), 0, "leases leaked after the remote run");
+        let st = gov.stats();
+        assert!(
+            st.peak_reserved <= budget || st.over_budget_grants > 0,
+            "budget {budget} exceeded without a degraded-serial grant (peak {})",
+            st.peak_reserved
+        );
+    });
+}
+
+#[test]
+fn fixed_backlog_spill_counts_are_exact_and_bit_identical() {
+    // SLO arithmetic chosen so the admission decision is invariant to
+    // queue drain timing: the local lane always misses the deadline,
+    // the remote lane always fits.  Every request must spill — an
+    // exact count, not a flaky one — and every spilled response must
+    // carry the CPU-forced checksum.
+    let soc = SocProfile::pixel6().with_remote(&RemoteLane::edge_server());
+    let rl = soc.remote_lane().unwrap();
+    let g = micro::fallback_heavy(4, 3, 64, 4);
+    let p = partition(&g, &loose());
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let spill = spill_all(&g, &p, &plan, &soc);
+    assert!(spill.num_delegated() >= 1);
+    let mems = branch_memories(&g, &p, &plan);
+    let cfg = SchedCfg::default();
+    let s = sched::schedule(&plan, &mems, 1 << 34, &cfg);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let (v_cpu, _) = engine.run_cpu_forced(&s).unwrap();
+
+    let mut server = Server::new();
+    let slo = SloSpec { lane: Some(0), lane_service_s: 1.0, cpu_service_s: 0.002, remote: None }
+        .with_remote(rl, 0.01);
+    let exec = PlacedEngineExecutor::new(
+        g.clone(),
+        p.clone(),
+        plan.clone(),
+        s.clone(),
+        PlacementPlan::cpu_only(plan.branches.len()),
+    )
+    .with_remote(remote_flags(&soc), LinkModel::reliable(7), spill.clone());
+    server.register_with_slo("m", 0, slo, Box::new(exec));
+
+    const N: usize = 10;
+    // deadline 0.5: local eta >= 1.0 always misses; remote eta never
+    // exceeds N * 0.01 = 0.1 <= 0.5, so every request spills
+    let rep = server.run_load_slo(&["m"], N, N, 3, Some(0.5)).unwrap();
+    assert_eq!(rep.spilled, N, "exact spill count under the fixed backlog");
+    assert_eq!(
+        (rep.admitted, rep.degraded, rep.shed, rep.dropped, rep.skipped),
+        (0, 0, 0, 0, 0)
+    );
+    assert_eq!(
+        rep.admitted + rep.degraded + rep.shed + rep.dropped + rep.skipped + rep.spilled,
+        N,
+        "LoadReport accounting invariant"
+    );
+    for resp in &rep.responses {
+        assert_eq!(resp.outcome, Outcome::Spilled);
+        assert_eq!(
+            resp.checksum.to_bits(),
+            v_cpu.checksum().to_bits(),
+            "spilled response not bit-identical to CPU-forced"
+        );
+    }
+    assert_eq!(server.lane_ledger().outstanding(0), 0.0, "local lane drains");
+    assert_eq!(
+        server.lane_ledger().outstanding(rl),
+        0.0,
+        "remote lane ledger drains to exactly 0.0"
+    );
+}

@@ -4,13 +4,13 @@
 //! device budget (ISSUE 2 acceptance criterion), keep every model
 //! progressing, and return bit-stable results.
 
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use parallax::baselines::{Framework, Pipeline};
 use parallax::device::SocProfile;
 use parallax::models::ModelKind;
 use parallax::sched::{MemoryGovernor, SchedCfg};
-use parallax::serve::{pipeline_executor, ModelExecutor, ServeCfg, Server};
+use parallax::serve::{pipeline_executor, ModelExecutor, Outcome, ServeCfg, Server, SloSpec};
 use parallax::sim::Mode;
 
 const MODELS: [ModelKind; 3] =
@@ -146,6 +146,96 @@ fn skewed_load_cannot_starve_minority_model() {
     assert_eq!(report.latency["yolov8n"].n, 6);
     assert_eq!(report.latency["clip-text"].n, 24);
     assert!(gov.stats().in_use == 0);
+}
+
+/// Executor whose spilled path parks on a gate: lets the test pin a
+/// request *in flight on the remote lane* while its model is dropped.
+struct GatedSpillExecutor {
+    entered: Arc<(Mutex<bool>, Condvar)>,
+    release: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl ModelExecutor for GatedSpillExecutor {
+    fn execute(&mut self, seed: u64) -> anyhow::Result<(f64, f64)> {
+        Ok((0.0, seed as f64))
+    }
+
+    fn execute_spilled(&mut self, seed: u64) -> anyhow::Result<Option<(f64, f64)>> {
+        let (m, cv) = &*self.entered;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+        let (m, cv) = &*self.release;
+        let mut open = m.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(Some((0.0, 1000.0 + seed as f64)))
+    }
+}
+
+#[test]
+fn drop_while_request_spilled_in_flight_still_answers_explicitly() {
+    // Regression (ISSUE 9): a model dropped while one of its requests
+    // is in flight on the remote lane must still answer that request
+    // with an explicit Outcome (the spill result, never silence), the
+    // queued request behind it gets Outcome::Dropped, and the shared
+    // LaneLedger drains to exactly 0.0 — including the remote lane's
+    // in-flight transfer charge.
+    let entered = Arc::new((Mutex::new(false), Condvar::new()));
+    let release = Arc::new((Mutex::new(false), Condvar::new()));
+    let gov = Arc::new(MemoryGovernor::unlimited());
+    let mut server = Server::with_config(ServeCfg { workers: 1, max_batch: 1 }, gov);
+    // pinned arithmetic: the local lane can never make the deadline,
+    // the remote lane always can — every request spills at admission
+    let slo = SloSpec {
+        lane: Some(0),
+        lane_service_s: 1.0,
+        cpu_service_s: 0.1,
+        remote: Some((1, 1e-3)),
+    };
+    server.register_with_slo(
+        "m",
+        0,
+        slo,
+        Box::new(GatedSpillExecutor {
+            entered: entered.clone(),
+            release: release.clone(),
+        }),
+    );
+
+    let rx1 = server.submit_with_deadline("m", 1, Some(0.5)).unwrap();
+    // wait until the worker is inside the spilled execution — the
+    // request is now in flight on the remote lane
+    {
+        let (m, cv) = &*entered;
+        let mut seen = m.lock().unwrap();
+        while !*seen {
+            seen = cv.wait(seen).unwrap();
+        }
+    }
+    let rx2 = server.submit_with_deadline("m", 2, Some(0.5)).unwrap();
+    server.drop_model("m").unwrap();
+
+    // the queued request resolves immediately and explicitly
+    let r2 = rx2.recv().unwrap().unwrap();
+    assert_eq!(r2.outcome, Outcome::Dropped);
+
+    // release the in-flight spill: it must answer with its real
+    // outcome, not vanish with the dropped model
+    {
+        let (m, cv) = &*release;
+        *m.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    let r1 = rx1.recv().unwrap().unwrap();
+    assert_eq!(r1.outcome, Outcome::Spilled, "in-flight spill answered explicitly");
+    assert_eq!(r1.checksum, 1001.0, "served by the remote path");
+
+    // worker completed the remote charge before replying: the ledger
+    // holds exactly nothing, for the remote lane and in total
+    let ledger = server.lane_ledger();
+    assert_eq!(ledger.outstanding(1), 0.0, "remote lane drains to exactly 0.0");
+    assert_eq!(ledger.outstanding_total(), 0.0);
 }
 
 #[test]

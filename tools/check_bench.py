@@ -45,6 +45,9 @@ GUARDED = {
     # energy is a deterministic model quantity, not a host timing — the
     # fig2 measured group should reproduce almost exactly across hosts
     "fig2 energy measured",
+    # device–edge spill tier vs degraded-CPU fallback under a missed
+    # SLO (PR 9): guards the remote-spill serving hot path
+    "serve_throughput remote",
 }
 
 # A fresh mean above MARGIN x the committed mean fails the check.
