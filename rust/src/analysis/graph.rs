@@ -1,0 +1,187 @@
+//! Graph pass: structural audit of a [`Graph`] without executing it.
+//!
+//! Proves the properties the interpreting executor
+//! (`exec::Engine::eval_host_node`) and the branch planner assume:
+//! the DAG is acyclic, every tensor read resolves, each tensor has at
+//! most one producer, per-op input arity matches what the kernel will
+//! index, no non-`Output` node's results are silently dropped, and
+//! every dynamic-class op is a well-formed control barrier (so `ctrl`
+//! segmentation can cut at it).
+
+use crate::graph::{Graph, Node, OpClass, OpKind};
+
+use super::{Code, Finding, Pass};
+
+/// Minimum input arity the host kernel for `kind` will index.
+///
+/// Mirrors `exec::Engine::eval_host_node`: binary kernels read
+/// `ins[0..2]`, `LayerNorm`/`Attention` read `ins[0..3]`, everything
+/// else reads at most `ins[0]` (and tolerates zero inputs).
+fn min_inputs(kind: &OpKind) -> usize {
+    match kind {
+        OpKind::MatMul
+        | OpKind::FullyConnected
+        | OpKind::Add
+        | OpKind::Sub
+        | OpKind::Mul
+        | OpKind::Maximum => 2,
+        OpKind::LayerNorm | OpKind::Attention { .. } => 3,
+        _ => 0,
+    }
+}
+
+fn node_loc(n: &Node) -> String {
+    format!("node {} `{}` ({:?})", n.id.0, n.name, n.kind)
+}
+
+/// Run the graph pass. Returns one [`Finding`] per violation; an
+/// empty vector means every structural invariant holds.
+pub fn check(g: &Graph) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let nt = g.tensors().len();
+
+    // Producer table built by scanning node outputs ourselves, so a
+    // graph whose cached producer index is stale still gets audited.
+    let mut producers: Vec<Vec<u32>> = vec![Vec::new(); nt];
+    for n in g.nodes() {
+        for t in &n.outputs {
+            if (t.0 as usize) < nt {
+                producers[t.0 as usize].push(n.id.0);
+            }
+        }
+    }
+    for (t, who) in producers.iter().enumerate() {
+        if who.len() > 1 {
+            findings.push(Finding::error(
+                Pass::Graph,
+                Code::DuplicateProducer,
+                format!("tensor {t}"),
+                format!("produced by {} nodes: {who:?}", who.len()),
+            ));
+        }
+    }
+
+    for n in g.nodes() {
+        for t in n.inputs.iter().chain(&n.outputs) {
+            if t.0 as usize >= nt {
+                findings.push(Finding::error(
+                    Pass::Graph,
+                    Code::DanglingRead,
+                    node_loc(n),
+                    format!("references tensor {} but the graph has {nt}", t.0),
+                ));
+            }
+        }
+        let need = min_inputs(&n.kind);
+        if n.inputs.len() < need {
+            findings.push(Finding::error(
+                Pass::Graph,
+                Code::ArityMismatch,
+                node_loc(n),
+                format!("kernel indexes {} inputs, node has {}", need, n.inputs.len()),
+            ));
+        }
+        if n.outputs.is_empty() && !matches!(n.kind, OpKind::Output) {
+            findings.push(Finding::error(
+                Pass::Graph,
+                Code::ArityMismatch,
+                node_loc(n),
+                "non-Output node produces no tensors".to_string(),
+            ));
+        }
+        if let OpKind::Split { ways } = n.kind {
+            if n.outputs.len() != ways {
+                findings.push(Finding::error(
+                    Pass::Graph,
+                    Code::ArityMismatch,
+                    node_loc(n),
+                    format!("Split ways={} but {} outputs", ways, n.outputs.len()),
+                ));
+            }
+        }
+        if n.kind.class() == OpClass::Dynamic
+            && (n.inputs.is_empty() || n.outputs.is_empty())
+        {
+            findings.push(Finding::error(
+                Pass::Graph,
+                Code::BarrierMalformed,
+                node_loc(n),
+                format!(
+                    "dynamic-class barrier needs inputs and outputs to resolve \
+                     shapes across the cut (has {} in, {} out)",
+                    n.inputs.len(),
+                    n.outputs.len()
+                ),
+            ));
+        }
+    }
+
+    // Kahn's algorithm, replicated rather than calling `topo_order()`,
+    // so a cycle names its member nodes instead of just failing.
+    let nn = g.nodes().len();
+    let mut indeg: Vec<usize> = vec![0; nn];
+    for n in g.nodes() {
+        indeg[n.id.0 as usize] = g.in_degree(n.id);
+    }
+    let mut queue: std::collections::VecDeque<_> = g
+        .nodes()
+        .iter()
+        .filter(|n| indeg[n.id.0 as usize] == 0)
+        .map(|n| n.id)
+        .collect();
+    let mut visited = 0usize;
+    while let Some(id) = queue.pop_front() {
+        visited += 1;
+        for s in g.succs(id) {
+            let d = &mut indeg[s.0 as usize];
+            *d -= 1;
+            if *d == 0 {
+                queue.push_back(s);
+            }
+        }
+    }
+    if visited != nn {
+        let stuck: Vec<u32> = g
+            .nodes()
+            .iter()
+            .filter(|n| indeg[n.id.0 as usize] > 0)
+            .map(|n| n.id.0)
+            .collect();
+        findings.push(Finding::error(
+            Pass::Graph,
+            Code::Cycle,
+            format!("nodes {stuck:?}"),
+            format!(
+                "no topological order: {} of {} nodes are on or behind a cycle",
+                stuck.len(),
+                nn
+            ),
+        ));
+    }
+
+    // Dead ends are only meaningful once the graph declares sinks:
+    // micro test graphs legitimately end on bare compute nodes.
+    let has_output = g.nodes().iter().any(|n| matches!(n.kind, OpKind::Output));
+    if has_output {
+        for n in g.nodes() {
+            if matches!(n.kind, OpKind::Output) || n.outputs.is_empty() {
+                continue;
+            }
+            let consumed = n
+                .outputs
+                .iter()
+                .any(|&t| (t.0 as usize) < nt && !g.consumers(t).is_empty());
+            if !consumed {
+                findings.push(Finding::warning(
+                    Pass::Graph,
+                    Code::DeadEnd,
+                    node_loc(n),
+                    "all outputs unconsumed; node is unreachable from any sink"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    findings
+}

@@ -1,0 +1,223 @@
+//! Static verification of the runtime's core artifacts (no execution).
+//!
+//! The runtime's correctness story — branch-aware arena reuse (§3.2),
+//! governed leases (§3.3), lane placement, and bitwise captured-plan
+//! replay (§3.4) — is otherwise enforced only dynamically: a bad
+//! artifact is caught only if a test happens to execute that path.
+//! This module audits the artifacts themselves, before anything runs:
+//!
+//! | Pass | Artifact | What it proves |
+//! |------|----------|----------------|
+//! | [`graph`] | [`Graph`](crate::graph::Graph) | acyclic, no dangling reads, one producer per tensor, op arity, no dead ends, dynamic-op barriers well-formed |
+//! | [`placement`] | [`PlacementPlan`](crate::place::PlacementPlan) | `delegate_safe` holds for every delegation, lanes exist and are reachable, remote lanes never take dynamic work, staging bytes match the recomputation |
+//! | [`plan`] | [`CapturedPlan`](crate::exec::CapturedPlan) | arena offsets alias only lifetime-disjoint tensors, wave order respects branch dependencies, lane jobs merge by their first consumer, captured lease demands dominate the recomputed §3.3 residency |
+//!
+//! The fourth (determinism) pass is source-level and lives in
+//! `tools/check_determinism.py` plus the feature-gated interleaving
+//! tests (`cargo test --features interleave --test interleave`).
+//!
+//! Every check returns structured [`Finding`]s instead of panicking,
+//! so tests can assert the exact finding a seeded-broken artifact
+//! produces, and `parallax analyze --all` can sweep every shipped
+//! model × device profile. Debug builds also run the plan pass as a
+//! pre-replay hook inside [`Engine::run_captured`]
+//! (`exec`), turning a corrupted capture into a structured panic
+//! instead of silent memory corruption.
+//!
+//! [`Engine::run_captured`]: crate::exec::Engine::run_captured
+
+pub mod graph;
+pub mod placement;
+pub mod plan;
+
+use std::fmt;
+
+use crate::branch::{self, DEFAULT_BETA};
+use crate::ctrl::ShapeEnv;
+use crate::device::SocProfile;
+use crate::exec::Engine;
+use crate::graph::OpClass;
+use crate::models::ModelKind;
+use crate::partition::{partition, CostModel};
+use crate::place::{self, PlacePolicy};
+use crate::sched::SchedCfg;
+
+/// Which analyzer pass produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pass {
+    /// Structural audit of a [`Graph`](crate::graph::Graph).
+    Graph,
+    /// Legality audit of a [`PlacementPlan`](crate::place::PlacementPlan).
+    Placement,
+    /// Replay-safety audit of a [`CapturedPlan`](crate::exec::CapturedPlan).
+    Plan,
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Pass::Graph => "graph",
+            Pass::Placement => "placement",
+            Pass::Plan => "plan",
+        })
+    }
+}
+
+/// How bad a finding is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Suspicious but not provably unsafe (e.g. an unreachable node).
+    Warning,
+    /// Executing the artifact would be incorrect or unsafe.
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// Machine-checkable finding class, so tests can pin the exact
+/// finding a seeded-broken artifact must produce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Code {
+    /// The graph has a cycle (Kahn's order excludes ≥1 node).
+    Cycle,
+    /// A node reads a tensor id outside the graph's tensor table.
+    DanglingRead,
+    /// Two nodes claim to produce the same tensor.
+    DuplicateProducer,
+    /// A node's input/output count is wrong for its op kind.
+    ArityMismatch,
+    /// A non-Output node's outputs are consumed by nobody.
+    DeadEnd,
+    /// A dynamic-class (control-barrier) op with no inputs or outputs.
+    BarrierMalformed,
+    /// A delegated branch fails [`place::delegate_safe`] (dynamic op,
+    /// dynamic shape, or no delegate region).
+    IllegalDelegation,
+    /// A delegated branch targets an unreachable lane.
+    UnreachableLane,
+    /// A delegated branch targets a lane index the SoC doesn't have.
+    LaneOutOfBounds,
+    /// Recorded staging bytes disagree with the recomputation.
+    StagingMismatch,
+    /// Two lifetime-overlapping tensors share arena bytes.
+    ArenaOverlap,
+    /// A branch is scheduled before one of its predecessors.
+    WaveOrderViolation,
+    /// A lane job's output merges after its first consumer's wave.
+    MergeTooLate,
+    /// A captured lease demand is below the recomputed residency.
+    LeaseUnderProvisioned,
+    /// The artifact's vectors don't line up (lengths, duplicate or
+    /// out-of-range branch ids, missing per-branch entries).
+    PlanShapeMismatch,
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Code::Cycle => "cycle",
+            Code::DanglingRead => "dangling-read",
+            Code::DuplicateProducer => "duplicate-producer",
+            Code::ArityMismatch => "arity-mismatch",
+            Code::DeadEnd => "dead-end",
+            Code::BarrierMalformed => "barrier-malformed",
+            Code::IllegalDelegation => "illegal-delegation",
+            Code::UnreachableLane => "unreachable-lane",
+            Code::LaneOutOfBounds => "lane-out-of-bounds",
+            Code::StagingMismatch => "staging-mismatch",
+            Code::ArenaOverlap => "arena-overlap",
+            Code::WaveOrderViolation => "wave-order-violation",
+            Code::MergeTooLate => "merge-too-late",
+            Code::LeaseUnderProvisioned => "lease-under-provisioned",
+            Code::PlanShapeMismatch => "plan-shape-mismatch",
+        })
+    }
+}
+
+/// One violation found by a static pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// The pass that produced this finding.
+    pub pass: Pass,
+    /// Machine-checkable finding class.
+    pub code: Code,
+    /// How bad it is.
+    pub severity: Severity,
+    /// Where: node/tensor/branch/lane/wave context, human-readable.
+    pub location: String,
+    /// What went wrong, with the numbers that prove it.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "[{}] {}/{} at {}: {}",
+            self.severity, self.pass, self.code, self.location, self.message
+        )
+    }
+}
+
+impl Finding {
+    fn error(pass: Pass, code: Code, location: String, message: String) -> Self {
+        Finding { pass, code, severity: Severity::Error, location, message }
+    }
+
+    fn warning(pass: Pass, code: Code, location: String, message: String) -> Self {
+        Finding { pass, code, severity: Severity::Warning, location, message }
+    }
+}
+
+/// Run every applicable pass over one shipped model on one device
+/// profile, building the same artifacts the runtime would: partition
+/// with the profile's cost model, branch/layer plan, `Auto` placement,
+/// and — for fully static graphs — a placed [`CapturedPlan`]
+/// (dynamic graphs replan per segment at runtime, so there is no
+/// whole-graph capture to audit).
+///
+/// [`CapturedPlan`]: crate::exec::CapturedPlan
+pub fn analyze_model(kind: ModelKind, soc: &SocProfile) -> Vec<Finding> {
+    let g = kind.build();
+    let mut findings = graph::check(&g);
+
+    let cm = CostModel::from_profile(soc);
+    let p = partition(&g, &cm);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let placed = place::assign(&g, &p, &plan, soc, PlacePolicy::Auto);
+    findings.extend(placement::check(&g, &p, &plan, soc, &placed));
+
+    let fully_static =
+        g.nodes().iter().all(|n| n.kind.class() != OpClass::Dynamic);
+    if fully_static {
+        let mems = crate::memory::branch_memories(&g, &p, &plan);
+        let cfg = SchedCfg::default();
+        let schedules = crate::sched::schedule(&plan, &mems, 1 << 34, &cfg);
+        let engine = Engine::new(&g, &p, &plan, None);
+        let cp = engine.capture(&schedules, &ShapeEnv::unresolved(), Some(&placed));
+        findings.extend(plan::check(&g, &p, &plan, &cp, Some(&placed)));
+    }
+    findings
+}
+
+/// Sweep every shipped model × device profile. Returns one
+/// `("model @ device", findings)` row per combination, in a
+/// deterministic order.
+pub fn analyze_all() -> Vec<(String, Vec<Finding>)> {
+    let mut rows = Vec::new();
+    for kind in ModelKind::ALL {
+        for mk in SocProfile::ALL {
+            let soc = mk();
+            let label = format!("{} @ {}", kind.slug(), soc.name);
+            rows.push((label, analyze_model(kind, &soc)));
+        }
+    }
+    rows
+}

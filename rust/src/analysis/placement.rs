@@ -1,0 +1,119 @@
+//! Placement pass: prove a [`PlacementPlan`] violates no legality
+//! predicate, without running anything.
+//!
+//! Re-derives the rules `place::assign` is supposed to respect and
+//! checks the plan against them from scratch: every delegated branch
+//! must satisfy [`delegate_safe`] (static-class ops with static
+//! shapes inside a delegate region — which also keeps dynamic work
+//! off *remote* lanes, §3.4), its lane must exist and be reachable on
+//! this SoC, and its recorded staging bytes must equal the
+//! recomputed delegate-I/O figure (staging is folded into layer
+//! demand by `sched::placed_layer_demand`, so a wrong figure
+//! under-leases the governor).
+//!
+//! [`delegate_safe`]: crate::place::delegate_safe
+
+use crate::branch::BranchPlan;
+use crate::device::SocProfile;
+use crate::graph::{Graph, OpClass};
+use crate::partition::Partition;
+use crate::place::{self, PlacementPlan};
+
+use super::{Code, Finding, Pass};
+
+/// Run the placement pass. Returns one [`Finding`] per violated
+/// legality predicate; empty means the plan is safe to execute.
+pub fn check(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    soc: &SocProfile,
+    pl: &PlacementPlan,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let nb = plan.branches.len();
+
+    for (name, len) in [
+        ("assignment", pl.assignment.len()),
+        ("cpu_latency_s", pl.cpu_latency_s.len()),
+        ("delegate_latency_s", pl.delegate_latency_s.len()),
+        ("staging_bytes", pl.staging_bytes.len()),
+    ] {
+        if len != nb {
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::PlanShapeMismatch,
+                format!("PlacementPlan.{name}"),
+                format!("{len} entries for {nb} branches"),
+            ));
+        }
+    }
+    if pl.assignment.len() != nb {
+        return findings; // per-branch checks would index out of range
+    }
+
+    // Dynamic-class ops are control barriers: the partitioner must
+    // leave them on the CPU or `ctrl` can never resolve them.
+    for n in g.nodes() {
+        if n.kind.class() == OpClass::Dynamic && !p.is_cpu(n.id) {
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::BarrierMalformed,
+                format!("node {} `{}`", n.id.0, n.name),
+                "dynamic-class op assigned to a delegate region".to_string(),
+            ));
+        }
+    }
+
+    for b in 0..nb {
+        let Some(lane) = pl.lane_of(b) else { continue };
+        let loc = format!("branch {b} -> lane {lane}");
+        if lane >= soc.lanes.len() {
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::LaneOutOfBounds,
+                loc,
+                format!("SoC `{}` has {} lanes", soc.name, soc.lanes.len()),
+            ));
+            continue;
+        }
+        let l = &soc.lanes[lane];
+        let loc = format!("branch {b} -> lane {lane} `{}`", l.name);
+        if !l.reachable {
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::UnreachableLane,
+                loc.clone(),
+                "lane exists in the profile but the runtime cannot reach it"
+                    .to_string(),
+            ));
+        }
+        if !place::delegate_safe(g, p, plan, b) {
+            let kind = if l.remote { "remote lane" } else { "delegate lane" };
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::IllegalDelegation,
+                loc.clone(),
+                format!(
+                    "branch fails delegate_safe (dynamic op, dynamic shape, \
+                     or no delegate region) yet is placed on a {kind}"
+                ),
+            ));
+        }
+        let want = place::staging_bytes(g, p, plan, b);
+        if pl.staging_bytes[b] != want {
+            findings.push(Finding::error(
+                Pass::Placement,
+                Code::StagingMismatch,
+                loc,
+                format!(
+                    "recorded {} staging bytes, recomputed {want}; layer \
+                     demand would mis-lease by the difference",
+                    pl.staging_bytes[b]
+                ),
+            ));
+        }
+    }
+
+    findings
+}

@@ -1,0 +1,357 @@
+//! Plan pass: verify a [`CapturedPlan`] against [`memory::liveness`]
+//! and the §3.3 residency recomputation, without replaying it.
+//!
+//! A captured plan freezes everything the hot path trusts blindly at
+//! replay time: arena offsets, wave lists, per-wave lease demands,
+//! and the lane-merge topology. This pass re-derives each from the
+//! graph/partition/plan the capture was built from and proves the
+//! frozen copy is safe:
+//!
+//! * **arena aliasing** — recompute each captured branch's internal
+//!   lifetimes ([`memory::analyze`]) and prove no two lifetimes that
+//!   overlap in time share arena bytes ([`memory::aliasing_pairs`],
+//!   Eq. 1's `may_reuse`);
+//! * **wave order** — every branch-dependency edge must point forward
+//!   in the flattened wave/sequential execution order;
+//! * **merge topology** — every delegated branch must appear in the
+//!   captured `preds_del` of each of its consumers, so the replay
+//!   waits for the lane job to merge at (or before) the consumer's
+//!   wave;
+//! * **lease domination** — every captured per-wave demand, and the
+//!   placed run-wide lease, must dominate the recomputed residency,
+//!   so a governed replay can never under-lease.
+//!
+//! [`CapturedPlan`]: crate::exec::CapturedPlan
+//! [`memory::liveness`]: crate::memory::liveness
+//! [`memory::analyze`]: crate::memory::analyze
+//! [`memory::aliasing_pairs`]: crate::memory::aliasing_pairs
+
+use crate::branch::BranchPlan;
+use crate::exec::CapturedPlan;
+use crate::graph::Graph;
+use crate::memory;
+use crate::partition::Partition;
+use crate::place::PlacementPlan;
+use crate::sched;
+
+use super::{Code, Finding, Pass};
+
+/// Run the plan pass. `placement` must be the placement the replay
+/// will run under (the same one the capture was made with); `None`
+/// for a classic CPU-pool capture. Segment captures covering a
+/// subset of the plan's branches are fine — checks apply to the
+/// scheduled subset.
+pub fn check(
+    g: &Graph,
+    p: &Partition,
+    plan: &BranchPlan,
+    cp: &CapturedPlan,
+    placement: Option<&PlacementPlan>,
+) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let nb = plan.branches.len();
+    let schedules = cp.schedules();
+
+    if placement.is_some() != cp.is_placed() {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::PlanShapeMismatch,
+            "CapturedPlan".to_string(),
+            format!(
+                "captured with_placement={} but replayed with placement={}",
+                cp.is_placed(),
+                placement.is_some()
+            ),
+        ));
+    }
+
+    // -- branch-id sanity: in range, no duplicates across schedules --
+    let mut seen = vec![false; nb];
+    let mut ids_ok = true;
+    for (li, ls) in schedules.iter().enumerate() {
+        for b in ls.all() {
+            if b >= nb {
+                findings.push(Finding::error(
+                    Pass::Plan,
+                    Code::PlanShapeMismatch,
+                    format!("layer {li}"),
+                    format!("schedules branch {b}, plan has {nb}"),
+                ));
+                ids_ok = false;
+            } else if seen[b] {
+                findings.push(Finding::error(
+                    Pass::Plan,
+                    Code::PlanShapeMismatch,
+                    format!("layer {li}"),
+                    format!("branch {b} scheduled twice"),
+                ));
+                ids_ok = false;
+            } else {
+                seen[b] = true;
+            }
+        }
+    }
+    if !ids_ok {
+        return findings; // positional checks below would be nonsense
+    }
+
+    // -- wave order: dependency edges point forward ------------------
+    // Flatten the execution order the replay will follow: per layer,
+    // each wave is one position (its members run concurrently), then
+    // the sequential tail one position each.
+    let mut pos = vec![usize::MAX; nb];
+    let mut cursor = 0usize;
+    for ls in schedules {
+        for wave in &ls.waves {
+            for &b in wave {
+                pos[b] = cursor;
+            }
+            cursor += 1;
+        }
+        for &b in &ls.sequential {
+            pos[b] = cursor;
+            cursor += 1;
+        }
+    }
+    let branch_succs = plan.branch_succs();
+    for (a, succs) in branch_succs.iter().enumerate() {
+        if pos[a] == usize::MAX {
+            continue;
+        }
+        for &b in succs {
+            if pos[b] != usize::MAX && pos[b] <= pos[a] {
+                findings.push(Finding::error(
+                    Pass::Plan,
+                    Code::WaveOrderViolation,
+                    format!("branch {a} -> branch {b}"),
+                    format!(
+                        "consumer at flat position {} does not follow its \
+                         producer at {}",
+                        pos[b], pos[a]
+                    ),
+                ));
+            }
+        }
+    }
+
+    // -- arena aliasing: frozen offsets vs recomputed lifetimes ------
+    for b in 0..nb {
+        if pos[b] == usize::MAX {
+            continue;
+        }
+        let Some(prog) = cp.prog(b) else { continue };
+        let nodes = plan.branch_nodes(g, p, b);
+        let lts = memory::analyze(g, &nodes);
+        let internal: Vec<_> =
+            lts.into_iter().filter(|lt| !lt.escapes).collect();
+        let arena = prog.arena();
+        if arena.offsets.len() != internal.len() {
+            findings.push(Finding::error(
+                Pass::Plan,
+                Code::PlanShapeMismatch,
+                format!("branch {b} arena"),
+                format!(
+                    "{} frozen offsets for {} internal lifetimes",
+                    arena.offsets.len(),
+                    internal.len()
+                ),
+            ));
+            continue;
+        }
+        for (i, j) in memory::aliasing_pairs(arena, &internal) {
+            findings.push(Finding::error(
+                Pass::Plan,
+                Code::ArenaOverlap,
+                format!("branch {b} arena"),
+                format!(
+                    "tensors {} (def {}, last use {}, offset {}) and {} \
+                     (def {}, last use {}, offset {}) are live together \
+                     but share arena bytes",
+                    internal[i].tensor.0,
+                    internal[i].def_pos,
+                    internal[i].last_use,
+                    arena.offsets[i],
+                    internal[j].tensor.0,
+                    internal[j].def_pos,
+                    internal[j].last_use,
+                    arena.offsets[j],
+                ),
+            ));
+        }
+    }
+
+    // -- lease domination: frozen demands vs §3.3 recomputation ------
+    // Captured demands are always computed from the engine's
+    // max-shape branch memories (even for resolved segment captures),
+    // so the recomputation here is exact, not a bound.
+    let mems = memory::branch_memories(g, p, plan);
+    let on_host = |b: usize| match placement {
+        Some(pl) => !pl.is_delegated(b),
+        None => !plan.branches[b].has_delegate,
+    };
+    let demand = |wave: &[usize]| -> u64 {
+        wave.iter()
+            .filter(|&&b| on_host(b))
+            .map(|&b| mems[b].total() as u64)
+            .sum()
+    };
+    if cp.num_layers() != schedules.len() {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::PlanShapeMismatch,
+            "CapturedPlan.layers".to_string(),
+            format!(
+                "{} demand layers for {} schedules",
+                cp.num_layers(),
+                schedules.len()
+            ),
+        ));
+        return findings;
+    }
+    for (li, ls) in schedules.iter().enumerate() {
+        let cl = cp.layer(li);
+        if cl.waves.len() != ls.waves.len()
+            || cl.sequential.len() != ls.sequential.len()
+        {
+            findings.push(Finding::error(
+                Pass::Plan,
+                Code::PlanShapeMismatch,
+                format!("layer {li} demands"),
+                format!(
+                    "{} wave + {} sequential demands for {} waves + {} \
+                     sequential branches",
+                    cl.waves.len(),
+                    cl.sequential.len(),
+                    ls.waves.len(),
+                    ls.sequential.len()
+                ),
+            ));
+            continue;
+        }
+        for (wi, (&got, wave)) in cl.waves.iter().zip(&ls.waves).enumerate() {
+            let want = demand(wave);
+            if got < want {
+                findings.push(Finding::error(
+                    Pass::Plan,
+                    Code::LeaseUnderProvisioned,
+                    format!("layer {li} wave {wi}"),
+                    format!(
+                        "captured lease demand {got} < recomputed residency \
+                         {want}; a governed replay would under-lease"
+                    ),
+                ));
+            }
+        }
+        for (si, (&got, &b)) in
+            cl.sequential.iter().zip(&ls.sequential).enumerate()
+        {
+            let want = demand(&[b]);
+            if got < want {
+                findings.push(Finding::error(
+                    Pass::Plan,
+                    Code::LeaseUnderProvisioned,
+                    format!("layer {li} sequential {si} (branch {b})"),
+                    format!(
+                        "captured lease demand {got} < recomputed residency \
+                         {want}; a governed replay would under-lease"
+                    ),
+                ));
+            }
+        }
+    }
+
+    // -- placed topology: merge-by-first-consumer + run-wide lease ---
+    let Some(pl) = placement else { return findings };
+    let delegated_here =
+        schedules.iter().any(|ls| ls.all().any(|b| pl.is_delegated(b)));
+    let Some(pp) = cp.placed() else {
+        if delegated_here {
+            findings.push(Finding::error(
+                Pass::Plan,
+                Code::PlanShapeMismatch,
+                "CapturedPlan.placed".to_string(),
+                "schedules delegate branches but the capture froze no lane \
+                 topology"
+                    .to_string(),
+            ));
+        }
+        return findings;
+    };
+
+    let num_lanes = pl
+        .delegated()
+        .filter_map(|b| pl.lane_of(b))
+        .max()
+        .map_or(0, |m| m + 1);
+    if pp.num_lanes != num_lanes {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::PlanShapeMismatch,
+            "CapturedPlan.placed.num_lanes".to_string(),
+            format!("froze {} lanes, placement needs {num_lanes}", pp.num_lanes),
+        ));
+        return findings;
+    }
+    let mut used = vec![false; num_lanes];
+    for (b, &scheduled) in seen.iter().enumerate() {
+        if scheduled {
+            if let Some(l) = pl.lane_of(b) {
+                used[l] = true;
+            }
+        }
+    }
+    if pp.used != used {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::PlanShapeMismatch,
+            "CapturedPlan.placed.used".to_string(),
+            format!("froze lane-use {:?}, recomputed {used:?}", pp.used),
+        ));
+    }
+    if pp.preds_del.len() != nb {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::PlanShapeMismatch,
+            "CapturedPlan.placed.preds_del".to_string(),
+            format!("{} entries for {nb} branches", pp.preds_del.len()),
+        ));
+    } else {
+        for d in pl.delegated() {
+            for &cns in &branch_succs[d] {
+                if !pp.preds_del[cns].contains(&d) {
+                    findings.push(Finding::error(
+                        Pass::Plan,
+                        Code::MergeTooLate,
+                        format!("lane job {d} -> consumer branch {cns}"),
+                        "consumer's frozen merge set omits the lane job; the \
+                         replay would read its output before the merge"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+
+    let inflight =
+        sched::placed_inflight_staging_from(&branch_succs, pl, schedules);
+    let want = schedules
+        .iter()
+        .zip(&inflight)
+        .map(|(ls, &infl)| sched::placed_layer_demand(&mems, pl, ls, infl))
+        .max()
+        .unwrap_or(0);
+    if pp.run_demand < want {
+        findings.push(Finding::error(
+            Pass::Plan,
+            Code::LeaseUnderProvisioned,
+            "CapturedPlan.placed.run_demand".to_string(),
+            format!(
+                "frozen run-wide lease {} < recomputed placed residency \
+                 {want}; in-flight staging would overrun the governor lease",
+                pp.run_demand
+            ),
+        ));
+    }
+
+    findings
+}

@@ -108,10 +108,17 @@ pub(crate) struct BranchProgram {
     /// §3.2 arena layout for branch-internal activations: planned
     /// once at capture ([`crate::memory::plan_branch`] offsets), where
     /// the interpreting path replays alloc/free bookkeeping per run.
-    #[allow(dead_code)]
     arena: ArenaPlan,
     /// Every step's outputs are statically shaped.
     static_shapes: bool,
+}
+
+impl BranchProgram {
+    /// The frozen §3.2 arena layout, for the static plan pass
+    /// (`analysis::plan`) to audit against recomputed lifetimes.
+    pub(crate) fn arena(&self) -> &ArenaPlan {
+        &self.arena
+    }
 }
 
 /// Captured per-layer lease figures, parallel to the layer's schedule:
@@ -214,6 +221,67 @@ impl CapturedPlan {
 
     pub(crate) fn placed(&self) -> Option<&CapturedPlaced> {
         self.placed.as_ref()
+    }
+
+    pub(crate) fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Test hook: zero every arena offset of the first captured branch
+    /// program with at least two internal activations, so
+    /// lifetime-overlapping tensors share bytes. Returns whether a
+    /// program was corrupted. Exists so `rust/tests/analysis.rs` can
+    /// pin the exact [`ArenaOverlap`](crate::analysis::Code) finding
+    /// the plan pass must produce — never called by the runtime.
+    pub fn corrupt_arena_overlap(&mut self) -> bool {
+        for prog in self.progs.iter_mut().flatten() {
+            if prog.arena.offsets.len() >= 2 {
+                for off in &mut prog.arena.offsets {
+                    *off = 0;
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Test hook: swap the first two layer schedules (and their frozen
+    /// demand rows, so only the ordering is wrong), making consumers
+    /// run before their producers. Returns whether a swap happened.
+    /// Pins the [`WaveOrderViolation`](crate::analysis::Code) finding.
+    pub fn corrupt_wave_order(&mut self) -> bool {
+        if self.schedules.len() >= 2 {
+            self.schedules.swap(0, 1);
+            self.layers.swap(0, 1);
+            return true;
+        }
+        false
+    }
+
+    /// Test hook: halve the largest frozen lease figure — the placed
+    /// run-wide lease if this capture has one, else the largest
+    /// per-wave/sequential demand. Returns whether anything shrank.
+    /// Pins the [`LeaseUnderProvisioned`](crate::analysis::Code)
+    /// finding.
+    pub fn corrupt_lease_shrink(&mut self) -> bool {
+        if let Some(pp) = &mut self.placed {
+            if pp.run_demand > 1 {
+                pp.run_demand /= 2;
+                return true;
+            }
+        }
+        let best = self
+            .layers
+            .iter_mut()
+            .flat_map(|cl| cl.waves.iter_mut().chain(&mut cl.sequential))
+            .max_by_key(|d| **d);
+        if let Some(d) = best {
+            if *d > 1 {
+                *d /= 2;
+                return true;
+            }
+        }
+        false
     }
 
     /// Engine-free replay for standalone plans (see

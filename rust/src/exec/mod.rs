@@ -645,11 +645,8 @@ impl<'a> Engine<'a> {
         env: &ShapeEnv,
         placement: Option<&PlacementPlan>,
     ) -> anyhow::Result<ExecStats> {
-        debug_assert_eq!(
-            placement.is_some(),
-            cp.is_placed(),
-            "replay placement must match the capture"
-        );
+        #[cfg(debug_assertions)]
+        self.audit_captured(cp, placement);
         self.run_waves_inner(
             cp.schedules(),
             values,
@@ -659,6 +656,27 @@ impl<'a> Engine<'a> {
             true,
             Some(cp),
         )
+    }
+
+    /// Debug-build pre-replay hook: run the static plan pass
+    /// ([`crate::analysis::plan`]) over the capture before trusting
+    /// its frozen offsets, wave lists, and lease figures. A corrupted
+    /// capture becomes a structured panic naming the exact findings
+    /// instead of silent memory aliasing or an under-sized lease.
+    /// Release builds skip it — the audit is the capture-time
+    /// invariant check, not a hot-path cost.
+    #[cfg(debug_assertions)]
+    fn audit_captured(&self, cp: &CapturedPlan, placement: Option<&PlacementPlan>) {
+        let findings =
+            crate::analysis::plan::check(self.graph, self.partition, self.plan, cp, placement);
+        if !findings.is_empty() {
+            let mut msg = String::from("pre-replay static audit failed:");
+            for f in &findings {
+                msg.push_str("\n  ");
+                msg.push_str(&f.to_string());
+            }
+            panic!("{msg}");
+        }
     }
 
     /// One-call captured replay at max shapes: fresh store in, `(store,

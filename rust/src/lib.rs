@@ -26,6 +26,7 @@
 //! map, and `ARCHITECTURE.md` for the paper-section → module map with
 //! the request lifecycle.
 
+pub mod analysis;
 pub mod baselines;
 pub mod util;
 pub mod branch;

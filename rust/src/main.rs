@@ -4,6 +4,7 @@
 //! parallax run   --model clip-text --device pixel6 --mode cpu [--threads 6]
 //! parallax eval  <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|remote|all>
 //! parallax inspect --model whisper-tiny        # graph/branch/layer stats
+//! parallax analyze --all                       # static artifact audit
 //! parallax serve --requests 64 --concurrency 8 # governed serving demo
 //! parallax serve --remote --deadline-ms 5      # + device–edge spill lane
 //! parallax smoke                               # PJRT round-trip check
@@ -26,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         "run" => cmd_run(&args),
         "eval" => cmd_eval(&args),
         "inspect" => cmd_inspect(&args),
+        "analyze" => cmd_analyze(&args),
         "serve" => cmd_serve(&args),
         "smoke" => cmd_smoke(),
         _ => {
@@ -43,6 +45,7 @@ USAGE:
                    [--config file.toml]
   parallax eval    <table3|table4|table5|table6|table7|fig2|fig3|hetero|serving|remote|all>
   parallax inspect --model <slug> [--device <name>]
+  parallax analyze [--all | --model <slug> --device <name>]
   parallax serve   [--requests N] [--concurrency N] [--threads N]
                    [--workers N] [--batch N] [--budget-mb N]
                    [--deadline-ms F] [--remote] [--uplink-ms F]
@@ -187,6 +190,38 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
             maxb
         );
     }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    // Static artifact audit (no execution): graph structure, placement
+    // legality, and captured-plan replay safety — see
+    // `parallax::analysis` for the pass table.
+    let rows = if args.flag("all") || args.get("model").is_none() {
+        parallax::analysis::analyze_all()
+    } else {
+        let cfg = run_config(args)?;
+        let label = format!("{} @ {}", cfg.model.slug(), cfg.device.name);
+        vec![(label, parallax::analysis::analyze_model(cfg.model, &cfg.device))]
+    };
+    let mut total = 0usize;
+    for (label, findings) in &rows {
+        if findings.is_empty() {
+            println!("{label:<24} clean");
+        } else {
+            println!("{label:<24} {} finding(s)", findings.len());
+            for f in findings {
+                println!("  {f}");
+            }
+            total += findings.len();
+        }
+    }
+    anyhow::ensure!(
+        total == 0,
+        "static analysis found {total} violation(s) across {} target(s)",
+        rows.len()
+    );
+    println!("{} target(s) analyzed, zero findings", rows.len());
     Ok(())
 }
 

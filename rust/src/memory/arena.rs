@@ -12,7 +12,7 @@
 //!   Reuse").  One instance per branch; instances are independent, so
 //!   concurrent branches never contend (no lock on the hot path).
 
-use super::liveness::Lifetime;
+use super::liveness::{may_reuse, Lifetime};
 
 /// Result of offset planning: arena size + per-tensor offsets.
 #[derive(Clone, Debug)]
@@ -240,6 +240,39 @@ pub fn plan_branch(lifetimes: &[Lifetime]) -> ArenaPlan {
     ArenaPlan { arena_bytes: arena.footprint(), offsets }
 }
 
+/// Audit an [`ArenaPlan`] against the lifetimes it was planned over:
+/// return every pair `(i, j)` (`i < j`, indices into `lifetimes` /
+/// `plan.offsets`) whose lifetimes overlap in time (Eq. 1's
+/// [`may_reuse`] fails both ways) yet whose planned byte ranges
+/// `[offset, offset + align_up(bytes))` intersect.  An empty result
+/// proves the layout is aliasing-free; each returned pair is a §3.2
+/// violation — two concurrently-live tensors sharing arena bytes.
+/// Used by the static plan pass (`analysis::plan`) on the frozen
+/// offsets inside a `CapturedPlan`.
+pub fn aliasing_pairs(plan: &ArenaPlan, lifetimes: &[Lifetime]) -> Vec<(usize, usize)> {
+    let n = plan.offsets.len().min(lifetimes.len());
+    let mut pairs = Vec::new();
+    for i in 0..n {
+        let (ai, aj) = {
+            let off = plan.offsets[i];
+            (off, off + align_up(lifetimes[i].bytes.max(1)))
+        };
+        for j in (i + 1)..n {
+            if may_reuse(&lifetimes[i], &lifetimes[j]) {
+                continue;
+            }
+            let (bi, bj) = {
+                let off = plan.offsets[j];
+                (off, off + align_up(lifetimes[j].bytes.max(1)))
+            };
+            if ai < bj && bi < aj {
+                pairs.push((i, j));
+            }
+        }
+    }
+    pairs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +368,25 @@ mod tests {
         // chain: at most 2 live at once -> ~2 slots
         assert!(b.arena_bytes <= n.arena_bytes);
         assert_eq!(b.arena_bytes, 2 * 128);
+    }
+
+    #[test]
+    fn aliasing_pairs_accepts_planner_output() {
+        let lts = vec![lt(0, 2, 64), lt(1, 3, 64), lt(2, 4, 64), lt(5, 6, 192)];
+        assert!(aliasing_pairs(&plan_branch(&lts), &lts).is_empty());
+        assert!(aliasing_pairs(&plan_naive(&lts), &lts).is_empty());
+        assert!(aliasing_pairs(&plan_greedy_global(&lts), &lts).is_empty());
+    }
+
+    #[test]
+    fn aliasing_pairs_flags_overlapping_live_tensors() {
+        // Both live at position 1, both at offset 0: exactly one pair.
+        let lts = vec![lt(0, 2, 64), lt(1, 3, 64)];
+        let bad = ArenaPlan { arena_bytes: 64, offsets: vec![0, 0] };
+        assert_eq!(aliasing_pairs(&bad, &lts), vec![(0, 1)]);
+        // Disjoint lifetimes may share the offset: no pair.
+        let lts2 = vec![lt(0, 1, 64), lt(2, 3, 64)];
+        assert!(aliasing_pairs(&bad, &lts2).is_empty());
     }
 
     #[test]

@@ -10,7 +10,9 @@
 pub mod arena;
 pub mod liveness;
 
-pub use arena::{plan_branch, plan_greedy_global, plan_naive, ArenaPlan, BumpArena};
+pub use arena::{
+    aliasing_pairs, plan_branch, plan_greedy_global, plan_naive, ArenaPlan, BumpArena,
+};
 pub use liveness::{analyze, may_reuse, peak_bytes, Lifetime};
 
 use std::collections::HashMap;

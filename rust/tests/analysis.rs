@@ -1,0 +1,352 @@
+//! Static analyzer tests: every shipped artifact must analyze clean,
+//! and each mutation class the plan/placement passes exist to catch
+//! (arena overlap, wave reorder, lease shrink, illegal delegation)
+//! must be detected *statically* — no execution — with the exact
+//! expected [`Finding`](parallax::analysis::Finding).
+
+use parallax::analysis::{self, Code, Pass, Severity};
+use parallax::branch::{self, DEFAULT_BETA};
+use parallax::ctrl::ShapeEnv;
+use parallax::device::SocProfile;
+use parallax::exec::Engine;
+use parallax::graph::{Graph, OpClass, OpKind};
+use parallax::memory::branch_memories;
+use parallax::models::{micro, ModelKind};
+use parallax::partition::{partition, CostModel, Partition};
+use parallax::place::{self, Placement, PlacementPlan};
+use parallax::sched::{self, SchedCfg};
+
+fn cpu_only(g: &Graph) -> Partition {
+    partition(
+        g,
+        &CostModel { min_ops: usize::MAX, min_flops: u64::MAX, max_bytes_per_flop: 0.0 },
+    )
+}
+
+fn loose(g: &Graph) -> Partition {
+    partition(g, &CostModel { min_ops: 1, min_flops: 0, max_bytes_per_flop: f64::MAX })
+}
+
+fn schedules_for(
+    g: &Graph,
+    p: &Partition,
+    plan: &branch::BranchPlan,
+) -> Vec<parallax::sched::LayerSchedule> {
+    let mems = branch_memories(g, p, plan);
+    let cfg = SchedCfg { max_threads: 6, margin: 0.4 };
+    sched::schedule(plan, &mems, 1 << 34, &cfg)
+}
+
+// -- acceptance: everything shipped analyzes clean ----------------------
+
+#[test]
+fn every_shipped_model_and_profile_analyzes_clean() {
+    for kind in ModelKind::ALL {
+        for mk in SocProfile::ALL {
+            let soc = mk();
+            let findings = analysis::analyze_model(kind, &soc);
+            assert!(
+                findings.is_empty(),
+                "{} @ {}: {:?}",
+                kind.slug(),
+                soc.name,
+                findings
+            );
+        }
+    }
+}
+
+#[test]
+fn clean_captures_pass_the_plan_audit() {
+    let models: Vec<(&str, Graph)> = vec![
+        ("chain8", micro::chain(8)),
+        ("diamond4x4", micro::diamond(4, 4)),
+        ("parallel4x6", micro::parallel_chains(4, 6)),
+    ];
+    for (name, g) in &models {
+        for p in [cpu_only(g), loose(g)] {
+            let plan = branch::plan(g, &p, DEFAULT_BETA);
+            let engine = Engine::new(g, &p, &plan, None);
+            let s = schedules_for(g, &p, &plan);
+            let cp = engine.capture(&s, &ShapeEnv::unresolved(), None);
+            let findings = analysis::plan::check(g, &p, &plan, &cp, None);
+            assert!(findings.is_empty(), "{name}: {findings:?}");
+        }
+    }
+}
+
+// -- mutation class 1: arena overlap ------------------------------------
+
+#[test]
+fn arena_overlap_is_detected_statically() {
+    let g = micro::chain(8);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan);
+    let mut cp = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(cp.corrupt_arena_overlap(), "chain must have >= 2 internal offsets");
+    let findings = analysis::plan::check(&g, &p, &plan, &cp, None);
+    assert!(!findings.is_empty(), "zeroed offsets must alias");
+    for f in &findings {
+        assert_eq!(f.code, Code::ArenaOverlap, "{f}");
+        assert_eq!(f.pass, Pass::Plan, "{f}");
+        assert_eq!(f.severity, Severity::Error, "{f}");
+        assert!(f.message.contains("live together"), "{f}");
+    }
+}
+
+// -- mutation class 2: wave reorder -------------------------------------
+
+#[test]
+fn wave_reorder_is_detected_statically() {
+    let g = micro::diamond(4, 4);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan);
+    let cp_clean = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(analysis::plan::check(&g, &p, &plan, &cp_clean, None).is_empty());
+
+    let mut cp = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(cp.corrupt_wave_order(), "diamond must schedule >= 2 layers");
+    let findings = analysis::plan::check(&g, &p, &plan, &cp, None);
+    assert!(!findings.is_empty(), "swapped layers must break an edge");
+    for f in &findings {
+        assert_eq!(f.code, Code::WaveOrderViolation, "{f}");
+        assert_eq!(f.pass, Pass::Plan, "{f}");
+        assert_eq!(f.severity, Severity::Error, "{f}");
+    }
+}
+
+// -- mutation class 3: lease shrink -------------------------------------
+
+#[test]
+fn lease_shrink_is_detected_statically() {
+    let g = micro::parallel_chains(4, 6);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan);
+    let mut cp = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(cp.corrupt_lease_shrink(), "demands must be > 1 byte");
+    let findings = analysis::plan::check(&g, &p, &plan, &cp, None);
+    assert_eq!(findings.len(), 1, "exactly the shrunk figure: {findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.code, Code::LeaseUnderProvisioned, "{f}");
+    assert_eq!(f.pass, Pass::Plan, "{f}");
+    assert_eq!(f.severity, Severity::Error, "{f}");
+    assert!(f.message.contains("under-lease"), "{f}");
+}
+
+#[test]
+fn placed_run_lease_shrink_is_detected_statically() {
+    // Force a delegate-safe branch onto pixel6's lane 0, capture under
+    // that placement, then shrink the frozen run-wide lease.
+    let g = micro::parallel_chains(4, 6);
+    let p = loose(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let b = (0..plan.branches.len())
+        .find(|&b| place::delegate_safe(&g, &p, &plan, b))
+        .expect("loose partition yields a delegate-safe branch");
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(0);
+    pl.staging_bytes[b] = place::staging_bytes(&g, &p, &plan, b);
+    let soc = SocProfile::pixel6();
+    assert!(analysis::placement::check(&g, &p, &plan, &soc, &pl).is_empty());
+
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan);
+    let mut cp = engine.capture(&s, &ShapeEnv::unresolved(), Some(&pl));
+    assert!(
+        analysis::plan::check(&g, &p, &plan, &cp, Some(&pl)).is_empty(),
+        "clean placed capture must audit clean"
+    );
+    assert!(cp.corrupt_lease_shrink());
+    let findings = analysis::plan::check(&g, &p, &plan, &cp, Some(&pl));
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.code, Code::LeaseUnderProvisioned, "{f}");
+    assert_eq!(f.location, "CapturedPlan.placed.run_demand", "{f}");
+}
+
+// -- mutation class 4: illegal delegation -------------------------------
+
+#[test]
+fn illegal_delegation_is_detected_statically() {
+    // gated() holds an If node: delegating its branch violates
+    // delegate_safe (dynamic-class op) — the placement pass must say
+    // so without ever running the graph.
+    let g = micro::gated(3);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let soc = SocProfile::pixel6();
+    let clean = PlacementPlan::cpu_only(plan.branches.len());
+    assert!(analysis::placement::check(&g, &p, &plan, &soc, &clean).is_empty());
+
+    let b = (0..plan.branches.len())
+        .find(|&b| {
+            plan.branch_nodes(&g, &p, b)
+                .iter()
+                .any(|&id| g.node(id).kind.class() == OpClass::Dynamic)
+        })
+        .expect("gated() has a dynamic branch");
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(0);
+    let findings = analysis::placement::check(&g, &p, &plan, &soc, &pl);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.code, Code::IllegalDelegation, "{f}");
+    assert_eq!(f.pass, Pass::Placement, "{f}");
+    assert_eq!(f.severity, Severity::Error, "{f}");
+    assert!(f.location.contains(&format!("branch {b}")), "{f}");
+}
+
+#[test]
+fn unreachable_and_out_of_bounds_lanes_are_flagged() {
+    let g = micro::parallel_chains(4, 6);
+    let p = loose(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let b = (0..plan.branches.len())
+        .find(|&b| place::delegate_safe(&g, &p, &plan, b))
+        .expect("delegate-safe branch");
+
+    // p30pro's lane 0 exists but is unreachable from the runtime.
+    let soc = SocProfile::p30_pro();
+    assert!(!soc.lanes[0].reachable, "profile precondition");
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(0);
+    pl.staging_bytes[b] = place::staging_bytes(&g, &p, &plan, b);
+    let findings = analysis::placement::check(&g, &p, &plan, &soc, &pl);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].code, Code::UnreachableLane, "{}", findings[0]);
+
+    // A lane index past the profile's lane list.
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(99);
+    pl.staging_bytes[b] = place::staging_bytes(&g, &p, &plan, b);
+    let findings = analysis::placement::check(&g, &p, &plan, &soc, &pl);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].code, Code::LaneOutOfBounds, "{}", findings[0]);
+}
+
+#[test]
+fn staging_mismatch_is_flagged() {
+    let g = micro::parallel_chains(4, 6);
+    let p = loose(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let b = (0..plan.branches.len())
+        .find(|&b| place::delegate_safe(&g, &p, &plan, b))
+        .expect("delegate-safe branch");
+    let soc = SocProfile::pixel6();
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(0);
+    pl.staging_bytes[b] = place::staging_bytes(&g, &p, &plan, b) + 1;
+    let findings = analysis::placement::check(&g, &p, &plan, &soc, &pl);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].code, Code::StagingMismatch, "{}", findings[0]);
+    assert!(findings[0].message.contains("mis-lease"), "{}", findings[0]);
+}
+
+// -- graph pass on seeded-broken graphs ---------------------------------
+
+#[test]
+fn graph_cycle_is_flagged() {
+    let mut g = Graph::new("cyclic");
+    let t1 = g.tensor(&[64], "t1");
+    let t2 = g.tensor(&[64], "t2");
+    g.add_node("a", OpKind::Relu, vec![t2], vec![t1]);
+    g.add_node("b", OpKind::Relu, vec![t1], vec![t2]);
+    let findings = analysis::graph::check(&g);
+    assert!(
+        findings.iter().any(|f| f.code == Code::Cycle),
+        "{findings:?}"
+    );
+}
+
+#[test]
+fn graph_arity_mismatch_is_flagged() {
+    let mut g = Graph::new("bad-arity");
+    let a = g.tensor(&[8, 8], "a");
+    let o = g.tensor(&[8, 8], "o");
+    // MatMul's kernel indexes ins[1]; one input would read off the end.
+    g.add_node("mm", OpKind::MatMul, vec![a], vec![o]);
+    let findings = analysis::graph::check(&g);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].code, Code::ArityMismatch, "{}", findings[0]);
+    assert_eq!(findings[0].pass, Pass::Graph, "{}", findings[0]);
+}
+
+#[test]
+fn graph_dead_end_is_flagged_as_warning() {
+    let mut g = Graph::new("dead-end");
+    let input = g.tensor(&[64], "in");
+    let o = g.tensor(&[64], "o");
+    g.add_node("work", OpKind::Relu, vec![input], vec![o]);
+    let out = g.tensor(&[64], "out");
+    g.add_node("output", OpKind::Output, vec![o], vec![out]);
+    // A side computation nothing consumes, in a graph that has a sink.
+    let s = g.tensor(&[64], "side");
+    g.add_node("side", OpKind::Silu, vec![input], vec![s]);
+    let findings = analysis::graph::check(&g);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].code, Code::DeadEnd, "{}", findings[0]);
+    assert_eq!(findings[0].severity, Severity::Warning, "{}", findings[0]);
+    assert!(findings[0].location.contains("side"), "{}", findings[0]);
+}
+
+#[test]
+fn graph_pass_accepts_micro_graphs() {
+    for (name, g) in [
+        ("chain", micro::chain(8)),
+        ("diamond", micro::diamond(4, 4)),
+        ("parallel", micro::parallel_chains(4, 6)),
+        ("gated", micro::gated(3)),
+        ("mixed", micro::mixed()),
+    ] {
+        let findings = analysis::graph::check(&g);
+        assert!(findings.is_empty(), "{name}: {findings:?}");
+    }
+}
+
+// -- debug-build pre-replay hook ----------------------------------------
+
+// Only meaningful where debug_assertions are on (the hook compiles out
+// of release builds: the audit is a capture-time check, not a hot-path
+// cost).
+#[cfg(debug_assertions)]
+#[test]
+#[should_panic(expected = "pre-replay static audit")]
+fn corrupted_capture_panics_before_replay() {
+    let g = micro::chain(8);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let engine = Engine::new(&g, &p, &plan, None);
+    let s = schedules_for(&g, &p, &plan);
+    let mut cp = engine.capture(&s, &ShapeEnv::unresolved(), None);
+    assert!(cp.corrupt_arena_overlap());
+    let _ = engine.run_replayed(&cp, None);
+}
+
+// -- finding formatting --------------------------------------------------
+
+#[test]
+fn findings_render_with_pass_code_and_location() {
+    let g = micro::gated(3);
+    let p = cpu_only(&g);
+    let plan = branch::plan(&g, &p, DEFAULT_BETA);
+    let soc = SocProfile::pixel6();
+    let b = (0..plan.branches.len())
+        .find(|&b| {
+            plan.branch_nodes(&g, &p, b)
+                .iter()
+                .any(|&id| g.node(id).kind.class() == OpClass::Dynamic)
+        })
+        .unwrap();
+    let mut pl = PlacementPlan::cpu_only(plan.branches.len());
+    pl.assignment[b] = Placement::Delegate(0);
+    let findings = analysis::placement::check(&g, &p, &plan, &soc, &pl);
+    let rendered = findings[0].to_string();
+    assert!(rendered.starts_with("[error] placement/illegal-delegation"), "{rendered}");
+    assert!(rendered.contains(&format!("branch {b}")), "{rendered}");
+}

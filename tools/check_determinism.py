@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Determinism lint: source patterns that make runs non-reproducible.
+
+Parallax's experiment tables are pinned byte-for-byte (EXPERIMENTS.md),
+which only holds if the runtime never consults ambient entropy.  This
+lint walks rust/src/ and flags the three ways that guarantee has been
+lost in practice:
+
+  R1  unseeded RNG — `thread_rng`, `from_entropy`, `rand::random`, or
+      `RandomState::new` anywhere in rust/src.  Every stochastic
+      component must take an explicit seed (util::rng::Rng).
+  R2  wall-clock reads in deterministic layers — `Instant::now()` /
+      `SystemTime::now()` inside exec/, sched/, memory/, ctrl/ or
+      place/, except the timing-harness idiom `let <var> = Instant::now()`
+      (binding a start time to measure *real* latency is the point of a
+      benchmark; branching on it inside planning code is not).
+  R3  keyed-map iteration feeding float accumulation — iterating a
+      `HashMap`/`HashSet`-typed local (`.values()`/`.iter()`/`.keys()`)
+      in the same statement as a float fold (`sum`, `+=`, `fold`).
+      HashMap iteration order is randomized per process, and float
+      addition is not associative, so such a fold differs run to run.
+      Sorting within the statement (`.sorted`, `sort_by`, BTreeMap)
+      exempts the line.
+
+A line ending with `// det-ok: <reason>` is exempt from all rules —
+the reason is mandatory and reviewed like a `#[allow]`.
+
+Exit code 0 = clean; 1 = findings (each printed as
+`<file>:<line>: R<n> <message>`).
+
+Run from the repo root: `python3 tools/check_determinism.py`.
+Self-check the lint itself: `python3 tools/check_determinism.py --self-test`.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "rust", "src")
+
+# Layers that must stay wall-clock free (R2).  The eval/ and serving
+# harnesses intentionally measure real time; the planning and replay
+# layers must not.
+CLOCK_FREE_DIRS = ("exec", "sched", "memory", "ctrl", "place")
+
+PRAGMA = re.compile(r"//\s*det-ok:\s*\S")
+
+R1_UNSEEDED = re.compile(r"\b(thread_rng|from_entropy|rand::random|RandomState::new)\b")
+R2_CLOCK = re.compile(r"\b(Instant::now|SystemTime::now)\s*\(")
+R2_BINDING = re.compile(r"\blet\s+\w+\s*=\s*(std::time::)?Instant::now\s*\(\s*\)\s*;")
+R3_MAP_DECL = re.compile(r"\b(?:let|let\s+mut)\s+(\w+)\s*:\s*Hash(?:Map|Set)\b"
+                         r"|\b(?:let|let\s+mut)\s+(\w+)\s*=\s*Hash(?:Map|Set)\s*::")
+R3_FLOAT_FOLD = re.compile(r"(\.sum::<f(32|64)>|\bfold\s*\(|\+=)")
+R3_SORTED = re.compile(r"(sort|BTreeMap|BTreeSet)")
+
+
+def lint_lines(relpath, lines):
+    """Findings for one file, as (line_no, rule, message) tuples."""
+    findings = []
+    parts = relpath.replace("\\", "/").split("/")
+    clock_free = any(p in CLOCK_FREE_DIRS for p in parts)
+    map_vars = set()
+    for i, line in enumerate(lines, start=1):
+        if PRAGMA.search(line):
+            continue
+        code = line.split("//")[0]
+
+        m = R1_UNSEEDED.search(code)
+        if m:
+            findings.append((i, "R1", f"unseeded RNG `{m.group(1)}` — take an "
+                             "explicit seed (util::rng::Rng)"))
+
+        if clock_free:
+            m = R2_CLOCK.search(code)
+            if m and not R2_BINDING.search(code):
+                findings.append((i, "R2", f"wall-clock `{m.group(1)}()` in a "
+                                 "deterministic layer — thread a modelled "
+                                 "time or a start-instant binding instead"))
+
+        m = R3_MAP_DECL.search(code)
+        if m:
+            map_vars.add(m.group(1) or m.group(2))
+        for var in map_vars:
+            if re.search(rf"\b{re.escape(var)}\s*\.\s*(values|iter|keys)\s*\(", code):
+                if R3_FLOAT_FOLD.search(code) and not R3_SORTED.search(code):
+                    findings.append((i, "R3", f"HashMap `{var}` iterated into a "
+                                     "float fold — order is per-process random; "
+                                     "sort first or use a BTreeMap"))
+    return findings
+
+
+def lint_tree():
+    findings = []
+    for dirpath, _dirnames, filenames in os.walk(SRC):
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, ROOT)
+            with open(path, encoding="utf-8") as fh:
+                lines = fh.read().splitlines()
+            for line_no, rule, msg in lint_lines(rel, lines):
+                findings.append(f"{rel}:{line_no}: {rule} {msg}")
+    return findings
+
+
+# --- self-test -------------------------------------------------------------
+
+BAD_SNIPPETS = [
+    # (fake path, source, expected rule)
+    ("rust/src/eval/bad.rs", "let mut rng = rand::thread_rng();", "R1"),
+    ("rust/src/util/bad.rs", "let h = RandomState::new();", "R1"),
+    ("rust/src/sched/bad.rs", "if Instant::now() > deadline { park(); }", "R2"),
+    ("rust/src/exec/bad.rs", "stats.push(SystemTime::now());", "R2"),
+    ("rust/src/memory/bad.rs",
+     "let m = HashMap::new();\nlet total: f64 = m.values().sum::<f64>();", "R3"),
+    ("rust/src/place/bad.rs",
+     "let mut m: HashMap<u32, f64> = Default::default();\n"
+     "for v in m.values() { acc += v; }", "R3"),
+]
+
+OK_SNIPPETS = [
+    # Patterns the lint must NOT flag.
+    ("rust/src/exec/ok.rs", "let start = Instant::now();"),          # harness idiom
+    ("rust/src/eval/ok.rs", "let t = Instant::now();"),              # non-clock-free dir
+    ("rust/src/memory/ok.rs",
+     "let m = HashMap::new();\n"
+     "let mut v: Vec<f64> = m.values().copied().collect(); v.sort_by(f64::total_cmp);"),
+    ("rust/src/sched/ok.rs",
+     "let x = thread_rng(); // det-ok: quoted in a doc example, never run"),
+]
+
+
+def self_test():
+    failures = []
+    for path, src, rule in BAD_SNIPPETS:
+        got = lint_lines(path, src.splitlines())
+        if not any(r == rule for _, r, _ in got):
+            failures.append(f"self-test: expected {rule} in {path!r}, got {got}")
+    for path, src in OK_SNIPPETS:
+        got = lint_lines(path, src.splitlines())
+        if got:
+            failures.append(f"self-test: expected clean for {path!r}, got {got}")
+    if failures:
+        print("\n".join(failures))
+        return 1
+    print(f"self-test ok: {len(BAD_SNIPPETS)} bad snippets flagged, "
+          f"{len(OK_SNIPPETS)} good snippets clean")
+    return 0
+
+
+def main():
+    if "--self-test" in sys.argv[1:]:
+        return self_test()
+    findings = lint_tree()
+    if findings:
+        print("\n".join(findings))
+        print(f"\n{len(findings)} determinism finding(s)")
+        return 1
+    print("determinism lint clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,11 @@ Verifies, over the whole repo:
   6. every `ExecStats::<field>` mention in EXPERIMENTS.md names a real
      public field of `exec::ExecStats` (rust/src/exec/mod.rs) — the
      §Energy table documents the per-run ledger by field name, so a
-     rename there must not silently orphan the docs.
+     rename there must not silently orphan the docs;
+  7. every analyzer pass named in ARCHITECTURE.md's static-analysis
+     pass table exists in the tree — `rust/src/analysis/<pass>.rs` for
+     the in-process passes, `tools/check_determinism.py` for the
+     source-level determinism lint.
 
 Exit code 0 = clean; 1 = dangling references (each printed).
 Run from the repo root: `python3 tools/check_docs.py`.
@@ -164,6 +168,52 @@ def check_module_map(problems):
             )
 
 
+def analysis_pass_rows(arch_text):
+    """Backticked pass names from the first column of ARCHITECTURE.md's
+    static-analysis pass table."""
+    passes = []
+    in_table = False
+    for line in arch_text.splitlines():
+        if line.startswith("##"):
+            in_table = "static analysis" in line.lower()
+            continue
+        if not in_table or not line.startswith("|"):
+            continue
+        cells = [c.strip() for c in line.split("|")]
+        if len(cells) >= 3 and cells[1].startswith("`") and cells[1].endswith("`"):
+            passes.append(cells[1].strip("`"))
+    return passes
+
+
+def check_analysis_passes(problems):
+    arch = os.path.join(ROOT, "ARCHITECTURE.md")
+    if not os.path.exists(arch):
+        return
+    passes = analysis_pass_rows(open(arch, encoding="utf-8").read())
+    if not passes:
+        problems.append(
+            "ARCHITECTURE.md: static-analysis pass table has no parseable "
+            "rows (expected a '## Static analysis' table with backticked "
+            "pass names in column 1)"
+        )
+        return
+    for name in passes:
+        if name == "determinism":
+            # Source-level lint lives in tools/, not in the analyzer crate.
+            if not os.path.exists(os.path.join(ROOT, "tools", "check_determinism.py")):
+                problems.append(
+                    "ARCHITECTURE.md: pass `determinism` listed but "
+                    "tools/check_determinism.py does not exist"
+                )
+            continue
+        path = os.path.join(ROOT, "rust", "src", "analysis", name + ".rs")
+        if not os.path.exists(path):
+            problems.append(
+                f"ARCHITECTURE.md: pass `{name}` listed but "
+                f"rust/src/analysis/{name}.rs does not exist"
+            )
+
+
 def repo_files(exts):
     for dirpath, dirnames, filenames in os.walk(ROOT):
         dirnames[:] = [
@@ -260,6 +310,9 @@ def main():
 
     # 6. EXPERIMENTS.md ExecStats field mentions must exist in the struct
     check_exec_stats_refs(problems)
+
+    # 7. ARCHITECTURE.md static-analysis passes must exist in the tree
+    check_analysis_passes(problems)
 
     if problems:
         print("docs-integrity check FAILED:")
